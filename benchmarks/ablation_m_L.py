@@ -1,0 +1,53 @@
+"""Ablation (beyond-paper §VIII extension): index hyper-parameters m
+(projections per HI structure) and L (scales) vs query time and ProMiSH-A
+quality. The paper fixes m=2, L=5; this sweep shows the trade-off surface
+that motivates those defaults:
+
+  * larger m -> tighter buckets (fewer false candidates, Pr(A|r)^m decays)
+    but 2^m signatures per point in ProMiSH-E (index size + dup churn);
+  * larger L -> finer initial scale (earlier termination for tight results)
+    vs more structures to probe.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_queries
+from repro.core import brute_force, promish_a, promish_e
+from repro.core.index import build_index
+from repro.data.flickr_like import flickr_like_dataset
+from repro.data.synthetic import random_queries
+
+
+def main(fast: bool = False):
+    n = 1_500 if fast else 6_000
+    ds = flickr_like_dataset(n=n, d=16, u=100, t=3, n_clusters=16, seed=5)
+    queries = random_queries(ds, 3, 3 if fast else 6, seed=11)
+    truths = {tuple(q): brute_force.search(ds, q, k=1).items[0].diameter
+              for q in queries}
+
+    for m in ((2,) if fast else (1, 2, 3, 4)):
+        idx_e = build_index(ds, m=m, n_scales=5, exact=True, seed=0)
+        idx_a = build_index(ds, m=m, n_scales=5, exact=False, seed=0)
+        t_e = time_queries(lambda q: promish_e.search(ds, idx_e, q, k=1), queries)
+        t_a = time_queries(lambda q: promish_a.search(ds, idx_a, q, k=1), queries)
+        ratios = []
+        for q in queries:
+            got = promish_a.search(ds, idx_a, q, k=1).items[0].diameter
+            tr = truths[tuple(q)]
+            if tr > 1e-9:
+                ratios.append(got / tr)
+        emit(f"ablation.m{m}.promish_e", t_e * 1e6,
+             f"idx_MB={idx_e.nbytes() / 1e6:.1f}")
+        emit(f"ablation.m{m}.promish_a", t_a * 1e6,
+             f"AAR={np.mean(ratios):.3f}")
+
+    for levels in ((5,) if fast else (3, 5, 7)):
+        idx_e = build_index(ds, m=2, n_scales=levels, exact=True, seed=0)
+        t_e = time_queries(lambda q: promish_e.search(ds, idx_e, q, k=1), queries)
+        emit(f"ablation.L{levels}.promish_e", t_e * 1e6,
+             f"idx_MB={idx_e.nbytes() / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (one per paper
+figure/table point). The reference machine is this container's single CPU
+core — absolute times differ from the paper's 2010s Xeon, but the *shapes*
+(linearity in N, d, q, k; orders-of-magnitude gap to the tree baseline) are
+the reproduction targets.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import brute_force, promish_a, promish_e
+from repro.core.baseline_tree import VirtualBRTree
+from repro.core.index import build_index
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+HEADER = "name,us_per_call,derived"
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def time_queries(fn, queries, repeats: int = 1) -> float:
+    """Mean seconds per query."""
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for q in queries:
+            fn(q)
+    return (time.perf_counter() - t0) / (repeats * len(queries))
+
+
+def promish_suite(ds, queries, k: int = 1, *, seed: int = 0,
+                  tree_budget: int = 200_000, run_tree: bool = True,
+                  n_scales: int = 5):
+    """Returns dict of mean query seconds for E / A (/ tree) on a dataset."""
+    idx_e = build_index(ds, m=2, n_scales=n_scales, exact=True, seed=seed)
+    idx_a = build_index(ds, m=2, n_scales=n_scales, exact=False, seed=seed)
+    out = {
+        "promish_e": time_queries(
+            lambda q: promish_e.search(ds, idx_e, q, k=k), queries),
+        "promish_a": time_queries(
+            lambda q: promish_a.search(ds, idx_a, q, k=k), queries),
+    }
+    out["index_bytes_e"] = idx_e.nbytes()
+    out["index_bytes_a"] = idx_a.nbytes()
+    if run_tree:
+        tree = VirtualBRTree(ds, leaf_size=min(1000, max(32, ds.n // 50)),
+                             fanout=100)
+        timeouts = 0
+
+        def tree_q(q):
+            nonlocal timeouts
+            _, to, _ = tree.search(q, k=k, budget=tree_budget)
+            timeouts += int(to)
+
+        out["tree"] = time_queries(tree_q, queries)
+        out["tree_timeouts"] = timeouts
+        out["tree_bytes"] = tree.nbytes()
+    return out

@@ -1,0 +1,27 @@
+"""Fig. 10 / Fig. 11 — query time vs query size q (and the large-q scaling
+regime of fig. 11). ProMiSH linear in q."""
+from __future__ import annotations
+
+from benchmarks.common import emit, promish_suite
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+QSIZES = (2, 3, 5, 7, 9)
+
+
+def main(fast: bool = False):
+    qsizes = QSIZES[:3] if fast else QSIZES
+    n = 5_000 if fast else 50_000
+    ds = synthetic_dataset(n=n, d=10, u=200, t=1, seed=0)
+    for q in qsizes:
+        queries = random_queries(ds, q, 3 if fast else 5, seed=q)
+        res = promish_suite(ds, queries, k=1, run_tree=(q <= 3 and not fast),
+                            tree_budget=100_000)
+        emit(f"fig10.promish_e.q{q}", res["promish_e"] * 1e6, f"N={n} d=10")
+        emit(f"fig10.promish_a.q{q}", res["promish_a"] * 1e6, f"N={n} d=10")
+        if "tree" in res:
+            emit(f"fig10.vbrtree.q{q}", res["tree"] * 1e6,
+                 f"timeouts={res['tree_timeouts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Figs. 13/18 — query time vs result size k. ProMiSH linear in k."""
+from __future__ import annotations
+
+from benchmarks.common import emit, promish_suite
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+KS = (1, 5, 10, 20)
+
+
+def main(fast: bool = False):
+    ks = KS[:2] if fast else KS
+    n = 5_000 if fast else 50_000
+    ds = synthetic_dataset(n=n, d=50, u=200, t=1, seed=0)
+    queries = random_queries(ds, 3, 3 if fast else 5, seed=1)
+    for k in ks:
+        res = promish_suite(ds, queries, k=k, run_tree=False)
+        emit(f"fig13.promish_e.k{k}", res["promish_e"] * 1e6, f"N={n} d=50")
+        emit(f"fig13.promish_a.k{k}", res["promish_a"] * 1e6, f"N={n} d=50")
+
+
+if __name__ == "__main__":
+    main()

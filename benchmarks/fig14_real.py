@@ -1,0 +1,33 @@
+"""Figs. 14-18 — real-dataset experiments, using the Flickr-like generator
+(same statistics as the paper's Table III datasets: clustered histogram
+features, Zipf keyword tags, t~11). Query time vs d and q; E vs A gap."""
+from __future__ import annotations
+
+from benchmarks.common import emit, promish_suite
+from repro.data.flickr_like import flickr_like_dataset
+from repro.data.synthetic import random_queries
+
+
+def main(fast: bool = False):
+    n = 2_000 if fast else 20_000
+    dims = (16,) if fast else (8, 16, 32, 64)
+    for d in dims:                                     # fig 14/17 axis
+        ds = flickr_like_dataset(n=n, d=d, u=600, t=6, n_clusters=32, seed=d)
+        queries = random_queries(ds, 4, 3 if fast else 5, seed=d)
+        res = promish_suite(ds, queries, k=1, run_tree=(d <= 16 and not fast),
+                            tree_budget=50_000)
+        emit(f"fig14.promish_e.d{d}", res["promish_e"] * 1e6, f"real-like N={n}")
+        emit(f"fig14.promish_a.d{d}", res["promish_a"] * 1e6, f"real-like N={n}")
+        if "tree" in res:
+            emit(f"fig14.vbrtree.d{d}", res["tree"] * 1e6,
+                 f"timeouts={res['tree_timeouts']}")
+    ds = flickr_like_dataset(n=n, d=16, u=600, t=6, n_clusters=32, seed=99)
+    for q in ((3,) if fast else (2, 3, 4, 5)):         # fig 15 axis
+        queries = random_queries(ds, q, 3 if fast else 5, seed=q)
+        res = promish_suite(ds, queries, k=1, run_tree=False)
+        emit(f"fig15.promish_e.q{q}", res["promish_e"] * 1e6, f"real-like N={n}")
+        emit(f"fig15.promish_a.q{q}", res["promish_a"] * 1e6, f"real-like N={n}")
+
+
+if __name__ == "__main__":
+    main()

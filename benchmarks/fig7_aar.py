@@ -1,0 +1,62 @@
+"""Fig. 7 — average approximation ratio (AAR) of ProMiSH-A over top-5 results
+for varying query sizes on real-like (clustered, Zipf-tagged) datasets.
+Paper: AAR < 1.5 on 32-d Flickr datasets. Also reports the device-tier
+anchor-star kernel's AAR (beyond-paper serving path, 2-approx guarantee)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import brute_force, promish_a
+from repro.core.index import build_index
+from repro.data.flickr_like import flickr_like_dataset
+from repro.data.synthetic import random_queries
+
+
+def main(fast: bool = False):
+    n = 1_000 if fast else 4_000
+    qsizes = (3,) if fast else (2, 3, 4, 5)
+    k = 2 if fast else 5
+    ds = flickr_like_dataset(n=n, d=32, u=40, t=4, n_clusters=16, seed=7)
+    idx_a = build_index(ds, m=2, n_scales=5, exact=False, seed=0)
+
+    from repro.serve.engine import NKSEngine
+    eng = NKSEngine(ds, build_exact=False, build_approx=False)
+    eng.index_a = idx_a
+
+    # Ground truth: brute force where feasible, else ProMiSH-E (exact; this
+    # is the paper's own protocol — §VIII-A uses the exact methods as truth).
+    from repro.core import promish_e
+    idx_e = None
+
+    def truth_of(query, k):
+        nonlocal idx_e
+        try:
+            return brute_force.search(ds, query, k=k)
+        except ValueError:
+            if idx_e is None:
+                idx_e = build_index(ds, m=2, n_scales=5, exact=True, seed=0)
+            return promish_e.search(ds, idx_e, query, k=k)
+
+    for q in qsizes:
+        ratios_a, ratios_dev = [], []
+        for query in random_queries(ds, q, 4 if fast else 8, seed=q):
+            truth = truth_of(query, k)
+            got = promish_a.search(ds, idx_a, query, k=k)
+            dev = eng.query(query, k=k, tier="device")
+            for i in range(min(len(truth.items), len(got.items))):
+                tr = truth.items[i].diameter
+                if tr > 1e-9:
+                    ratios_a.append(got.items[i].diameter / tr)
+            if truth.items and dev.candidates and truth.items[0].diameter > 1e-9:
+                ratios_dev.append(dev.candidates[0].diameter
+                                  / truth.items[0].diameter)
+        emit(f"fig7.aar_promish_a.q{q}", float(np.mean(ratios_a)) * 1e6,
+             f"AAR={np.mean(ratios_a):.3f}")
+        if ratios_dev:
+            emit(f"fig7.aar_device_tier.q{q}", float(np.mean(ratios_dev)) * 1e6,
+                 f"AAR={np.mean(ratios_dev):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 8 — query time vs dataset dimension d (E / A / Virtual bR*-Tree).
+
+Paper: synthetic, N=100k, t=1, U=1000, q=5, top-1. ProMiSH flat-to-linear in
+d; the tree collapses (hours) beyond d~10. We run a scaled N (CPU container)
+with the same densities.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, promish_suite
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+N = 20_000
+U = 1_000
+Q = 5
+DIMS = (2, 5, 10, 25, 50)
+
+
+def main(fast: bool = False):
+    dims = DIMS[:3] if fast else DIMS
+    n = 5_000 if fast else N
+    for d in dims:
+        ds = synthetic_dataset(n=n, d=d, u=U, t=1, seed=d)
+        queries = random_queries(ds, Q, 3 if fast else 5, seed=d)
+        res = promish_suite(ds, queries, k=1, run_tree=(d <= 25),
+                            tree_budget=100_000)
+        emit(f"fig8.promish_e.d{d}", res["promish_e"] * 1e6, f"N={n}")
+        emit(f"fig8.promish_a.d{d}", res["promish_a"] * 1e6, f"N={n}")
+        if "tree" in res:
+            emit(f"fig8.vbrtree.d{d}", res["tree"] * 1e6,
+                 f"timeouts={res['tree_timeouts']}")
+
+
+if __name__ == "__main__":
+    main()

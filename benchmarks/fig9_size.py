@@ -1,0 +1,26 @@
+"""Fig. 9 — query time vs dataset size N (25-d synthetic, q=5, top-1).
+ProMiSH linear in N; tree times out beyond small N."""
+from __future__ import annotations
+
+from benchmarks.common import emit, promish_suite
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+SIZES = (2_000, 10_000, 30_000, 100_000)
+
+
+def main(fast: bool = False):
+    sizes = SIZES[:2] if fast else SIZES
+    for n in sizes:
+        ds = synthetic_dataset(n=n, d=25, u=1_000, t=1, seed=n)
+        queries = random_queries(ds, 5, 3 if fast else 5, seed=n)
+        res = promish_suite(ds, queries, k=1, run_tree=(n <= 10_000),
+                            tree_budget=100_000)
+        emit(f"fig9.promish_e.n{n}", res["promish_e"] * 1e6, "d=25")
+        emit(f"fig9.promish_a.n{n}", res["promish_a"] * 1e6, "d=25")
+        if "tree" in res:
+            emit(f"fig9.vbrtree.n{n}", res["tree"] * 1e6,
+                 f"timeouts={res['tree_timeouts']}")
+
+
+if __name__ == "__main__":
+    main()

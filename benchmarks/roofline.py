@@ -1,0 +1,98 @@
+"""§Roofline — derive the three roofline terms per (arch x cell x mesh) from
+the dry-run artifacts (deliverable g).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per chip — the
+    memory term     = HLO_bytes / HBM_bw                  compiled module is
+    collective term = collective_bytes / link_bw          already per-device)
+
+Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Also reports MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per device and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy
+waste; >1 means HLO under-counts, <1 means recompute/overhead).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+CELL_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+               "decode_32k": 128, "long_500k": 1}
+TRAIN_MULT = {"train_4k": 3, "prefill_32k": 1, "decode_32k": 1, "long_500k": 1}
+
+
+def model_flops_global(arch: str, cell: str) -> float:
+    from repro.configs import get_config
+    from repro.models.api import active_params
+    cfg = get_config(arch)
+    n_active = active_params(cfg)
+    tokens = CELL_TOKENS[cell]
+    # 6ND fwd+bwd for train; 2ND forward-only for serving cells
+    mult = 6 if cell == "train_4k" else 2
+    return mult * n_active * tokens
+
+
+def load_records(art_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return {"arch": rec["arch"], "cell": rec["cell"], "mesh": rec["mesh"],
+                "error": True}
+    cost = rec.get("cost", {})
+    cc = rec.get("collectives", {})
+    # census-scaled values (trip-count-aware) preferred; raw cost_analysis
+    # numbers (which count while bodies once) kept as fallback.
+    flops = float(cc.get("dot_flops_scaled", 0.0)) or float(cost.get("flops", 0.0))
+    byts = float(cc.get("out_bytes_scaled", 0.0)) or \
+        float(cost.get("bytes accessed", 0.0))
+    coll = float(cc.get("total_scaled", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    devices = rec.get("devices", 512 if rec["mesh"] == "pod2" else 256)
+    mf = model_flops_global(rec["arch"], rec["cell"]) / devices
+    useful = mf / flops if flops else 0.0
+    bound = max(terms.values())
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {"arch": rec["arch"], "cell": rec["cell"], "mesh": rec["mesh"],
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops_per_dev": mf, "hlo_flops_per_dev": flops,
+            "useful_ratio": useful, "roofline_fraction": frac}
+
+
+def main(art_dir: str = "artifacts/dryrun", fast: bool = False):
+    recs = load_records(art_dir)
+    if not recs:
+        print("roofline.no_artifacts,0.0,run repro.launch.dryrun first")
+        return
+    print("arch,cell,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "useful_ratio,roofline_fraction")
+    for rec in recs:
+        row = roofline_row(rec)
+        if row is None or row.get("error"):
+            print(f"{rec['arch']},{rec['cell']},{rec['mesh']},ERROR,,,,,")
+            continue
+        print(f"{row['arch']},{row['cell']},{row['mesh']},"
+              f"{row['t_compute_s']:.4e},{row['t_memory_s']:.4e},"
+              f"{row['t_collective_s']:.4e},{row['dominant']},"
+              f"{row['useful_ratio']:.3f},{row['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")

@@ -1,0 +1,66 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig8,...]
+
+Prints ``name,us_per_call,derived`` CSV (HEADER first). ``--fast`` shrinks
+datasets for CI-speed smoke runs; full runs reproduce the paper's axes.
+The roofline table (§Roofline) reads the dry-run artifacts and is included
+when they exist.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+from benchmarks.common import HEADER
+
+MODULES = [
+    ("fig7", "benchmarks.fig7_aar"),
+    ("fig8", "benchmarks.fig8_dim"),
+    ("fig9", "benchmarks.fig9_size"),
+    ("fig10", "benchmarks.fig10_qsize"),
+    ("fig13", "benchmarks.fig13_topk"),
+    ("fig14", "benchmarks.fig14_real"),
+    ("tab2", "benchmarks.tab2_pruning"),
+    ("tab4", "benchmarks.tab4_space"),
+    ("build", "benchmarks.index_build"),
+    ("ablation", "benchmarks.ablation_m_L"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("BENCH_FAST", "") == "1")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    print(HEADER)
+    failures = 0
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main(fast=args.fast)
+            print(f"# {tag} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"{tag}.ERROR,0.0,{traceback.format_exc(limit=1)!r}")
+    # roofline table (if dry-run artifacts exist)
+    art = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+    if (only is None or (only and "roofline" in only)) and os.path.isdir(art):
+        print("# --- roofline (see EXPERIMENTS.md) ---")
+        from benchmarks import roofline
+        roofline.main(art)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

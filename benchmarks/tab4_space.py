@@ -1,0 +1,48 @@
+"""Table IV — index-space / dataset-space ratios for ProMiSH-E, ProMiSH-A and
+Virtual bR*-Tree across d, N, U (analytic §VII/§VIII-D formulas + measured
+footprints of the actual structures at a reference size)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.baseline_tree import VirtualBRTree, space_cost_model
+from repro.core.index import build_index
+from repro.data.synthetic import synthetic_dataset
+
+E_BYTES = 4
+
+
+def analytic(n: int, d: int, u: int, *, m: int = 2, levels: int = 5,
+             buckets: int = 10_000, t: int = 1, q: int = 5):
+    ds_bytes = (d + t) * n * E_BYTES
+    ikp = n * E_BYTES * t
+    h_e = (2 ** m) * n * E_BYTES
+    h_a = n * E_BYTES
+    import math
+    ikhb = u * buckets * math.log2(max(buckets, 2)) / 8
+    pe = (ikp + levels * (h_e + ikhb)) / ds_bytes
+    pa = (ikp + levels * (h_a + ikhb)) / ds_bytes
+    tree = space_cost_model(n, d, u, q, t, E_BYTES) / ds_bytes
+    return pe, pa, tree
+
+
+def main(fast: bool = False):
+    for d in ((8, 32) if fast else (8, 16, 32, 64, 128)):
+        for n, u in (((10_000_000, 100),) if fast else
+                     ((10_000_000, 100), (10_000_000, 1000),
+                      (100_000_000, 100))):
+            pe, pa, tr = analytic(n, d, u)
+            emit(f"tab4.ratio.d{d}.n{n}.u{u}", 0.0,
+                 f"E={pe:.2f}|A={pa:.2f}|tree={tr:.2f}")
+    # measured footprints at a reference size (actual structures)
+    ds = synthetic_dataset(n=3_000 if fast else 20_000, d=16, u=200, t=1, seed=0)
+    idx_e = build_index(ds, m=2, n_scales=5, exact=True)
+    idx_a = build_index(ds, m=2, n_scales=5, exact=False)
+    tree = VirtualBRTree(ds, leaf_size=256, fanout=32)
+    base = ds.nbytes()
+    emit("tab4.measured.promish_e", 0.0, f"ratio={idx_e.nbytes() / base:.2f}")
+    emit("tab4.measured.promish_a", 0.0, f"ratio={idx_a.nbytes() / base:.2f}")
+    emit("tab4.measured.vbrtree", 0.0, f"ratio={tree.nbytes() / base:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: build a tagged dataset, index it, run NKS queries.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import brute_force, build_index, make_dataset, promish_a, promish_e
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+
+def main():
+    # A tagged multi-dimensional dataset (paper fig. 1 setting).
+    ds = synthetic_dataset(n=5_000, d=16, u=50, t=2, seed=0)
+    print(f"dataset: N={ds.n} d={ds.dim} U={ds.n_keywords}")
+
+    # Multi-scale hash indices (paper defaults m=2, L=5).
+    idx_e = build_index(ds, m=2, n_scales=5, exact=True, seed=0)
+    idx_a = build_index(ds, m=2, n_scales=5, exact=False, seed=0)
+    print(f"index: L={idx_e.n_scales} scales, w0={idx_e.w0:.1f}, "
+          f"E={idx_e.nbytes() / 1e6:.1f}MB A={idx_a.nbytes() / 1e6:.1f}MB")
+
+    for query in random_queries(ds, q=3, n_queries=3, seed=42):
+        exact = promish_e.search(ds, idx_e, query, k=2)
+        approx = promish_a.search(ds, idx_a, query, k=2)
+        truth = brute_force.search(ds, query, k=2)
+        print(f"\nquery {query}")
+        for name, pq in (("ProMiSH-E", exact), ("ProMiSH-A", approx),
+                         ("oracle   ", truth)):
+            top = pq.items[0]
+            print(f"  {name}: ids={top.ids} diameter={top.diameter:.2f}")
+        assert abs(exact.items[0].diameter - truth.items[0].diameter) < 1e-3
+
+
+if __name__ == "__main__":
+    main()

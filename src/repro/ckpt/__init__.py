@@ -1,0 +1,3 @@
+"""repro.ckpt — fault-tolerant checkpointing."""
+from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,  # noqa: F401
+                                   save_checkpoint)

@@ -1,0 +1,90 @@
+"""Brute-force NKS oracle — exhaustive enumeration of all minimal candidates.
+
+Ground truth for correctness tests and for the paper's quality metrics
+(AAR denominators, Table II's N_n). Exponential in q; use on small data only.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.subset_search import is_minimal_candidate, pairwise_l2_numpy
+from repro.core.types import Candidate, KeywordDataset, TopK
+
+
+def set_diameter(ids: Sequence[int], dataset: KeywordDataset) -> float:
+    ids = list(ids)
+    if len(ids) <= 1:
+        return 0.0
+    pts = dataset.points[np.asarray(ids)]
+    return float(pairwise_l2_numpy(pts, pts).max())
+
+
+def enumerate_candidates(dataset: KeywordDataset, query: Sequence[int]):
+    """Yield every distinct minimal candidate set (as a sorted id tuple)."""
+    query = sorted(set(int(v) for v in query))
+    groups = [dataset.ikp.row(v) for v in query]
+    if any(len(g) == 0 for g in groups):
+        return
+    seen: set[tuple[int, ...]] = set()
+    for combo in itertools.product(*groups):
+        ids = tuple(sorted(set(int(c) for c in combo)))
+        if ids in seen:
+            continue
+        seen.add(ids)
+        if is_minimal_candidate(ids, query, dataset):
+            yield ids
+
+
+def search(dataset: KeywordDataset, query: Sequence[int], k: int = 1,
+           chunk: int = 250_000, max_tuples: float = 5e7) -> TopK:
+    """Exact top-k by full enumeration (vectorised).
+
+    Enumerates the full cartesian product of per-keyword groups, computes all
+    tuple diameters in chunked numpy, then scans tuples in diameter order
+    applying the dedup + minimality filters until the top-k is stable. Any
+    minimal candidate arises from at least one tuple with equal diameter, so
+    the scan is exhaustive.
+
+    Refuses instances beyond ``max_tuples`` (the oracle is exponential in q
+    by design — use ProMiSH-E as ground truth at scale, as the paper does).
+    """
+    query = sorted(set(int(v) for v in query))
+    groups = [dataset.ikp.row(v) for v in query]
+    if any(len(g) == 0 for g in groups):
+        return TopK(k, init_full=True)
+    total_est = 1.0
+    for g in groups:
+        total_est *= len(g)
+    if total_est > max_tuples:
+        raise ValueError(
+            f"brute-force oracle infeasible: {total_est:.2e} tuples "
+            f"(> {max_tuples:.0e}); use promish_e as ground truth")
+    grids = np.meshgrid(*groups, indexing="ij")
+    tuples = np.stack([g.ravel() for g in grids], axis=1).astype(np.int64)  # (T, q)
+    t_total = len(tuples)
+    diams = np.empty(t_total, dtype=np.float32)
+    pts = dataset.points
+    for lo in range(0, t_total, chunk):
+        x = pts[tuples[lo:lo + chunk]].astype(np.float64)    # (C, q, d)
+        diff = x[:, :, None, :] - x[:, None, :, :]
+        sq = np.einsum("cijd,cijd->cij", diff, diff)
+        diams[lo:lo + chunk] = np.sqrt(np.maximum(sq, 0.0)).max(axis=(1, 2))
+
+    pq = TopK(k, init_full=True)
+    order = np.argsort(diams, kind="stable")
+    for idx in order:
+        d = float(diams[idx])
+        if pq.full() and d > pq.kth_diameter():
+            break
+        ids = tuple(sorted(set(int(p) for p in tuples[idx])))
+        if is_minimal_candidate(ids, query, dataset):
+            pq.offer(Candidate(ids=ids, diameter=d))
+    return pq
+
+
+def count_candidates(dataset: KeywordDataset, query: Sequence[int]) -> int:
+    """N_n of eq. 4 (measured, not modelled)."""
+    return sum(1 for _ in enumerate_candidates(dataset, query))

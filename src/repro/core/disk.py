@@ -1,0 +1,88 @@
+"""Disk extension of ProMiSH (paper §IX).
+
+The paper stores I_kp and every HI structure as a directory-file layout
+(one file per bucket, named by its key) plus a B+-Tree point store, so a
+query touches only the buckets it probes. We reproduce that layout with
+one memory-mapped file per structure + an offsets sidecar (functionally the
+paper's directory: O(1) bucket open, sequential bucket read), which maps to
+the sharded-HBM layout of the distributed engine (DESIGN.md A4):
+
+    <root>/meta.json                 dataset/index parameters + checksums
+    <root>/points.npy                (N, d) float32, mmap (the point store)
+    <root>/ikp.{offsets,values}.npy  keyword -> points CSR
+    <root>/kw.{offsets,values}.npy   point -> keywords CSR
+    <root>/scale_<s>/table.*.npy     bucket -> points CSR
+    <root>/scale_<s>/khb.*.npy       keyword -> buckets CSR
+    <root>/z.npy                     projection vectors
+
+`load_index(..., mmap=True)` keeps every array memory-mapped: queries fault
+in only the probed buckets — the paper's sequential-bucket-read behaviour.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.index import HIStructure, PromishIndex
+from repro.core.types import KeywordDataset
+from repro.utils.csr import CSR
+
+
+def _save_csr(root: str, name: str, csr: CSR):
+    np.save(os.path.join(root, f"{name}.offsets.npy"), csr.offsets)
+    np.save(os.path.join(root, f"{name}.values.npy"), csr.values)
+
+
+def _load_csr(root: str, name: str, mmap: bool) -> CSR:
+    mode = "r" if mmap else None
+    return CSR(
+        offsets=np.load(os.path.join(root, f"{name}.offsets.npy"), mmap_mode=mode),
+        values=np.load(os.path.join(root, f"{name}.values.npy"), mmap_mode=mode))
+
+
+def save_index(root: str, dataset: KeywordDataset, index: PromishIndex):
+    os.makedirs(root, exist_ok=True)
+    np.save(os.path.join(root, "points.npy"), dataset.points)
+    np.save(os.path.join(root, "z.npy"), index.z)
+    _save_csr(root, "ikp", dataset.ikp)
+    _save_csr(root, "kw", dataset.kw)
+    for hi in index.structures:
+        sdir = os.path.join(root, f"scale_{hi.scale}")
+        os.makedirs(sdir, exist_ok=True)
+        _save_csr(sdir, "table", hi.table)
+        _save_csr(sdir, "khb", hi.khb)
+    meta = {
+        "n": dataset.n, "dim": dataset.dim, "n_keywords": dataset.n_keywords,
+        "w0": index.w0, "n_scales": index.n_scales, "exact": index.exact,
+        "p_max": index.p_max,
+        "scales": [{"scale": h.scale, "width": h.width,
+                    "n_buckets": h.n_buckets} for h in index.structures],
+    }
+    with open(os.path.join(root, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_index(root: str, *, mmap: bool = True
+               ) -> tuple[KeywordDataset, PromishIndex]:
+    with open(os.path.join(root, "meta.json")) as f:
+        meta = json.load(f)
+    mode = "r" if mmap else None
+    points = np.load(os.path.join(root, "points.npy"), mmap_mode=mode)
+    dataset = KeywordDataset(points=points,
+                             kw=_load_csr(root, "kw", mmap),
+                             ikp=_load_csr(root, "ikp", mmap),
+                             n_keywords=meta["n_keywords"])
+    structures = []
+    for sc in meta["scales"]:
+        sdir = os.path.join(root, f"scale_{sc['scale']}")
+        structures.append(HIStructure(
+            scale=sc["scale"], width=sc["width"], n_buckets=sc["n_buckets"],
+            table=_load_csr(sdir, "table", mmap),
+            khb=_load_csr(sdir, "khb", mmap)))
+    index = PromishIndex(z=np.load(os.path.join(root, "z.npy"), mmap_mode=mode),
+                         w0=meta["w0"], n_scales=meta["n_scales"],
+                         exact=meta["exact"], structures=tuple(structures),
+                         p_max=meta["p_max"])
+    return dataset, index

@@ -1,0 +1,142 @@
+"""ProMiSH index build (paper §III): multi-scale HI structures.
+
+Each HI structure at scale ``s`` is:
+  * a hashtable  H  : bucket id -> point ids     (CSR ``table``)
+  * an inverted  I_khb: keyword -> bucket ids    (CSR ``khb``)
+built from bin width ``w = w0 * 2^s``.
+
+The keyword->point inverted index I_kp lives on the dataset itself
+(:class:`repro.core.types.KeywordDataset`).
+
+Build cost is one matmul (projections — the Pallas-accelerated hot spot), one
+floor per bin plane, and two sorts per scale; everything is flat-array math so
+the same code path drives both the host build and the sharded device build.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import projection as proj
+from repro.core import signatures as sig
+from repro.core.types import KeywordDataset
+from repro.utils.csr import CSR, csr_from_pairs
+
+
+@dataclasses.dataclass(frozen=True)
+class HIStructure:
+    """Hashtable + keyword->bucket inverted index at one scale."""
+
+    scale: int
+    width: float
+    n_buckets: int
+    table: CSR      # bucket -> point ids (a point appears once per distinct bucket)
+    khb: CSR        # keyword -> bucket ids containing >=1 point with that keyword
+
+    def nbytes(self) -> int:
+        return self.table.nbytes() + self.khb.nbytes()
+
+
+@dataclasses.dataclass(frozen=True)
+class PromishIndex:
+    """The full multi-scale index (either flavour).
+
+    exact=True  -> ProMiSH-E (overlapping bins, 2^m signatures/point)
+    exact=False -> ProMiSH-A (disjoint bins, 1 signature/point)
+    """
+
+    z: np.ndarray                  # (m, d) unit random vectors
+    w0: float
+    n_scales: int
+    exact: bool
+    structures: tuple[HIStructure, ...]
+    p_max: float
+
+    @property
+    def m(self) -> int:
+        return int(self.z.shape[0])
+
+    def width_at(self, s: int) -> float:
+        return self.w0 * (2.0 ** s)
+
+    def nbytes(self) -> int:
+        return self.z.nbytes + sum(h.nbytes() for h in self.structures)
+
+
+def _build_scale(dataset: KeywordDataset, projected: np.ndarray, scale: int,
+                 width: float, n_buckets: int, exact: bool) -> HIStructure:
+    n = dataset.n
+    if exact:
+        keys2 = proj.bin_keys_overlapping(projected, width)
+        buckets = sig.bucket_ids_overlapping(keys2, n_buckets)       # (N, 2^m)
+        point_ids = np.repeat(np.arange(n, dtype=np.int32), buckets.shape[1])
+        flat_buckets = buckets.reshape(-1)
+    else:
+        keys = proj.bin_keys_disjoint(projected, width)
+        flat_buckets = sig.bucket_ids_disjoint(keys, n_buckets)       # (N,)
+        point_ids = np.arange(n, dtype=np.int32)
+
+    # A point may receive duplicate bucket ids from distinct signatures
+    # (overlap or hash collision) — dedup so each bucket lists a point once.
+    table = csr_from_pairs(flat_buckets, point_ids, n_buckets, dedup=True)
+
+    # I_khb: for every (bucket, point) entry expand the point's keywords and
+    # dedup (keyword, bucket) pairs.
+    reps = np.diff(dataset.kw.offsets)                                # kw count per point
+    pts = table.values                                                # points in bucket order
+    bkt_of_entry = np.repeat(np.arange(n_buckets, dtype=np.int64), np.diff(table.offsets))
+    kw_rows = []
+    bk_rows = []
+    # expand keywords per entry (vectorised: gather each point's kw slice)
+    kw_counts = reps[pts]
+    bk_rep = np.repeat(bkt_of_entry, kw_counts)
+    starts = dataset.kw.offsets[pts]
+    # ragged gather of keyword slices
+    total = int(kw_counts.sum())
+    idx = np.repeat(starts, kw_counts) + _ragged_arange(kw_counts, total)
+    kws = dataset.kw.values[idx].astype(np.int64)
+    kw_rows.append(kws)
+    bk_rows.append(bk_rep)
+    khb = csr_from_pairs(np.concatenate(kw_rows), np.concatenate(bk_rows).astype(np.int32),
+                         dataset.n_keywords, dedup=True)
+    return HIStructure(scale=scale, width=width, n_buckets=n_buckets, table=table, khb=khb)
+
+
+def _ragged_arange(counts: np.ndarray, total: int | None = None) -> np.ndarray:
+    """[0..c0), [0..c1), ... concatenated."""
+    if total is None:
+        total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    ends = np.cumsum(counts)
+    starts = ends - counts
+    out = np.arange(total, dtype=np.int64)
+    out -= np.repeat(starts, counts)
+    return out
+
+
+def build_index(dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
+                w0: float | None = None, exact: bool = True,
+                buckets_per_point: float = 1.0,
+                seed: int = 0) -> PromishIndex:
+    """Build a ProMiSH index (paper defaults: m=2, L=5, w0=pMax/2^L).
+
+    ``buckets_per_point`` sizes the hashtable: n_buckets ~= N * factor
+    (the paper uses a fixed table size; we scale with N, power-of-two).
+    """
+    rng = np.random.default_rng(seed)
+    z = proj.sample_unit_vectors(rng, m, dataset.dim)
+    projected = proj.project(dataset.points, z)
+    p_max = proj.projection_span(projected)
+    if w0 is None:
+        w0 = p_max / (2.0 ** n_scales)
+    n_buckets = max(64, 1 << int(np.ceil(np.log2(max(dataset.n * buckets_per_point, 1)))))
+    structures = []
+    for s in range(n_scales):
+        width = w0 * (2.0 ** s)
+        # Fewer, larger buckets are expected at coarse scales; halve the table.
+        nb = max(64, n_buckets >> s) if not exact else n_buckets
+        structures.append(_build_scale(dataset, projected, s, width, nb, exact))
+    return PromishIndex(z=z, w0=float(w0), n_scales=n_scales, exact=exact,
+                        structures=tuple(structures), p_max=p_max)

@@ -1,0 +1,60 @@
+"""ProMiSH-A: approximate NKS search (paper §VI).
+
+Differences from ProMiSH-E (kept faithful):
+  * index uses non-overlapping bins -> one signature per point,
+    so hashtables are 2^m-times smaller;
+  * PQ starts empty (no +inf sentinels), so the first explored buckets set
+    r_k and prune aggressively;
+  * terminates after the first scale at which PQ holds k results;
+  * no subset-duplicate check is needed (a point lives in exactly one bucket
+    per scale, so bucket subsets within a scale are disjoint).
+
+§VI's statistical model bounding the approximation ratio is implemented in
+``repro.core.theory``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.index import PromishIndex
+from repro.core.promish_e import SearchStats, _covering_buckets, query_bitset
+from repro.core.subset_search import DistanceFn, pairwise_l2_numpy, search_in_subset
+from repro.core.types import KeywordDataset, TopK
+
+
+def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
+           k: int = 1, distance_fn: DistanceFn = pairwise_l2_numpy,
+           stats: SearchStats | None = None) -> TopK:
+    """Approximate top-k NKS search."""
+    if index.exact:
+        raise ValueError("ProMiSH-A requires an approximate (disjoint-bin) index")
+    query = sorted(set(int(v) for v in query))
+    stats = stats if stats is not None else SearchStats()
+
+    pq = TopK(k, init_full=False)
+    bs = query_bitset(dataset, query)
+
+    for s in range(index.n_scales):
+        stats.scales_visited += 1
+        hi = index.structures[s]
+        for b in _covering_buckets(hi, query):
+            stats.buckets_selected += 1
+            pts = hi.table.row(int(b))
+            f = pts[bs[pts]]
+            if len(f) == 0:
+                continue
+            stats.subsets_searched += 1
+            stats.candidates_explored += search_in_subset(
+                f, query, dataset, pq, distance_fn=distance_fn)
+        if pq.full():
+            return pq
+
+    # Fallback mirrors ProMiSH-E: guarantees an answer when the hash never
+    # co-locates all keywords (rare; more likely for very selective queries).
+    stats.fallback = True
+    f = np.flatnonzero(bs)
+    stats.candidates_explored += search_in_subset(f, query, dataset, pq,
+                                                  distance_fn=distance_fn)
+    return pq

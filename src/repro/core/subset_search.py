@@ -1,0 +1,161 @@
+"""Search within a subset of points (paper §V, Algorithms 3-4).
+
+Given a subset F' (points from one hash bucket filtered by the query bitset),
+find all candidates tighter than the current k-th diameter:
+
+  1. group F' by query keyword                      (step 2-5 of Alg. 3)
+  2. pairwise inner joins at threshold r_k          (steps 6-18) — this is the
+     dense hot spot; the distance matrix comes from `repro.kernels` on TPU and
+     numpy here on the control plane,
+  3. greedy least-edge group ordering               (steps 19-30; optimal is NP-hard),
+  4. pruned nested-loop multi-way join              (Alg. 4), updating the
+     top-k queue as tighter candidates appear.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.types import Candidate, KeywordDataset, TopK
+
+# distance backend: (A:(n,d), B:(m,d)) -> (n,m) float32 L2 distances
+DistanceFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
+
+
+def pairwise_l2_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Reference pairwise Euclidean distance (control-plane backend).
+
+    float64 throughout: the ||a||^2+||b||^2-2ab identity cancels
+    catastrophically in float32 for coordinates ~1e4 (diagonal errors up to
+    ~sqrt(40)); the fp32 Pallas kernel is therefore used only as a *pruning*
+    filter, with candidate diameters re-scored through this exact path.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    sq = (a * a).sum(1)[:, None] + (b * b).sum(1)[None, :] - 2.0 * (a @ b.T)
+    np.maximum(sq, 0.0, out=sq)
+    return np.sqrt(sq, out=sq)
+
+
+def group_by_keyword(f_ids: np.ndarray, query: Sequence[int],
+                     dataset: KeywordDataset) -> list[np.ndarray]:
+    """SL: one id-array per query keyword (a point may appear in several)."""
+    groups = []
+    for v in query:
+        tagged = dataset.ikp.row(v)
+        groups.append(f_ids[np.isin(f_ids, tagged, assume_unique=False)])
+    return groups
+
+
+def greedy_group_order(m_counts: np.ndarray) -> list[int]:
+    """Greedy least-weight-edge ordering (Alg. 3 steps 19-30).
+
+    ``m_counts[i, j]`` = number of point pairs surviving the inner join of
+    groups i and j. Repeatedly take the globally smallest remaining edge and
+    append its unvisited endpoints.
+    """
+    q = m_counts.shape[0]
+    if q == 1:
+        return [0]
+    order: list[int] = []
+    edges = [(int(m_counts[i, j]), i, j) for i in range(q) for j in range(i + 1, q)]
+    edges.sort()
+    for _, i, j in edges:
+        if i not in order:
+            order.append(i)
+        if j not in order:
+            order.append(j)
+        if len(order) == q:
+            break
+    for i in range(q):          # isolated groups (no surviving pairs)
+        if i not in order:
+            order.append(i)
+    return order
+
+
+def is_minimal_candidate(ids: Sequence[int], query: Sequence[int],
+                         dataset: KeywordDataset) -> bool:
+    """Paper's candidate definition: covers Q and no proper subset does.
+    Equivalent test: every point contributes >=1 query keyword that no other
+    point in the set contributes."""
+    kws = [set(int(x) for x in dataset.kw.row(p)) & set(query) for p in ids]
+    for i in range(len(ids)):
+        others = set().union(*(kws[j] for j in range(len(ids)) if j != i)) if len(ids) > 1 else set()
+        if not (kws[i] - others):
+            return False
+    return True
+
+
+def search_in_subset(f_ids: np.ndarray, query: Sequence[int],
+                     dataset: KeywordDataset, pq: TopK,
+                     distance_fn: DistanceFn = pairwise_l2_numpy) -> int:
+    """Algorithms 3+4. Mutates ``pq``; returns the number of candidate tuples
+    fully materialised (the N_p statistic of §VII)."""
+    q = len(query)
+    f_ids = np.unique(np.asarray(f_ids, dtype=np.int64))
+    if len(f_ids) == 0:
+        return 0
+    groups = group_by_keyword(f_ids, query, dataset)
+    if any(len(g) == 0 for g in groups):
+        return 0
+
+    r_k = pq.kth_diameter()
+
+    # --- pairwise inner joins: one dense distance matrix over F' ------------
+    pts = dataset.points[f_ids]
+    dist = distance_fn(pts, pts)                      # (|F'|, |F'|)
+    local = {int(p): i for i, p in enumerate(f_ids)}  # point id -> row in dist
+    gl = [np.array([local[int(p)] for p in g], dtype=np.int64) for g in groups]
+
+    m_counts = np.zeros((q, q), dtype=np.int64)
+    for i in range(q):
+        for j in range(i + 1, q):
+            sub = dist[np.ix_(gl[i], gl[j])]
+            m_counts[i, j] = m_counts[j, i] = int((sub <= r_k).sum()) if np.isfinite(r_k) \
+                else sub.size
+
+    # --- greedy ordering -----------------------------------------------------
+    order = greedy_group_order(m_counts)
+    ordered_groups = [gl[i] for i in order]
+
+    # --- nested loops with pruning (Alg. 4) ----------------------------------
+    explored = 0
+
+    def recurse(idx: int, cur: list[int], cur_r: float, r_k: float) -> float:
+        nonlocal explored
+        if idx == q:
+            explored += 1
+            ids = tuple(sorted(set(int(f_ids[c]) for c in cur)))
+            if cur_r < r_k and is_minimal_candidate(ids, query, dataset):
+                if pq.offer(Candidate(ids=ids, diameter=float(cur_r))):
+                    return pq.kth_diameter()
+            return r_k
+        last = cur[-1]
+        for o in ordered_groups[idx]:
+            dlast = dist[last, o]
+            if dlast > r_k:
+                continue
+            new_r = cur_r
+            ok = True
+            for c in cur:
+                dd = dist[c, o]
+                if dd > r_k:
+                    ok = False
+                    break
+                if dd > new_r:
+                    new_r = dd
+            if ok:
+                cur.append(int(o))
+                r_k = recurse(idx + 1, cur, new_r, r_k)
+                cur.pop()
+        return r_k
+
+    for o in ordered_groups[0]:
+        r_k = recurse(1, [int(o)], 0.0, r_k) if q > 1 else r_k
+        if q == 1:
+            ids = (int(f_ids[o]),)
+            if pq.offer(Candidate(ids=ids, diameter=0.0)):
+                r_k = pq.kth_diameter()
+            explored += 1
+    return explored

@@ -1,0 +1,3 @@
+"""repro.data — dataset generators and the sharded training pipeline."""
+from repro.data.synthetic import synthetic_dataset, random_queries  # noqa: F401
+from repro.data.flickr_like import flickr_like_dataset  # noqa: F401

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: batched candidate-diameter computation.
+
+Ranks candidates by the paper's r(A) = max pairwise L2 distance. Input is a
+padded batch of candidate tuples (T, q, d) — q <= 9 per the paper's query
+sizes; callers pad short tuples by repeating a member point (a zero-distance
+duplicate never changes the max).
+
+Per grid step a (bt, q, d) block is reduced entirely in VMEM: q^2 dots via a
+single (bt*q, d) x (d, bt*q)-free einsum — implemented as dot_general with a
+batch dim so each tuple's Gram matrix stays (q, q).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(pts_ref, out_ref):
+    pts = pts_ref[...].astype(jnp.float32)         # (bt, q, d)
+    sq = jnp.sum(pts * pts, axis=-1)               # (bt, q)
+    gram = jax.lax.dot_general(
+        pts, pts, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)        # (bt, q, q)
+    d2 = sq[:, :, None] + sq[:, None, :] - 2.0 * gram
+    d2 = jnp.maximum(d2, 0.0)
+    out_ref[...] = jnp.sqrt(jnp.max(d2, axis=(1, 2)))[:, None]
+
+
+def tuple_diameters(pts: jax.Array, *, bt: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """pts: (T, q, d) padded candidate tuples -> (T,) diameters r(A)."""
+    t, q, d = pts.shape
+    gt = pl.cdiv(t, bt)
+    pts_p = jnp.pad(pts, ((0, gt * bt - t), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(gt,),
+        in_specs=[pl.BlockSpec((bt, q, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gt * bt, 1), jnp.float32),
+        interpret=interpret,
+    )(pts_p)
+    return out[:t, 0]

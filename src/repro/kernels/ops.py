@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs in Python per grid step, which validates the exact TPU
+program logic. On a TPU backend the same wrappers emit Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import diameter as _diameter
+from repro.kernels import pairwise_l2 as _pairwise
+from repro.kernels import project_bin as _project
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("r", "bm", "bn", "interpret"))
+def pairwise_l2_join(a: jax.Array, b: jax.Array, r: float = float("inf"), *,
+                     bm: int = 128, bn: int = 128,
+                     interpret: bool | None = None):
+    """Blocked pairwise sq-L2 + threshold-join counts. Returns (sq, counts)
+    where counts is the per-tile join-size grid (sum() = edge weight)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pairwise.pairwise_l2_join(a, b, r, bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "c", "bn", "interpret"))
+def project_and_bin(x: jax.Array, z: jax.Array, w: float, c: int, *,
+                    bn: int = 256, interpret: bool | None = None):
+    """Fused projection + dual-bin keys (eqs. 1-2). Returns (h1, h2, proj)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _project.project_and_bin(x, z, w, c, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def tuple_diameters(pts: jax.Array, *, bt: int = 128,
+                    interpret: bool | None = None):
+    """Batched candidate diameters r(A) for padded tuples (T, q, d)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _diameter.tuple_diameters(pts, bt=bt, interpret=interpret)
+
+
+def pairwise_distances(a, b, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Convenience: dense (M, N) Euclidean distances via the join kernel."""
+    sq, _ = pairwise_l2_join(a, b, interpret=interpret)
+    return jnp.sqrt(sq)

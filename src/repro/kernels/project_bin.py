@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused random projection + dual-bin hashing (paper eqs 1-2).
+
+Index build hot spot: every point is projected onto m unit vectors (an (N,d)
+x (d,m) MXU matmul) and immediately binned:
+
+    h1 = floor(p / w)
+    h2 = floor((p - w/2) / w) + C
+
+Fusing the floor-bins into the matmul kernel avoids materialising the (N, m)
+projection matrix in HBM during index build — the bins are the only thing the
+hashtable assembly needs (projections round-trip HBM only when the caller
+asks for them, e.g. to compute pMax once).
+
+Grid tiles N by ``bn`` rows; m is zero-padded to the lane width inside the
+wrapper so the (d, m) operand keeps a TPU-friendly trailing dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128
+
+
+def _kernel(x_ref, z_ref, h1_ref, h2_ref, p_ref, *, w: float, c: int):
+    x = x_ref[...].astype(jnp.float32)            # (bn, d)
+    z = z_ref[...].astype(jnp.float32)            # (d, mp)
+    p = jnp.dot(x, z, preferred_element_type=jnp.float32)   # (bn, mp) on MXU
+    inv_w = jnp.float32(1.0 / w)
+    h1_ref[...] = jnp.floor(p * inv_w).astype(jnp.int32)
+    h2_ref[...] = (jnp.floor((p - jnp.float32(w / 2.0)) * inv_w)
+                   + jnp.int32(c)).astype(jnp.int32)
+    p_ref[...] = p
+
+
+def project_and_bin(x: jax.Array, z: jax.Array, w: float, c: int,
+                    *, bn: int = 256, interpret: bool = False
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (N, d) points; z: (m, d) unit vectors. Returns (h1, h2, proj), each
+    (N, m); h2 already offset by C (paper's disambiguation constant)."""
+    n, d = x.shape
+    m = z.shape[0]
+    mp = max(_LANE, m)                             # pad lanes
+    z_t = jnp.zeros((d, mp), dtype=z.dtype).at[:, :m].set(z.T)
+    gn = pl.cdiv(n, bn)
+    x_p = jnp.pad(x, ((0, gn * bn - n), (0, 0)))
+
+    kern = functools.partial(_kernel, w=float(w), c=int(c))
+    h1, h2, p = pl.pallas_call(
+        kern,
+        grid=(gn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, mp), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, mp), lambda i: (i, 0)),
+            pl.BlockSpec((bn, mp), lambda i: (i, 0)),
+            pl.BlockSpec((bn, mp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((gn * bn, mp), jnp.int32),
+            jax.ShapeDtypeStruct((gn * bn, mp), jnp.int32),
+            jax.ShapeDtypeStruct((gn * bn, mp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_p, z_t)
+    return h1[:n, :m], h2[:n, :m], p[:n, :m]

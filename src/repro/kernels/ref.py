@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_l2_join_ref(a: jax.Array, b: jax.Array, r: float = jnp.inf
+                         ) -> tuple[jax.Array, jax.Array]:
+    """(sq distances (M,N) fp32, total join count scalar int32)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    sq = (jnp.sum(a * a, 1)[:, None] + jnp.sum(b * b, 1)[None, :]
+          - 2.0 * (a @ b.T))
+    sq = jnp.maximum(sq, 0.0)
+    cnt = jnp.sum(sq <= float(r) ** 2, dtype=jnp.int32)
+    return sq, cnt
+
+
+def project_and_bin_ref(x: jax.Array, z: jax.Array, w: float, c: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(h1, h2, proj) per paper eqs. 1-2; z is (m, d)."""
+    p = x.astype(jnp.float32) @ z.astype(jnp.float32).T
+    h1 = jnp.floor(p / w).astype(jnp.int32)
+    h2 = (jnp.floor((p - w / 2.0) / w) + c).astype(jnp.int32)
+    return h1, h2, p
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """Dense-softmax oracle for the flash kernel (per-q-head layout)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    scale = 1.0 / float(hd) ** 0.5
+    sc = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(s)[:, None]
+    kv_pos = jnp.arange(t)[None, :]
+    valid = jnp.ones((s, t), bool)
+    if causal:
+        valid = valid & (kv_pos <= q_pos)
+    if window is not None:
+        valid = valid & (kv_pos > q_pos - window)
+    sc = jnp.where(valid[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def tuple_diameters_ref(pts: jax.Array) -> jax.Array:
+    """(T, q, d) -> (T,) max pairwise distances."""
+    pts = pts.astype(jnp.float32)
+    sq = jnp.sum(pts * pts, axis=-1)
+    gram = jnp.einsum("tqd,trd->tqr", pts, pts)
+    d2 = jnp.maximum(sq[:, :, None] + sq[:, None, :] - 2.0 * gram, 0.0)
+    return jnp.sqrt(jnp.max(d2, axis=(1, 2)))

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x shape cell) and both production meshes
+(single-pod 16x16, multi-pod 2x16x16) this driver:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., donate...).lower(*specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective census
+
+and writes one JSON artifact per cell to ``--out`` (default
+``artifacts/dryrun``). ShapeDtypeStructs only — nothing is allocated.
+Failures (sharding mismatch, OOM-at-compile, unsupported collective) are
+bugs; the artifact records the traceback.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --cell train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ALL_CELLS, ShapeCell, supported_cells
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.step import make_decode_step, make_prefill_step, make_train_step
+from repro.models.api import input_specs, model_api
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+from repro.launch.hlo_census import census as collective_census  # noqa: E402
+from repro.launch.mesh import dp_axes  # noqa: E402
+from repro.models.hints import enable_hints  # noqa: E402
+
+
+def _bf16(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+        if l.dtype == jnp.float32 else l, tree)
+
+
+def _with_sharding(struct_tree, spec_tree, mesh):
+    named = sh.named(spec_tree, mesh)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        struct_tree, named)
+
+
+def run_cell(arch: str, cell: ShapeCell, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2" if multi_pod else "pod1"
+    api = model_api(cfg)
+    rec: dict = {"arch": arch, "cell": cell.name, "mesh": mesh_name,
+                 "devices": int(len(jax.devices())), "ok": False}
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+    try:
+        enable_hints(dp_axes(mesh), "model", mesh)
+        params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        # Expert WEIGHTS stay EP-sharded for every MoE: both alternatives were
+        # measured and refuted (§Perf iters 5b: F-over-TP 1.5x worse; 5c:
+        # TP-replicated 4.6x worse — GSPMD then computes all experts per
+        # token). Only the activation hints follow the light/heavy regime.
+        moe_ep = True
+        pspecs = sh.param_specs(params_struct, mesh, moe_ep=moe_ep)
+        batch_struct = input_specs(cfg, cell)
+        bspecs = sh.batch_specs(cfg, cell, mesh)
+
+        with mesh:
+            if cell.kind == "train":
+                opt_cfg = OptimizerConfig(
+                    state_dtype="bfloat16", total_steps=1000)
+                opt_struct = jax.eval_shape(
+                    lambda p: init_opt_state(p, opt_cfg), params_struct)
+                ospecs = sh.opt_specs(params_struct, mesh, moe_ep=moe_ep)
+                step = make_train_step(cfg, opt_cfg)
+                args = (
+                    _with_sharding(params_struct, pspecs, mesh),
+                    _with_sharding(opt_struct, ospecs, mesh),
+                    _with_sharding(batch_struct, bspecs, mesh),
+                )
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(sh.named(pspecs, mesh),
+                                  sh.named(ospecs, mesh),
+                                  sh.named(bspecs, mesh)),
+                    out_shardings=(sh.named(pspecs, mesh),
+                                   sh.named(ospecs, mesh), None),
+                    donate_argnums=(0, 1))
+            elif cell.kind == "prefill":
+                params_struct = _bf16(params_struct)
+                step = make_prefill_step(cfg)
+                args = (_with_sharding(params_struct, pspecs, mesh),
+                        _with_sharding(batch_struct, bspecs, mesh))
+                jitted = jax.jit(step,
+                                 in_shardings=(sh.named(pspecs, mesh),
+                                               sh.named(bspecs, mesh)))
+            else:                                          # decode
+                params_struct = _bf16(params_struct)
+                cache_struct = jax.eval_shape(
+                    lambda: api.init_cache(cell.global_batch, cell.seq_len))
+                cspecs = sh.cache_specs_tree(cfg, cell, mesh, cache_struct)
+                step = make_decode_step(cfg)
+                args = (_with_sharding(params_struct, pspecs, mesh),
+                        _with_sharding(cache_struct, cspecs, mesh),
+                        _with_sharding(batch_struct["tokens"],
+                                       bspecs["tokens"], mesh))
+                jitted = jax.jit(step,
+                                 in_shardings=(sh.named(pspecs, mesh),
+                                               sh.named(cspecs, mesh),
+                                               sh.named(bspecs["tokens"], mesh)),
+                                 out_shardings=(None,
+                                                sh.named(cspecs, mesh)),
+                                 donate_argnums=(1,))
+
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                              "temp_size_in_bytes", "alias_size_in_bytes",
+                              "generated_code_size_in_bytes"):
+                    rec.setdefault("memory", {})[field] = int(
+                        getattr(ma, field, 0) or 0)
+            ca = compiled.cost_analysis()
+            if ca:
+                rec["cost"] = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float))}
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_census(hlo)
+            rec["hlo_bytes"] = len(hlo)
+            if save_hlo:
+                with gzip.open(os.path.join(
+                        out_dir, f"{arch}__{cell.name}__{mesh_name}.hlo.gz"),
+                        "wt") as f:
+                    f.write(hlo)
+            rec["ok"] = True
+            print(f"OK  {arch:28s} {cell.name:12s} {mesh_name} "
+                  f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                  f"flops={rec.get('cost', {}).get('flops', 0):.3e}")
+            print("  memory_analysis:", rec.get("memory"))
+            print("  collectives:", rec["collectives"]["bytes_scaled"])
+    except Exception:
+        rec["error"] = traceback.format_exc()
+        print(f"FAIL {arch} {cell.name} {mesh_name}\n{rec['error']}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir,
+                           f"{arch}__{cell.name}__{mesh_name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None,
+                    choices=[c.name for c in ALL_CELLS])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = supported_cells(cfg)
+        if args.cell:
+            cells = [c for c in ALL_CELLS if c.name == args.cell]
+        for cell in cells:
+            for mp in meshes:
+                tag = f"{arch}__{cell.name}__{'pod2' if mp else 'pod1'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_done and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            print("skip", tag)
+                            continue
+                results.append(run_cell(arch, cell, mp, args.out,
+                                        save_hlo=args.save_hlo))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""Trip-count-aware HLO census — the measurement backbone of §Roofline/§Perf.
+
+``compiled.cost_analysis()`` counts each while-loop *body* once, but a layer
+scan executes its body n_layers times; the same under-count hits collective
+bytes. This module parses the post-SPMD HLO text and:
+
+  1. builds the computation call graph (while bodies/conditions, fusions,
+     calls) and per-computation execution multipliers — a while body's
+     multiplier is its caller's multiplier x the loop trip count (estimated
+     from the largest leading dim among dynamic-slice/dynamic-update-slice
+     operands in the body: scan-stacked inputs are sliced by the induction
+     variable; bodies with no such slice count once);
+  2. computes per-op dot FLOPs from operand shapes + contracting dims;
+  3. sums collective bytes (all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute) by result-buffer size;
+  4. sums op output-buffer bytes as an HBM-traffic proxy (fusion outputs
+     only — internal fusion ops don't round-trip HBM).
+
+Everything is scaled by the execution multipliers, giving per-device
+whole-step totals. Heuristic by design; EXPERIMENTS.md §Roofline documents
+the error sources (trip-count inference, gather/elementwise FLOPs ignored).
+"""
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+               "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+               "token": 0}
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",") if d]
+
+
+def _nelem(dim_str: str) -> int:
+    n = 1
+    for d in _dims(dim_str):
+        n *= d
+    return n
+
+
+def _first_shapes(text: str) -> list[tuple[str, str]]:
+    return SHAPE_RE.findall(text)
+
+
+def _buffer_bytes(type_text: str) -> int:
+    """Total bytes over all array shapes in a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _first_shapes(type_text):
+        total += _nelem(dims) * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.shapes: dict[str, str] = {}       # instr name -> type text
+        self.dots: list[tuple[str, str, str, str]] = []  # (out, lhs, rhs, attrs)
+        self.collectives: list[tuple[str, int]] = []     # (kind, bytes)
+        self.out_bytes = 0                      # sum of op result buffers
+        self.while_bodies: list[tuple[str, str]] = []    # (body, cond) names
+        self.called: list[str] = []             # fusion/call targets
+        self.ds_lead = 1                        # max dynamic-slice lead dim
+        self.int_consts: list[int] = []         # scalar int constants (bounds)
+
+
+def parse_hlo(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        # computation header: "%name (p: t[..]) -> t[..] {" or "ENTRY ..."
+        if stripped.endswith("{") and "->" in stripped and "(" in stripped:
+            name = stripped.replace("ENTRY", "").strip().split("(")[0].strip()
+            name = name.lstrip("%").strip()
+            cur = Computation(name)
+            comps[name] = cur
+            continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        m = INSTR_RE.match(stripped)
+        if not m:
+            continue
+        iname, rhs = m.groups()
+        # result type = everything before the op name
+        type_part = rhs.split(" ", 1)[0] if "[" in rhs.split(" ", 1)[0] else None
+        # more robust: type is the prefix up to the op token
+        om = re.match(r"^((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)+)\s+"
+                      r"([\w\-]+)\(", rhs)
+        if not om:
+            continue
+        type_text, op = om.groups()
+        cur.shapes[iname] = type_text
+        buf = _buffer_bytes(type_text)
+        if op not in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "copy"):
+            cur.out_bytes += buf
+        if op == "dot":
+            args = re.search(r"dot\(([^)]*)\)", rhs)
+            attrs = rhs.split(")", 1)[1] if ")" in rhs else ""
+            if args:
+                ops_ = [a.strip().lstrip("%") for a in args.group(1).split(",")]
+                if len(ops_) >= 2:
+                    cur.dots.append((iname, ops_[0], ops_[1], attrs))
+        elif any(op.startswith(c) for c in COLLECTIVES):
+            kind = next(c for c in COLLECTIVES if op.startswith(c))
+            cur.collectives.append((kind, buf))
+        elif op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", rhs)
+            cm = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            if bm:
+                cur.while_bodies.append((bm.group(1),
+                                         cm.group(1) if cm else ""))
+        elif op in ("fusion", "call", "custom-call", "conditional"):
+            for t in re.findall(r"(?:calls|to_apply|branch_computations)="
+                                r"[{]?%?([\w\.\-{}, %]+)", rhs):
+                for nm in re.findall(r"[\w\.\-]+", t):
+                    cur.called.append(nm)
+        if op == "constant":
+            cm2 = re.search(r"constant\((\d+)\)", rhs)
+            if cm2:
+                cur.int_consts.append(int(cm2.group(1)))
+        if op in ("dynamic-slice", "dynamic-update-slice"):
+            args = re.search(rf"{op}\(([^)]*)\)", rhs)
+            if args:
+                first = args.group(1).split(",")[0].strip().lstrip("%")
+                # operand shape may be defined earlier in this computation
+                src = cur.shapes.get(first)
+                if src:
+                    sh = _first_shapes(src)
+                    if sh:
+                        d = _dims(sh[0][1])
+                        if d:
+                            cur.ds_lead = max(cur.ds_lead, d[0])
+    return comps
+
+
+def dot_flops(comp: Computation) -> float:
+    total = 0.0
+    for out, lhs, rhs, attrs in comp.dots:
+        out_t = comp.shapes.get(out)
+        lhs_t = comp.shapes.get(lhs)
+        if not out_t or not lhs_t:
+            continue
+        out_n = _nelem(_first_shapes(out_t)[0][1])
+        lhs_dims = _dims(_first_shapes(lhs_t)[0][1])
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+        contract = 1
+        if cm:
+            for d in _dims(cm.group(1)):
+                if d < len(lhs_dims):
+                    contract *= lhs_dims[d]
+        total += 2.0 * out_n * contract
+    return total
+
+
+def census(hlo_text: str) -> dict:
+    comps = parse_hlo(hlo_text)
+    # entry = computation that no one calls
+    called: set[str] = set()
+    fusion_targets: set[str] = set()
+    for c in comps.values():
+        for b, cond in c.while_bodies:
+            called.add(b)
+            if cond:
+                called.add(cond)
+        called.update(c.called)
+        fusion_targets.update(c.called)
+    entries = [n for n in comps if n not in called] or list(comps)[:1]
+
+    mult: dict[str, float] = {n: 0.0 for n in comps}
+    for e in entries:
+        mult[e] = 1.0
+    # propagate multipliers (call graph is a DAG; fixed-point over few passes)
+    for _ in range(len(comps)):
+        changed = False
+        for name, c in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for b, cond in c.while_bodies:
+                # trip count: the loop bound is an integer constant in the
+                # while CONDITION computation (scan lowers to i < N); fall
+                # back to the body's max dynamic-slice leading dim.
+                trips = 1
+                if cond in comps and comps[cond].int_consts:
+                    trips = max(comps[cond].int_consts)
+                elif b in comps:
+                    trips = comps[b].ds_lead
+                for target, tm in ((b, m * trips), (cond, m * trips)):
+                    if target in mult and mult[target] < tm:
+                        mult[target] = tm
+                        changed = True
+            for t in c.called:
+                if t in mult and mult[t] < m:
+                    mult[t] = m
+                    changed = True
+        if not changed:
+            break
+
+    flops = 0.0
+    out_bytes = 0.0
+    coll_raw: dict[str, float] = {}
+    coll_scaled: dict[str, float] = {}
+    n_coll = 0
+    for name, c in comps.items():
+        m = max(mult.get(name, 0.0), 0.0)
+        if m == 0.0:
+            m = 1.0          # unreached comps (conservative)
+        flops += dot_flops(c) * m
+        # fusion-internal ops never round-trip HBM; the fusion op's own
+        # output buffer is already counted in its caller.
+        if name not in fusion_targets:
+            out_bytes += c.out_bytes * m
+        for kind, b in c.collectives:
+            n_coll += 1
+            coll_raw[kind] = coll_raw.get(kind, 0) + b
+            coll_scaled[kind] = coll_scaled.get(kind, 0) + b * m
+    return {
+        "ops": n_coll,
+        "bytes_raw": {k: int(v) for k, v in coll_raw.items()},
+        "bytes_scaled": {k: int(v) for k, v in coll_scaled.items()},
+        "total_scaled": int(sum(coll_scaled.values())),
+        "dot_flops_scaled": float(flops),
+        "out_bytes_scaled": float(out_bytes),
+    }

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+touches no jax device state — the dry-run process must set XLA_FLAGS before
+the first jax call, and tests must keep seeing 1 CPU device.
+
+Axes:
+  * ``pod``   — inter-pod (DCN/optical) axis: pure DP (optionally compressed
+                gradient all-reduce) or pipeline stages;
+  * ``data``  — intra-pod DP/FSDP axis (batch + parameter/optimizer shards);
+  * ``model`` — TP/EP axis (heads, FFN hidden, vocab, experts, SSM heads).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import os
+    override = os.environ.get("REPRO_MESH_OVERRIDE")          # debug only
+    if override:
+        shape = tuple(int(x) for x in override.split(","))
+        axes = ("pod", "data", "model")[-len(shape):] if multi_pod or \
+            len(shape) == 3 else ("data", "model")
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int | None = None):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    if pod is not None:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The batch/data-parallel axes of a mesh (pod included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

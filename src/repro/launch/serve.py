@@ -1,0 +1,61 @@
+"""Production NKS serving launcher: build/ingest a corpus, start the batched
+engine, answer queries from a JSONL request stream (or a built-in demo).
+
+    PYTHONPATH=src python -m repro.launch.serve --n 20000 --d 32 \
+        --tier approx --queries 10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.data.flickr_like import flickr_like_dataset
+from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.serve.engine import NKSEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--u", type=int, default=300)
+    ap.add_argument("--t", type=int, default=4)
+    ap.add_argument("--corpus", choices=["flickr", "uniform"], default="flickr")
+    ap.add_argument("--tier", choices=["exact", "approx", "device"],
+                    default="approx")
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--queries", type=int, default=10,
+                    help="demo random queries (ignored with --requests)")
+    ap.add_argument("--requests", default=None,
+                    help="JSONL file: {\"keywords\": [..], \"k\": 1}")
+    args = ap.parse_args()
+
+    if args.corpus == "flickr":
+        ds = flickr_like_dataset(n=args.n, d=args.d, u=args.u, t=args.t, seed=0)
+    else:
+        ds = synthetic_dataset(n=args.n, d=args.d, u=args.u, t=args.t, seed=0)
+    engine = NKSEngine(ds, build_exact=(args.tier == "exact"),
+                       build_approx=(args.tier != "exact"))
+    print(f"serving: corpus N={ds.n} d={ds.dim} U={ds.n_keywords} "
+          f"tier={args.tier}", file=sys.stderr)
+
+    if args.requests:
+        reqs = [json.loads(l) for l in open(args.requests) if l.strip()]
+        queries = [(r["keywords"], r.get("k", args.k)) for r in reqs]
+    else:
+        queries = [(q, args.k) for q in
+                   random_queries(ds, 3, args.queries, seed=1)]
+
+    for kw, k in queries:
+        res = engine.query(kw, k=k, tier=args.tier)
+        print(json.dumps({
+            "keywords": list(map(int, kw)),
+            "latency_ms": round(res.latency_s * 1e3, 2),
+            "results": [{"ids": list(c.ids), "diameter": round(c.diameter, 4)}
+                        for c in res.candidates],
+        }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Per-leaf PartitionSpec rules for every architecture (DP/FSDP/TP/EP/SP).
+
+Strategy (DESIGN.md §5):
+  * params: FSDP over ``data`` x TP over ``model``; expert tensors shard
+    experts over ``model`` (EP) and d_model over ``data``;
+  * batch: sharded over (pod, data); when global_batch < dp_size (long_500k)
+    the batch replicates and the KV-cache *sequence* dim shards over ``data``
+    instead (sequence parallelism for the cache);
+  * optimizer state mirrors the param specs;
+  * KV caches: batch over (pod, data); kv-head dim over ``model`` when it
+    divides evenly (GQA kv >= TP), else replicated heads.
+
+Rules are name-based on the LAST dims of each leaf; leading stack axes
+(layer, block, inner-block) are padded with None automatically — this is what
+makes one rule table cover scan-stacked params of every family.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.mesh import dp_axes, dp_size
+
+TP = "model"
+
+
+def _fsdp(mesh: Mesh):
+    return "data" if "data" in mesh.axis_names else None
+
+
+# name -> (base_ndim, tail spec builder). F=fsdp axis name (or None).
+def _rule(name: str, path_names: list[str], ndim: int, mesh: Mesh,
+          moe_ep: bool = True):
+    f = _fsdp(mesh)
+    in_moe = "moe" in path_names and "shared" not in path_names
+    table: dict[str, tuple[int, tuple]] = {
+        "tok": (2, (TP, f)),
+        "head": (2, (f, TP)),
+        "wq": (3, (f, TP, None)),
+        "wk": (3, (f, TP, None)),
+        "wv": (3, (f, TP, None)),
+        "wo": (3, (TP, None, f)),
+        "bq": (2, (TP, None)),
+        "bk": (2, (TP, None)),
+        "bv": (2, (TP, None)),
+        "qn": (1, (None,)),
+        "kn": (1, (None,)),
+        "w1": (2, (f, TP)),
+        "w3": (2, (f, TP)),
+        "w2": (2, (TP, f)),
+        "b1": (1, (TP,)),
+        "b2": (1, (None,)),
+        "router": (2, (f, None)),
+        "z_proj": (2, (f, TP)),
+        "x_proj": (2, (f, TP)),
+        "b_proj": (2, (f, None)),
+        "c_proj": (2, (f, None)),
+        "dt_proj": (2, (f, TP)),
+        "conv_x": (2, (None, TP)),
+        "conv_b": (2, (None, None)),
+        "conv_c": (2, (None, None)),
+        "conv_bias_x": (1, (TP,)),
+        "conv_bias_b": (1, (None,)),
+        "conv_bias_c": (1, (None,)),
+        "a_log": (1, (TP,)),
+        "d_skip": (1, (TP,)),
+        "dt_bias": (1, (TP,)),
+        "norm_w": (1, (TP,)),
+        "out_proj": (2, (TP, f)),
+        "vis_proj": (2, (f, TP)),
+        "enc_pos": (2, (None, None)),
+        "dec_pos": (2, (None, None)),
+        "w": (1, (None,)),            # norm scale
+        "b": (1, (None,)),            # norm bias
+        "gate_a": (0, ()),
+        "gate_m": (0, ()),
+    }
+    if in_moe and name in ("w1", "w3"):
+        # EP regime: experts over TP; token-parallel regime: experts fully
+        # replicated over TP (FSDP-only weights) so tokens never move and no
+        # per-layer TP all-reduce exists (§Perf iters 5b/5c).
+        base = (3, (TP, f, None)) if moe_ep else (3, (None, f, None))
+    elif in_moe and name == "w2":
+        base = (3, (TP, None, f)) if moe_ep else (3, (None, None, f))
+    elif name in table:
+        base = table[name]
+    else:
+        raise KeyError(f"no sharding rule for param leaf '{'/'.join(path_names)}'")
+    base_ndim, tail = base
+    lead = ndim - base_ndim
+    if lead < 0:
+        raise ValueError(f"leaf {'/'.join(path_names)} ndim {ndim} < rule {base_ndim}")
+    return (None,) * lead + tuple(tail)
+
+
+def _divisible(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Null out axes that do not divide their dim evenly (jit in_shardings
+    require exact divisibility; e.g. 36 heads over TP=16 -> replicate)."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_specs(params_shape, mesh: Mesh, *, moe_ep: bool = True):
+    """Pytree of PartitionSpec matching a params (or ShapeDtypeStruct) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        names = [str(p.key) if hasattr(p, "key") else str(p.idx) for p in path]
+        raw = _rule(names[-1], names, len(leaf.shape), mesh, moe_ep=moe_ep)
+        specs.append(_divisible(raw, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(params_shape, mesh: Mesh, *, moe_ep: bool = True):
+    ps = param_specs(params_shape, mesh, moe_ep=moe_ep)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh):
+    """Specs for the input batch dict of (arch x cell)."""
+    dp = dp_axes(mesh)
+    shard_batch = cell.global_batch % dp_size(mesh) == 0
+    bspec = P(dp) if shard_batch else P()
+    out: dict[str, Any] = {"tokens": P(*bspec, None)}
+    if cell.kind == "train":
+        out["targets"] = P(*bspec, None)
+    if cfg.family == "vlm":
+        out["patches"] = P(*bspec, None, None)
+    if cfg.family == "audio":
+        out["frames"] = P(*bspec, None, None)
+    return out
+
+
+def cache_specs_tree(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh, cache_shape):
+    """Specs for the decode cache pytree (shapes from jax.eval_shape)."""
+    dp = dp_axes(mesh)
+    shard_batch = cell.global_batch % dp_size(mesh) == 0
+    bsp = dp if shard_batch else None
+    # SP: when the batch can't shard (long_500k B=1), shard the cache seq dim.
+    ssp = None if shard_batch else "data"
+    kv_tp = TP if cfg.n_kv_heads % mesh.shape[TP] == 0 else None
+    # When kv heads can't shard over TP (GQA kv < TP), shard the cache SEQ
+    # dim over TP instead — decode attention reduces partial softmax terms
+    # across seq shards (§Perf iter 8: qwen3 decode cache 34->2.1 GB/device).
+    ssp_kv = ssp if kv_tp is not None else (TP if ssp is None else ssp)
+
+    def rule(path, leaf):
+        names = [str(p.key) if hasattr(p, "key") else str(p.idx) for p in path]
+        name = names[-1]
+        nd = len(leaf.shape)
+        if name == "pos":
+            return P()
+        if name in ("k", "v"):          # (..., B, S, kv, hd)
+            tail = (bsp, ssp_kv, kv_tp, None)
+        elif name in ("xk", "xv"):      # (..., B, T, kv, hd) cross KV
+            tail = (bsp, None, kv_tp, None)
+        elif name == "ssm":             # (..., B, H, P, N)
+            tail = (bsp, TP, None, None)
+        elif name == "cx":              # (..., B, K-1, d_in)
+            tail = (bsp, None, TP)
+        elif name in ("cb", "cc"):      # (..., B, K-1, G*N)
+            tail = (bsp, None, None)
+        else:
+            raise KeyError(f"no cache rule for {'/'.join(names)}")
+        lead = nd - len(tail)
+        return _divisible((None,) * lead + tail, leaf.shape, mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in flat])
+
+
+def named(tree_specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

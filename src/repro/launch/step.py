@@ -1,0 +1,43 @@
+"""Jittable step functions (train / prefill / decode) shared by the real
+launcher and the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.api import model_api
+from repro.train.optimizer import OptimizerConfig, adamw_update
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig, *,
+                    remat: bool = True):
+    api = model_api(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return api.loss(p, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    api = model_api(cfg)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    api = model_api(cfg)
+
+    def decode_step(params, cache, tokens):
+        return api.decode(params, cache, tokens)
+
+    return decode_step

@@ -1,0 +1,4 @@
+"""repro.models — the 10 assigned architecture families."""
+from repro.models.api import (ModelAPI, active_params, cache_specs,  # noqa: F401
+                              count_params, input_specs, model_api,
+                              params_specs)

@@ -1,0 +1,151 @@
+"""Unified model API — one entry point for all 10 assigned architectures.
+
+    api = model_api(get_config("qwen3-32b"))
+    params = api.init(jax.random.PRNGKey(0))
+    loss, metrics = api.loss(params, batch)
+    logits, cache = api.prefill(params, batch)
+    logits, cache = api.decode(params, cache, tokens)
+    emb = api.embed(params, batch)           # (B, d_model) -> ProMiSH points
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStructs for every model input of
+an assigned shape cell (weak-type-correct, shardable, no allocation) — the
+multi-pod dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import audio as audio_lib
+from repro.models import transformer as tf_lib
+from repro.models.common import ACT_DTYPE, Params
+
+Batch = dict[str, Any]
+
+
+def _xent(logits, targets, mask=None):
+    """Stable token-mean cross-entropy; fp32 log-sum-exp."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    embed: Callable
+
+
+def _extra_of(cfg: ArchConfig, batch: Batch):
+    if cfg.family == "vlm":
+        return {"patches": batch["patches"]}
+    if cfg.family == "audio":
+        return {"frames": batch["frames"]}
+    return None
+
+
+def model_api(cfg: ArchConfig) -> ModelAPI:
+    is_audio = cfg.family == "audio"
+    mod = audio_lib if is_audio else tf_lib
+
+    def init(key):
+        return mod.init_params(cfg, key)
+
+    def loss(params: Params, batch: Batch, *, remat: bool = True):
+        extra = _extra_of(cfg, batch)
+        logits, aux = mod.forward_train(params, cfg, batch["tokens"],
+                                        extra=extra, remat=remat)
+        xent = _xent(logits, batch["targets"], batch.get("mask"))
+        return xent + aux, {"xent": xent, "aux": aux}
+
+    def prefill(params: Params, batch: Batch, *, max_seq: int | None = None):
+        extra = _extra_of(cfg, batch)
+        return mod.prefill(params, cfg, batch["tokens"], extra=extra,
+                           max_seq=max_seq)
+
+    def decode(params: Params, cache: Params, tokens):
+        return mod.decode(params, cfg, cache, tokens)
+
+    def init_cache(batch: int, max_seq: int, dtype=ACT_DTYPE):
+        return mod.init_cache(cfg, batch, max_seq, dtype)
+
+    def embed(params: Params, batch: Batch):
+        """Mean-pooled final hidden states -> (B, d_model) ProMiSH points."""
+        extra = _extra_of(cfg, batch)
+        hidden, _ = mod.forward_train(params, cfg, batch["tokens"], extra=extra,
+                                      remat=False, return_hidden=True)
+        mask = batch.get("mask")
+        if mask is None:
+            return hidden.mean(axis=1)
+        m = mask.astype(hidden.dtype)[..., None]
+        return (hidden * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+
+    return ModelAPI(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                    decode=decode, init_cache=init_cache, embed=embed)
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Batch:
+    """ShapeDtypeStruct stand-ins for every input of (arch x cell)."""
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if cell.kind == "train":
+        batch: Batch = {"tokens": sds((b, s), i32), "targets": sds((b, s), i32)}
+    elif cell.kind == "prefill":
+        batch = {"tokens": sds((b, s), i32)}
+    else:                                  # decode: one new token, cache of s
+        batch = {"tokens": sds((b, 1), i32)}
+    if cfg.family == "vlm":
+        batch["patches"] = sds((b, cfg.vision_tokens, cfg.vision_dim), ACT_DTYPE)
+    if cfg.family == "audio":
+        batch["frames"] = sds((b, cfg.audio_frames, cfg.d_model), ACT_DTYPE)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, cell: ShapeCell) -> Params:
+    """ShapeDtypeStructs of the decode cache at this cell (seq_len entries)."""
+    api = model_api(cfg)
+    return jax.eval_shape(lambda: api.init_cache(cell.global_batch, cell.seq_len))
+
+
+def params_specs(cfg: ArchConfig) -> Params:
+    api = model_api(cfg)
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    import math
+    specs = params_specs(cfg)
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(specs))
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE: top-k of the expert pool)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    e, k, f, d = (cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.d_ff_expert,
+                  cfg.d_model)
+    n_moe_layers = cfg.n_layers // cfg.moe.every
+    expert_params = 3 * d * f                       # swiglu expert
+    inactive = n_moe_layers * (e - k) * expert_params
+    return total - inactive

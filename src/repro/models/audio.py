@@ -1,0 +1,170 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, audio_frames, d_model) — the log-mel +
+Conv1d stack is upstream preprocessing. The transformer backbone is complete:
+  * encoder: learned positions, non-causal self-attention, GELU MLP, pre-LN;
+  * decoder: learned positions, causal self-attention, cross-attention to the
+    encoder output, GELU MLP.
+Serving caches decoder self-KV plus per-layer cross-KV projected once from
+the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (ACT_DTYPE, AttnSpec, Params, apply_mlp,
+                                 apply_norm, cross_attention, cross_kv,
+                                 dense_init, embed_tokens, init_attention,
+                                 init_embed, init_mlp, init_norm,
+                                 self_attention, split_keys, unembed)
+
+MAX_TEXT_POS = 32_768 + 8      # learned decoder positions (covers decode_32k)
+
+
+def _spec(cfg: ArchConfig, causal: bool) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.resolved_head_dim, d_model=cfg.d_model,
+                    qk_norm=False, bias=cfg.attn_bias, causal=causal,
+                    window=None, rope_theta=None)
+
+
+def init_enc_layer(key, cfg: ArchConfig) -> Params:
+    ks = split_keys(key, 4)
+    return {"ln1": init_norm(ks[0], cfg.d_model, cfg.norm),
+            "attn": init_attention(ks[1], _spec(cfg, causal=False)),
+            "ln2": init_norm(ks[2], cfg.d_model, cfg.norm),
+            "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp)}
+
+
+def init_dec_layer(key, cfg: ArchConfig) -> Params:
+    ks = split_keys(key, 6)
+    return {"ln1": init_norm(ks[0], cfg.d_model, cfg.norm),
+            "attn": init_attention(ks[1], _spec(cfg, causal=True)),
+            "lnx": init_norm(ks[2], cfg.d_model, cfg.norm),
+            "xattn": init_attention(ks[3], _spec(cfg, causal=False)),
+            "ln2": init_norm(ks[4], cfg.d_model, cfg.norm),
+            "mlp": init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.mlp)}
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ks = split_keys(key, 6)
+    return {
+        "embed": init_embed(ks[0], cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+        "enc_pos": dense_init(ks[1], (cfg.audio_frames, cfg.d_model), scale=0.01),
+        "dec_pos": dense_init(ks[2], (MAX_TEXT_POS, cfg.d_model), scale=0.01),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(
+            jax.random.split(ks[3], cfg.enc_layers)),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(
+            jax.random.split(ks[4], cfg.n_layers)),
+        "enc_norm": init_norm(ks[5], cfg.d_model, cfg.norm),
+        "final_norm": init_norm(jax.random.fold_in(key, 9), cfg.d_model, cfg.norm),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, frames, *, remat: bool = False):
+    """frames (B, T, D) stub-frontend output -> encoder states (B, T, D)."""
+    b, t, _ = frames.shape
+    x = frames.astype(ACT_DTYPE) + params["enc_pos"][:t].astype(ACT_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, p_l):
+        h = apply_norm(p_l["ln1"], x, cfg.norm, cfg.norm_eps)
+        att, _ = self_attention(p_l["attn"], _spec(cfg, causal=False), h, positions)
+        x = x + att
+        h = apply_norm(p_l["ln2"], x, cfg.norm, cfg.norm_eps)
+        return x + apply_mlp(p_l["mlp"], h, cfg.mlp), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def _dec_layer(p_l, cfg, x, positions, enc_out=None, *, kv=None, pos0=None,
+               xk=None, xv=None):
+    h = apply_norm(p_l["ln1"], x, cfg.norm, cfg.norm_eps)
+    cache = None if kv is None else {"k": kv["k"], "v": kv["v"], "pos": pos0}
+    att, nkv = self_attention(p_l["attn"], _spec(cfg, causal=True), h, positions,
+                              cache=cache)
+    x = x + att
+    h = apply_norm(p_l["lnx"], x, cfg.norm, cfg.norm_eps)
+    x = x + cross_attention(p_l["xattn"], _spec(cfg, causal=False), h,
+                            kv_src=enc_out, k=xk, v=xv)
+    h = apply_norm(p_l["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + apply_mlp(p_l["mlp"], h, cfg.mlp), nkv
+
+
+def forward_train(params: Params, cfg: ArchConfig, tokens, *, extra,
+                  remat: bool = True, return_hidden: bool = False):
+    """tokens (B,S) + extra["frames"] (B,T,D) -> (logits, aux=0)."""
+    b, s = tokens.shape
+    enc_out = encode(params, cfg, extra["frames"], remat=remat)
+    x = embed_tokens(params["embed"], tokens) + params["dec_pos"][:s].astype(ACT_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, p_l):
+        x, _ = _dec_layer(p_l, cfg, x, positions, enc_out)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.float32(0.0)
+    return unembed(params["embed"], x, cfg.vocab_size), jnp.float32(0.0)
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens, *, extra,
+            max_seq: int | None = None):
+    b, s = tokens.shape
+    max_seq = s if max_seq is None else max_seq
+    pad = max_seq - s
+    enc_out = encode(params, cfg, extra["frames"])
+    x = embed_tokens(params["embed"], tokens) + params["dec_pos"][:s].astype(ACT_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    spec_x = _spec(cfg, causal=False)
+
+    def body(x, p_l):
+        xk, xv = cross_kv(p_l["xattn"], spec_x, enc_out)
+        x, kv = _dec_layer(p_l, cfg, x, positions, xk=xk, xv=xv)
+        kv = jax.tree.map(lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))), kv)
+        return x, {"k": kv["k"], "v": kv["v"], "xk": xk, "xv": xv}
+
+    x, layers = jax.lax.scan(body, x, params["dec_layers"])
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1:, :], cfg.vocab_size)[:, 0, :]
+    return logits, {"layers": layers, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def decode(params: Params, cfg: ArchConfig, cache: Params, tokens):
+    b, s = tokens.shape
+    pos0 = cache["pos"]
+    x = embed_tokens(params["embed"], tokens) + \
+        jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos0, s, 0).astype(ACT_DTYPE)
+    positions = pos0[None, None] + jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, inp):
+        p_l, c_l = inp
+        x, nkv = _dec_layer(p_l, cfg, x, positions, kv=c_l, pos0=pos0,
+                            xk=c_l["xk"], xv=c_l["xv"])
+        return x, {"k": nkv["k"], "v": nkv["v"], "xk": c_l["xk"], "xv": c_l["xv"]}
+
+    x, layers = jax.lax.scan(body, x, (params["dec_layers"], cache["layers"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return unembed(params["embed"], x, cfg.vocab_size)[:, -1, :], {"layers": layers, "pos": pos0 + s}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=ACT_DTYPE) -> Params:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    kv_shape = (cfg.n_layers, batch, max_seq, kv, hd)
+    x_shape = (cfg.n_layers, batch, cfg.audio_frames, kv, hd)
+    return {"layers": {"k": jnp.zeros(kv_shape, dtype),
+                       "v": jnp.zeros(kv_shape, dtype),
+                       "xk": jnp.zeros(x_shape, dtype),
+                       "xv": jnp.zeros(x_shape, dtype)},
+            "pos": jnp.zeros((), jnp.int32)}

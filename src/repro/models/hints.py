@@ -1,0 +1,77 @@
+"""Activation sharding hints (GSPMD constraint annotations).
+
+GSPMD propagates weight shardings poorly through scan carries and reshapes —
+measured concretely in the dry-run: without constraints the blockwise
+attention ran with ALL heads replicated on every device (16x wasted MXU time;
+see EXPERIMENTS.md §Perf iteration 1). These hints pin the head/expert axes
+of key activations to the ``model`` axis and the batch axis to the dp axes.
+
+The launch layer enables hints for mesh runs (``enable_hints``); single-device
+tests never enable them, so model code stays mesh-free. A hint silently
+skips any dim that does not divide its mesh axes (uneven activation sharding
+of e.g. 36 heads over 16 devices would force padding on every op — worse than
+replication).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: dict | None = None
+
+
+def enable_hints(dp_axes: tuple[str, ...], tp_axis: str, mesh=None):
+    global _ACTIVE
+    sizes = {}
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    _ACTIVE = {"dp": tuple(dp_axes), "tp": tp_axis, "sizes": sizes}
+
+
+def disable_hints():
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def _axis_size(axes) -> int:
+    if _ACTIVE is None or not _ACTIVE["sizes"]:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(_ACTIVE["sizes"].get(a, 1) for a in axes)
+
+
+def tp_size() -> int:
+    """Size of the tensor-parallel axis (1 when hints are disabled)."""
+    return _axis_size(_ACTIVE["tp"]) if _ACTIVE else 1
+
+
+def active() -> dict | None:
+    """The active hint context {dp, tp, sizes, mesh} or None."""
+    return _ACTIVE
+
+
+def enable_hints_mesh(mesh, dp_axes_: tuple[str, ...], tp_axis: str):
+    """enable_hints + retain the concrete mesh (needed to shard_map-wrap
+    Pallas kernels, which are opaque to GSPMD)."""
+    enable_hints(dp_axes_, tp_axis, mesh)
+    _ACTIVE["mesh"] = mesh
+
+
+def hint(x, *dims):
+    """dims entries: "dp", "tp", or None — symbolic per-dimension axes."""
+    if _ACTIVE is None:
+        return x
+    spec = []
+    for size, d in zip(x.shape, dims):
+        if d is None:
+            spec.append(None)
+            continue
+        axes = _ACTIVE["dp"] if d == "dp" else _ACTIVE["tp"]
+        if _axis_size(axes) > 1 and size % _axis_size(axes) == 0:
+            spec.append(axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,209 @@
+"""Mamba2 (SSD — state-space duality) sequence mixer.
+
+The SSD algorithm (Dao & Gu 2024) is TPU-native by construction: the sequence
+is split into chunks of length Q; within a chunk the recurrence is expanded
+into a (Q, Q) lower-triangular "attention" computed on the MXU, and chunks are
+stitched with a tiny (B, H, P, N) state recurrence (lax.scan). This is
+exactly the hardware-adaptation story of DESIGN.md: quadratic-in-chunk matmul
+work, linear-in-sequence state work.
+
+TP note: the fused in_proj of the reference implementation is split into
+separate z/x/B/C/dt projections so every output dim is head- (or state-)
+aligned and shards over the ``model`` axis without resharding across concat
+boundaries. Same math, same FLOPs (the matmuls share the input and fuse).
+
+Decode is O(1): one state update per token, no KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import Params, dense_init, rmsnorm, split_keys
+from repro.models.hints import hint
+
+
+def dims(d_model: int, cfg: SSMConfig) -> dict:
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    return {"d_in": d_in, "n_heads": n_heads, "gn": cfg.n_groups * cfg.d_state}
+
+
+def init_ssm(key, d_model: int, cfg: SSMConfig) -> Params:
+    dm = dims(d_model, cfg)
+    d_in, h, gn = dm["d_in"], dm["n_heads"], dm["gn"]
+    ks = split_keys(key, 6)
+    return {
+        "z_proj": dense_init(ks[0], (d_model, d_in)),
+        "x_proj": dense_init(ks[1], (d_model, d_in)),
+        "b_proj": dense_init(ks[2], (d_model, gn)),
+        "c_proj": dense_init(ks[3], (d_model, gn)),
+        "dt_proj": dense_init(ks[4], (d_model, h)),
+        "conv_x": dense_init(jax.random.fold_in(key, 10), (cfg.d_conv, d_in), scale=0.1),
+        "conv_b": dense_init(jax.random.fold_in(key, 11), (cfg.d_conv, gn), scale=0.1),
+        "conv_c": dense_init(jax.random.fold_in(key, 12), (cfg.d_conv, gn), scale=0.1),
+        "conv_bias_x": jnp.zeros((d_in,), jnp.float32),
+        "conv_bias_b": jnp.zeros((gn,), jnp.float32),
+        "conv_bias_c": jnp.zeros((gn,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_in, d_model)),
+    }
+
+
+def _causal_conv(u, w, bias):
+    """Depthwise causal conv over (B, S, C), width K (K-1 left pad)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):                                   # K=4: unrolled taps
+        out = out + pad[:, i:i + u.shape[1], :] * w[i].astype(u.dtype)
+    return jax.nn.silu(out + bias.astype(u.dtype))
+
+
+def _conv_step(u_t, window, w, bias):
+    """One-token conv: window (B, K-1, C) raw history, u_t (B, C) raw input.
+    Returns (activated (B, C), new window)."""
+    win = jnp.concatenate([window, u_t[:, None, :]], axis=1)     # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out + bias.astype(jnp.float32)), win[:, 1:]
+
+
+def ssd_chunked(x, dt, b_in, c_in, a, *, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,S,H,P); dt (B,S,H) (post-softplus); b_in/c_in (B,S,G,N); a (H,) < 0.
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = hint(x.reshape(bsz, nc, q, h, p), "dp", None, None, "tp", None)
+    dtc = hint(dt.reshape(bsz, nc, q, h).astype(jnp.float32),
+               "dp", None, None, "tp")
+    bc = b_in.reshape(bsz, nc, q, g, n)
+    cc = c_in.reshape(bsz, nc, q, g, n)
+
+    da = dtc * a.astype(jnp.float32)                     # (B,nc,Q,H), negative
+    cum = jnp.cumsum(da, axis=2)                          # inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: y[i] = sum_{j<=i} (C_i.B_j) L_ij dt_j x_j
+    # bf16 operands + fp32 accumulation on every big einsum (MXU-native;
+    # the decay/softplus statistics stay fp32) — §Perf iter 4.
+    bf = jnp.bfloat16
+    cb = jnp.einsum("bcign,bcjgn->bcijg", cc.astype(bf), bc.astype(bf),
+                    preferred_element_type=jnp.float32)   # (B,nc,Qi,Qj,G)
+    cb = jnp.repeat(cb, rep, axis=4)                      # (B,nc,Qi,Qj,H)
+    m_mat = (cb * l_mat * dtc[:, :, None, :, :]).astype(bf)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m_mat, xc.astype(bf),
+                         preferred_element_type=jnp.float32)
+
+    # chunk-end states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    bg = jnp.repeat(bc, rep, axis=3).astype(jnp.float32)  # (B,nc,Q,H,N)
+    w_j = decay_end * dtc
+    states = jnp.einsum("bcjhn,bcjhp->bchpn",
+                        (bg * w_j[..., None]).astype(bf), xc.astype(bf),
+                        preferred_element_type=jnp.float32)  # (B,nc,H,P,N)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        dec, st_new = inp
+        out = carry
+        nxt = carry * dec[:, :, None, None] + st_new
+        return nxt, out
+
+    init = hint(jnp.zeros((bsz, h, p, n), jnp.float32), "dp", "tp", None, None)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,H,P,N)
+
+    cg = jnp.repeat(cc, rep, axis=3).astype(jnp.float32)  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp",
+                         (cg * jnp.exp(cum)[..., None]).astype(bf),
+                         prev_states.astype(bf),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, nc * q, h, p)[:, :s]
+    return y, final
+
+
+def apply_ssm(p: Params, x, cfg: SSMConfig, *, state: Params | None = None):
+    """Mamba2 mixer. x (B,S,D). Train/prefill when ``state`` is None; one-token
+    decode when state = {"cx","cb","cc" (conv windows), "ssm"}.
+    Returns (out (B,S,D), new_state)."""
+    bsz, s, d_model = x.shape
+    dm = dims(d_model, cfg)
+    d_in, h, gn = dm["d_in"], dm["n_heads"], dm["gn"]
+    g, n, pdim = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    z = x @ p["z_proj"].astype(x.dtype)
+    xr = x @ p["x_proj"].astype(x.dtype)                  # raw (pre-conv)
+    br = x @ p["b_proj"].astype(x.dtype)
+    cr = x @ p["c_proj"].astype(x.dtype)
+    dt_raw = x @ p["dt_proj"].astype(x.dtype)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if state is None:
+        xs = _causal_conv(xr, p["conv_x"], p["conv_bias_x"])
+        bs_ = _causal_conv(br, p["conv_b"], p["conv_bias_b"])
+        cs = _causal_conv(cr, p["conv_c"], p["conv_bias_c"])
+        # pin SSD heads to the TP axis through the chunked scan
+        xs = hint(xs.reshape(bsz, s, h, pdim), "dp", None, "tp", None)
+        b_in = bs_.reshape(bsz, s, g, n)
+        c_in = cs.reshape(bsz, s, g, n)
+        y, fin = ssd_chunked(xs, dt, b_in, c_in, a, chunk=cfg.chunk)
+        k = cfg.d_conv
+        tail = lambda u: jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):, :]
+        new_state = {"cx": tail(xr), "cb": tail(br), "cc": tail(cr), "ssm": fin}
+    else:
+        xs_t, ncx = _conv_step(xr[:, 0], state["cx"], p["conv_x"], p["conv_bias_x"])
+        b_t, ncb = _conv_step(br[:, 0], state["cb"], p["conv_b"], p["conv_bias_b"])
+        c_t, ncc = _conv_step(cr[:, 0], state["cc"], p["conv_c"], p["conv_bias_c"])
+        rep = h // g
+        xs0 = xs_t.reshape(bsz, h, pdim)
+        bg = jnp.repeat(b_t.reshape(bsz, g, n), rep, axis=1)   # (B,H,N)
+        cg = jnp.repeat(c_t.reshape(bsz, g, n), rep, axis=1)
+        da = jnp.exp(dt[:, 0] * a)                             # (B,H)
+        st = state["ssm"] * da[:, :, None, None] + \
+            (dt[:, 0, :, None] * xs0)[..., None] * bg[:, :, None, :]
+        y = jnp.einsum("bhn,bhpn->bhp", cg, st)[:, None]       # (B,1,H,P)
+        xs = xs0[:, None]                                      # for the skip
+        new_state = {"cx": ncx, "cb": ncb, "cc": ncc, "ssm": st}
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"])
+    return y @ p["out_proj"].astype(x.dtype), new_state
+
+
+def init_state(bsz: int, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> Params:
+    dm = dims(d_model, cfg)
+    return {
+        "cx": jnp.zeros((bsz, cfg.d_conv - 1, dm["d_in"]), dtype),
+        "cb": jnp.zeros((bsz, cfg.d_conv - 1, dm["gn"]), dtype),
+        "cc": jnp.zeros((bsz, cfg.d_conv - 1, dm["gn"]), dtype),
+        "ssm": jnp.zeros((bsz, dm["n_heads"], cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,451 @@
+"""Decoder-only transformer assembly for dense / moe / ssm / hybrid / vlm
+families.
+
+Layers are **scan-stacked**: parameters for homogeneous layer groups carry a
+leading layer axis and the forward pass is one `jax.lax.scan` over it, so the
+traced graph holds one layer body regardless of depth (compile-time and
+HLO-size control for the 40-cell dry-run). Heterogeneous interleavings
+(llama4's dense/MoE alternation, the VLM's every-5th cross-attention layer)
+scan over *super-blocks* containing one instance of each member.
+
+Three explicit drivers share the layer functions:
+  * ``forward_train``  — no cache I/O, remat-able, returns (logits, aux);
+  * ``prefill``        — builds the stacked KV/SSM cache, returns (logits, cache);
+  * ``decode``         — one-token step, cache in/out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (ACT_DTYPE, AttnSpec, Params, apply_mlp,
+                                 apply_norm, cross_attention, cross_kv,
+                                 dense_init, embed_tokens, init_attention,
+                                 init_embed, init_mlp, init_norm,
+                                 self_attention, split_keys, unembed)
+
+HYMBA_WINDOW = 1024     # sliding-window width for hybrid attention heads
+
+
+def attn_spec(cfg: ArchConfig, *, window: int | None = None,
+              causal: bool = True) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.resolved_head_dim, d_model=cfg.d_model,
+                    qk_norm=cfg.qk_norm, bias=cfg.attn_bias, causal=causal,
+                    window=window, rope_theta=cfg.rope_theta)
+
+
+# ------------------------------------------------------------ layer defs
+def init_self_layer(key, cfg: ArchConfig, *, use_moe: bool) -> Params:
+    ks = split_keys(key, 4)
+    p: Params = {
+        "ln1": init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": init_attention(ks[1], attn_spec(cfg)),
+        "ln2": init_norm(ks[2], cfg.d_model, cfg.norm),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(ks[3], cfg.d_model, cfg.moe)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp)
+    return p
+
+
+def apply_self_layer(p: Params, cfg: ArchConfig, x, positions, *,
+                     cache=None, use_moe: bool, window: int | None = None):
+    """Returns (x, kv {"k","v"}, aux)."""
+    spec = attn_spec(cfg, window=window)
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    att, kv = self_attention(p["attn"], spec, h, positions, cache=cache)
+    x = x + att
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    if use_moe:
+        out, aux = moe_lib.apply_moe(p["moe"], h, cfg.moe)
+    else:
+        out, aux = apply_mlp(p["mlp"], h, cfg.mlp), jnp.float32(0.0)
+    return x + out, kv, aux
+
+
+def init_ssm_layer(key, cfg: ArchConfig) -> Params:
+    ks = split_keys(key, 2)
+    return {"ln1": init_norm(ks[0], cfg.d_model, cfg.norm),
+            "ssm": ssm_lib.init_ssm(ks[1], cfg.d_model, cfg.ssm)}
+
+
+def apply_ssm_layer(p: Params, cfg: ArchConfig, x, *, state=None):
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    out, new_state = ssm_lib.apply_ssm(p["ssm"], h, cfg.ssm, state=state)
+    return x + out, new_state
+
+
+def init_hybrid_layer(key, cfg: ArchConfig) -> Params:
+    """Hymba: parallel attention + SSM heads fused by per-branch norms."""
+    ks = split_keys(key, 7)
+    return {
+        "ln1": init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": init_attention(ks[1], attn_spec(cfg, window=HYMBA_WINDOW)),
+        "ssm": ssm_lib.init_ssm(ks[2], cfg.d_model, cfg.ssm),
+        "na": init_norm(ks[3], cfg.d_model, cfg.norm),
+        "ns": init_norm(ks[4], cfg.d_model, cfg.norm),
+        "ln2": init_norm(ks[5], cfg.d_model, cfg.norm),
+        "mlp": init_mlp(ks[6], cfg.d_model, cfg.d_ff, cfg.mlp),
+    }
+
+
+def apply_hybrid_layer(p: Params, cfg: ArchConfig, x, positions, *,
+                       cache=None, state=None):
+    spec = attn_spec(cfg, window=HYMBA_WINDOW)
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    att, kv = self_attention(p["attn"], spec, h, positions, cache=cache)
+    ssm_out, new_state = ssm_lib.apply_ssm(p["ssm"], h, cfg.ssm, state=state)
+    fused = 0.5 * (apply_norm(p["na"], att, cfg.norm, cfg.norm_eps)
+                   + apply_norm(p["ns"], ssm_out, cfg.norm, cfg.norm_eps))
+    x = x + fused
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, cfg.mlp), kv, new_state
+
+
+def init_cross_layer(key, cfg: ArchConfig) -> Params:
+    """Gated vision cross-attention layer (llama-3.2-vision style)."""
+    ks = split_keys(key, 4)
+    return {
+        "ln1": init_norm(ks[0], cfg.d_model, cfg.norm),
+        "xattn": init_attention(ks[1], attn_spec(cfg, causal=False)),
+        "gate_a": jnp.zeros((), jnp.float32),
+        "ln2": init_norm(ks[2], cfg.d_model, cfg.norm),
+        "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp),
+        "gate_m": jnp.zeros((), jnp.float32),
+    }
+
+
+def apply_cross_layer(p: Params, cfg: ArchConfig, x, *, kv_src=None, k=None, v=None):
+    spec = attn_spec(cfg, causal=False)
+    h = apply_norm(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    att = cross_attention(p["xattn"], spec, h, kv_src, k=k, v=v)
+    x = x + jnp.tanh(p["gate_a"]).astype(x.dtype) * att
+    h = apply_norm(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + jnp.tanh(p["gate_m"]).astype(x.dtype) * apply_mlp(p["mlp"], h, cfg.mlp)
+
+
+# ----------------------------------------------------------- param assembly
+def _stacked(init_fn, key, n: int):
+    """vmap the per-layer init over n keys -> leading layer axis on leaves."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def n_blocks(cfg: ArchConfig) -> int:
+    if cfg.family == "moe" and cfg.moe.every > 1:
+        return cfg.n_layers // cfg.moe.every
+    if cfg.family == "vlm":
+        return cfg.n_layers // cfg.cross_attn_every
+    return cfg.n_layers
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ks = split_keys(key, 4)
+    p: Params = {"embed": init_embed(ks[0], cfg.vocab_size, cfg.d_model,
+                                     cfg.tie_embeddings),
+                 "final_norm": init_norm(ks[1], cfg.d_model, cfg.norm)}
+    fam = cfg.family
+    if fam == "dense":
+        p["layers"] = _stacked(lambda k: init_self_layer(k, cfg, use_moe=False),
+                               ks[2], cfg.n_layers)
+    elif fam == "moe" and cfg.moe.every == 1:
+        p["layers"] = _stacked(lambda k: init_self_layer(k, cfg, use_moe=True),
+                               ks[2], cfg.n_layers)
+    elif fam == "moe":
+        every = cfg.moe.every
+        p["layers"] = _stacked(
+            lambda k: {
+                "dense": jax.vmap(
+                    lambda kk: init_self_layer(kk, cfg, use_moe=False))(
+                        jax.random.split(k, every - 1)),
+                "moe": init_self_layer(jax.random.fold_in(k, 1), cfg,
+                                       use_moe=True),
+            }, ks[2], n_blocks(cfg))
+    elif fam == "ssm":
+        p["layers"] = _stacked(lambda k: init_ssm_layer(k, cfg), ks[2],
+                               cfg.n_layers)
+    elif fam == "hybrid":
+        p["layers"] = _stacked(lambda k: init_hybrid_layer(k, cfg), ks[2],
+                               cfg.n_layers)
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        p["layers"] = _stacked(
+            lambda k: {
+                "self": jax.vmap(
+                    lambda kk: init_self_layer(kk, cfg, use_moe=False))(
+                        jax.random.split(k, every - 1)),
+                "cross": init_cross_layer(jax.random.fold_in(k, 1), cfg),
+            }, ks[2], n_blocks(cfg))
+        p["vis_proj"] = dense_init(ks[3], (cfg.vision_dim, cfg.d_model))
+    else:
+        raise ValueError(f"family {fam} is handled by models.audio")
+    return p
+
+
+def _positions(bsz, s, pos0=None):
+    base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+    return base if pos0 is None else base + pos0[None, None]
+
+
+def _kvc(kv_stackslice, pos0):
+    return {"k": kv_stackslice["k"], "v": kv_stackslice["v"], "pos": pos0}
+
+
+# --------------------------------------------------------------- train
+def forward_train(params: Params, cfg: ArchConfig, tokens, *, extra=None,
+                  remat: bool = True, return_hidden: bool = False):
+    """(B,S) tokens -> (logits (B,S,V), aux loss). No cache I/O.
+    ``return_hidden`` swaps logits for final-norm hidden states (B,S,D) —
+    the embedding trunk that feeds ProMiSH."""
+    bsz, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    positions = _positions(bsz, s)
+    fam = cfg.family
+    aux0 = jnp.float32(0.0)
+
+    if fam == "vlm":
+        vis = extra["patches"].astype(ACT_DTYPE) @ params["vis_proj"].astype(ACT_DTYPE)
+
+    if fam == "dense" or (fam == "moe" and cfg.moe.every == 1):
+        use_moe = fam == "moe"
+
+        def body(carry, p_l):
+            x, aux = carry
+            x, _, a = apply_self_layer(p_l, cfg, x, positions, use_moe=use_moe)
+            return (x, aux + a), None
+    elif fam == "moe":
+        def body(carry, p_b):
+            x, aux = carry
+
+            def inner(c, p_d):
+                xx, aa = c
+                xx, _, a = apply_self_layer(p_d, cfg, xx, positions, use_moe=False)
+                return (xx, aa + a), None
+
+            (x, aux), _ = jax.lax.scan(inner, (x, aux), p_b["dense"])
+            x, _, a = apply_self_layer(p_b["moe"], cfg, x, positions, use_moe=True)
+            return (x, aux + a), None
+    elif fam == "ssm":
+        def body(carry, p_l):
+            x, aux = carry
+            x, _ = apply_ssm_layer(p_l, cfg, x)
+            return (x, aux), None
+    elif fam == "hybrid":
+        def body(carry, p_l):
+            x, aux = carry
+            x, _, _ = apply_hybrid_layer(p_l, cfg, x, positions)
+            return (x, aux), None
+    elif fam == "vlm":
+        def body(carry, p_b):
+            x, aux = carry
+
+            def inner(xx, p_d):
+                xx, _, _ = apply_self_layer(p_d, cfg, xx, positions, use_moe=False)
+                return xx, None
+
+            x, _ = jax.lax.scan(inner, x, p_b["self"])
+            x = apply_cross_layer(p_b["cross"], cfg, x, kv_src=vis)
+            return (x, aux), None
+    else:
+        raise ValueError(fam)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    return unembed(params["embed"], x, cfg.vocab_size), aux
+
+
+# --------------------------------------------------------------- prefill
+def prefill(params: Params, cfg: ArchConfig, tokens, *, extra=None,
+            max_seq: int | None = None):
+    """Builds the serving cache. Returns (last-token logits (B,V), cache).
+
+    The KV cache is allocated at ``max_seq`` (>= S) so subsequent decode
+    steps update it in place.
+    """
+    bsz, s = tokens.shape
+    max_seq = s if max_seq is None else max_seq
+    x = embed_tokens(params["embed"], tokens)
+    positions = _positions(bsz, s)
+    fam = cfg.family
+    pad = max_seq - s
+
+    def pad_kv(kv):
+        return jax.tree.map(
+            lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))), kv)
+
+    if fam == "vlm":
+        vis = extra["patches"].astype(ACT_DTYPE) @ params["vis_proj"].astype(ACT_DTYPE)
+        spec = attn_spec(cfg, causal=False)
+
+    if fam == "dense" or (fam == "moe" and cfg.moe.every == 1):
+        use_moe = fam == "moe"
+
+        def body(x, p_l):
+            x, kv, _ = apply_self_layer(p_l, cfg, x, positions, use_moe=use_moe)
+            return x, pad_kv(kv)
+
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        cache_layers = kvs
+    elif fam == "moe":
+        def body(x, p_b):
+            def inner(xx, p_d):
+                xx, kv, _ = apply_self_layer(p_d, cfg, xx, positions, use_moe=False)
+                return xx, pad_kv(kv)
+
+            x, kv_dense = jax.lax.scan(inner, x, p_b["dense"])
+            x, kv_moe, _ = apply_self_layer(p_b["moe"], cfg, x, positions,
+                                            use_moe=True)
+            return x, {"dense": kv_dense, "moe": pad_kv(kv_moe)}
+
+        x, cache_layers = jax.lax.scan(body, x, params["layers"])
+    elif fam == "ssm":
+        def body(x, p_l):
+            x, st = apply_ssm_layer(p_l, cfg, x)
+            return x, st
+
+        x, cache_layers = jax.lax.scan(body, x, params["layers"])
+    elif fam == "hybrid":
+        def body(x, p_l):
+            x, kv, st = apply_hybrid_layer(p_l, cfg, x, positions)
+            return x, {**pad_kv(kv), "state": st}
+
+        x, cache_layers = jax.lax.scan(body, x, params["layers"])
+    elif fam == "vlm":
+        def body(x, p_b):
+            def inner(xx, p_d):
+                xx, kv, _ = apply_self_layer(p_d, cfg, xx, positions, use_moe=False)
+                return xx, pad_kv(kv)
+
+            x, kv_self = jax.lax.scan(inner, x, p_b["self"])
+            xk, xv = cross_kv(p_b["cross"]["xattn"], spec, vis)
+            x = apply_cross_layer(p_b["cross"], cfg, x, k=xk, v=xv)
+            return x, {"self": kv_self, "xk": xk, "xv": xv}
+
+        x, cache_layers = jax.lax.scan(body, x, params["layers"])
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1:, :], cfg.vocab_size)[:, 0, :]
+    cache = {"layers": cache_layers, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+# --------------------------------------------------------------- decode
+def decode(params: Params, cfg: ArchConfig, cache: Params, tokens):
+    """One serving step: tokens (B,1) -> (logits (B,V), updated cache)."""
+    bsz, s = tokens.shape
+    pos0 = cache["pos"]
+    x = embed_tokens(params["embed"], tokens)
+    positions = _positions(bsz, s, pos0)
+    fam = cfg.family
+
+    if fam == "dense" or (fam == "moe" and cfg.moe.every == 1):
+        use_moe = fam == "moe"
+
+        def body(x, inp):
+            p_l, kv = inp
+            x, nkv, _ = apply_self_layer(p_l, cfg, x, positions,
+                                         cache=_kvc(kv, pos0), use_moe=use_moe)
+            return x, nkv
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    elif fam == "moe":
+        def body(x, inp):
+            p_b, kv_b = inp
+
+            def inner(xx, pin):
+                p_d, kv_d = pin
+                xx, nkv, _ = apply_self_layer(p_d, cfg, xx, positions,
+                                              cache=_kvc(kv_d, pos0),
+                                              use_moe=False)
+                return xx, nkv
+
+            x, nkv_dense = jax.lax.scan(inner, x, (p_b["dense"], kv_b["dense"]))
+            x, nkv_moe, _ = apply_self_layer(p_b["moe"], cfg, x, positions,
+                                             cache=_kvc(kv_b["moe"], pos0),
+                                             use_moe=True)
+            return x, {"dense": nkv_dense, "moe": nkv_moe}
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    elif fam == "ssm":
+        def body(x, inp):
+            p_l, st = inp
+            x, nst = apply_ssm_layer(p_l, cfg, x, state=st)
+            return x, nst
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    elif fam == "hybrid":
+        def body(x, inp):
+            p_l, c_l = inp
+            st = c_l["state"]
+            x, nkv, nst = apply_hybrid_layer(p_l, cfg, x, positions,
+                                             cache=_kvc(c_l, pos0), state=st)
+            return x, {**nkv, "state": nst}
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    elif fam == "vlm":
+        def body(x, inp):
+            p_b, c_b = inp
+
+            def inner(xx, pin):
+                p_d, kv_d = pin
+                xx, nkv, _ = apply_self_layer(p_d, cfg, xx, positions,
+                                              cache=_kvc(kv_d, pos0),
+                                              use_moe=False)
+                return xx, nkv
+
+            x, nkv_self = jax.lax.scan(inner, x, (p_b["self"], c_b["self"]))
+            x = apply_cross_layer(p_b["cross"], cfg, x, k=c_b["xk"], v=c_b["xv"])
+            return x, {"self": nkv_self, "xk": c_b["xk"], "xv": c_b["xv"]}
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.vocab_size)[:, -1, :]
+    return logits, {"layers": new_layers, "pos": pos0 + s}
+
+
+# --------------------------------------------------------------- cache init
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=ACT_DTYPE) -> Params:
+    """Empty decode cache (used when lowering decode_* cells directly)."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    fam = cfg.family
+    kv_shape = (batch, max_seq, kv, hd)
+
+    def kv_stack(n, extra_lead=()):
+        return {"k": jnp.zeros((n, *extra_lead, *kv_shape), dtype),
+                "v": jnp.zeros((n, *extra_lead, *kv_shape), dtype)}
+
+    if fam == "dense" or (fam == "moe" and cfg.moe.every == 1):
+        layers = kv_stack(cfg.n_layers)
+    elif fam == "moe":
+        nb, every = n_blocks(cfg), cfg.moe.every
+        layers = {"dense": kv_stack(nb, (every - 1,)), "moe": kv_stack(nb)}
+    elif fam == "ssm":
+        st = ssm_lib.init_state(batch, cfg.d_model, cfg.ssm)
+        layers = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), st)
+    elif fam == "hybrid":
+        st = ssm_lib.init_state(batch, cfg.d_model, cfg.ssm)
+        layers = {**kv_stack(cfg.n_layers),
+                  "state": jax.tree.map(
+                      lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), st)}
+    elif fam == "vlm":
+        nb, every = n_blocks(cfg), cfg.cross_attn_every
+        layers = {"self": kv_stack(nb, (every - 1,)),
+                  "xk": jnp.zeros((nb, batch, cfg.vision_tokens, kv, hd), dtype),
+                  "xv": jnp.zeros((nb, batch, cfg.vision_tokens, kv, hd), dtype)}
+    else:
+        raise ValueError(fam)
+    return {"layers": layers, "pos": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,2 @@
+"""repro.serve — batched NKS serving engine."""
+from repro.serve.engine import NKSEngine  # noqa: F401

@@ -1,0 +1,88 @@
+"""Batched NKS serving engine.
+
+Production shape: a frontend batches keyword-set queries; the engine answers
+from a ProMiSH index over an embedding corpus. Three quality/latency tiers:
+
+  * ``exact``   — ProMiSH-E (100% accuracy, Lemma-2 guarantee);
+  * ``approx``  — ProMiSH-A (the paper's fast tier);
+  * ``device``  — the anchor-star device kernel (repro.core.distributed),
+                  batched and shardable over the mesh; used when the corpus
+                  is sharded across chips.
+
+The corpus can be ingested directly (points + keywords) or produced by any
+assigned architecture through ``ingest_embeddings`` (models.api.embed ->
+ProMiSH points — the paper's Flickr use case with learned features).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import promish_a, promish_e
+from repro.core.distributed import nks_anchor_topk, pack_groups
+from repro.core.index import PromishIndex, build_index
+from repro.core.types import Candidate, KeywordDataset, make_dataset
+
+
+@dataclasses.dataclass
+class QueryResult:
+    query: list[int]
+    candidates: list[Candidate]
+    latency_s: float
+    tier: str
+
+
+class NKSEngine:
+    def __init__(self, dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
+                 seed: int = 0, build_exact: bool = True, build_approx: bool = True):
+        self.dataset = dataset
+        self.index_e: PromishIndex | None = None
+        self.index_a: PromishIndex | None = None
+        if build_exact:
+            self.index_e = build_index(dataset, m=m, n_scales=n_scales,
+                                       exact=True, seed=seed)
+        if build_approx:
+            self.index_a = build_index(dataset, m=m, n_scales=n_scales,
+                                       exact=False, seed=seed)
+
+    @classmethod
+    def ingest_embeddings(cls, api, params, batches: Sequence[dict],
+                          keywords: Sequence[Sequence[int]], **kw) -> "NKSEngine":
+        """Build the corpus from model embeddings (any assigned arch)."""
+        import jax.numpy as jnp
+        embs = [np.asarray(api.embed(params, b), np.float32) for b in batches]
+        points = np.concatenate(embs, axis=0)
+        return cls(make_dataset(points, keywords), **kw)
+
+    def query(self, keywords: Sequence[int], k: int = 1,
+              tier: str = "approx") -> QueryResult:
+        t0 = time.perf_counter()
+        if tier == "exact":
+            pq = promish_e.search(self.dataset, self.index_e, keywords, k=k)
+        elif tier == "approx":
+            pq = promish_a.search(self.dataset, self.index_a, keywords, k=k)
+        elif tier == "device":
+            import jax.numpy as jnp
+            groups, mask, ids = pack_groups(self.dataset, list(keywords))
+            diams, cids = nks_anchor_topk(jnp.asarray(groups),
+                                          jnp.asarray(mask),
+                                          jnp.asarray(ids), k)
+            cands = []
+            for i in range(k):
+                if not np.isfinite(float(diams[i])):
+                    continue
+                ids_i = tuple(sorted(set(int(x) for x in cids[i])))
+                cands.append(Candidate(ids=ids_i, diameter=float(diams[i])))
+            return QueryResult(list(keywords), cands,
+                               time.perf_counter() - t0, tier)
+        else:
+            raise ValueError(tier)
+        return QueryResult(list(keywords), pq.items,
+                           time.perf_counter() - t0, tier)
+
+    def query_batch(self, queries: Sequence[Sequence[int]], k: int = 1,
+                    tier: str = "approx") -> list[QueryResult]:
+        return [self.query(q, k=k, tier=tier) for q in queries]

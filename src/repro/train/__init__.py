@@ -1,0 +1,3 @@
+"""repro.train — optimizer, schedules, grad compression, PP, train loop."""
+from repro.train.optimizer import (OptimizerConfig, adamw_update,  # noqa: F401
+                                   init_opt_state, lr_at)

@@ -1,0 +1,74 @@
+"""Int8 error-feedback gradient compression for the slow (inter-pod) axis.
+
+The DP gradient all-reduce over the pod axis crosses DCN/optical links an
+order of magnitude slower than intra-pod ICI. We compress it 4x: per-leaf
+symmetric int8 quantisation with an **error-feedback** buffer (Seide et al.;
+EF-SGD) so quantisation error is re-injected next step instead of lost —
+keeps convergence unbiased to first order.
+
+Two entry points:
+  * ``ef_compress`` / residual math — pure, testable anywhere;
+  * ``compressed_psum`` — the shard_map form: quantise, ``psum`` the int8
+    payload (as int32 partial sums), dequantise the mean. Use inside
+    ``shard_map`` over the "pod" axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(g):
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress(grads, error_buf):
+    """Error-feedback quantisation of a gradient pytree.
+
+    Returns (dequantised grads, new error buffer). ``error_buf`` pytree
+    matches grads (fp32); pass zeros on step 0.
+    """
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), (g32 - deq)
+
+    out = jax.tree.map(leaf, grads, error_buf)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+def init_error_buf(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, error_buf, axis_name: str):
+    """shard_map body: int8-compressed mean-all-reduce over ``axis_name``.
+
+    Wire-honest for the small pod counts this axis has (2-8): each
+    participant quantises (with error feedback) and **all_gathers the int8
+    payload** plus one fp32 scale per leaf — 1 byte/element/peer on the wire
+    vs 4 for an fp32 ring; dequantise + mean happen locally, so the result is
+    exactly mean_p(q_p * scale_p) on every shard.
+    """
+    p = jax.lax.psum(1, axis_name)
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        new_err = g32 - q.astype(jnp.float32) * scale
+        q_all = jax.lax.all_gather(q, axis_name)              # (P, ...) int8
+        s_all = jax.lax.all_gather(scale, axis_name)          # (P,)   fp32
+        deq = q_all.astype(jnp.float32) * s_all.reshape(
+            (-1,) + (1,) * q.ndim)
+        return (deq.sum(axis=0) / p).astype(g.dtype), new_err
+
+    out = jax.tree.map(leaf, grads, error_buf)
+    red = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return red, err

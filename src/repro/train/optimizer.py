@@ -1,0 +1,94 @@
+"""AdamW with WSD / cosine schedules, global-norm clipping, and configurable
+optimizer-state dtypes.
+
+State-dtype note (large-arch memory): fp32 m/v costs 8 bytes/param — at
+llama4-maverick scale (~400B params) that alone is 3.2 TB. ``state_dtype=
+bfloat16`` halves it with negligible quality impact at these batch sizes
+(error feedback lives in the momenta); DESIGN.md records this as the default
+for >=90B archs.
+
+WSD (Warmup-Stable-Decay) is the minicpm schedule: linear warmup -> flat
+stable phase -> short 1-sqrt decay tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    decay_frac: float = 0.1          # WSD: fraction of steps in the decay tail
+    schedule: str = "cosine"         # "cosine" | "wsd"
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"     # "float32" | "bfloat16"
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    """Schedule value at ``step`` (jit-safe)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "wsd":
+        decay_steps = jnp.maximum(cfg.total_steps * cfg.decay_frac, 1.0)
+        decay_start = cfg.total_steps - decay_steps
+        in_decay = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * jnp.sqrt(in_decay)
+    else:
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.peak_lr * warm * decay
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptimizerConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g * g * (1 - cfg.b2)
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,3 @@
+"""Small shared utilities (timing, PRNG helpers, CSR helpers)."""
+from repro.utils.csr import CSR, csr_from_lists, invert_csr  # noqa: F401
+from repro.utils.timing import Timer  # noqa: F401

@@ -1,0 +1,29 @@
+"""Wall-clock timing helper used by the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+
+class Timer:
+    """Context manager measuring elapsed seconds; repeats-aware helpers."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.t0
+        return False
+
+
+def bench(fn, *args, repeats: int = 3, warmup: int = 1, **kwargs) -> float:
+    """Return median seconds per call."""
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: XLA_FLAGS device-count forcing is deliberately NOT
+set here — smoke tests and benchmarks must see the real single CPU device;
+only launch/dryrun.py forces 512 placeholder devices (in its own process)."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import synthetic_dataset
+from repro.data.flickr_like import flickr_like_dataset
+
+
+@pytest.fixture(scope="session")
+def small_synth():
+    """Small uniform dataset: exhaustive oracle is feasible."""
+    return synthetic_dataset(n=300, d=8, u=12, t=2, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_flickr():
+    return flickr_like_dataset(n=400, d=16, u=40, t=4, seed=3)
+
+
+@pytest.fixture(scope="session")
+def med_synth():
+    return synthetic_dataset(n=5_000, d=16, u=60, t=2, seed=11)

@@ -1,0 +1,84 @@
+"""The assigned architecture numbers, verbatim from the assignment table."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import supported_cells
+
+EXPECT = {
+    "minicpm-2b": dict(n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+                       d_ff=5760, vocab_size=122_753, schedule="wsd"),
+    "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+                      d_ff=25_600, vocab_size=151_936, qk_norm=True),
+    "codeqwen1.5-7b": dict(n_layers=32, d_model=4096, n_heads=32,
+                           n_kv_heads=32, d_ff=13_440, vocab_size=92_416,
+                           attn_bias=True),
+    "starcoder2-7b": dict(n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+                          d_ff=18_432, vocab_size=49_152),
+    "mamba2-2.7b": dict(n_layers=64, d_model=2560, vocab_size=50_280,
+                        family="ssm"),
+    "olmoe-1b-7b": dict(n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+                        d_ff=1024, vocab_size=50_304),
+    "llama4-maverick-400b-a17b": dict(n_layers=48, d_model=5120, n_heads=40,
+                                      n_kv_heads=8, vocab_size=202_048),
+    "hymba-1.5b": dict(n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+                       d_ff=5504, vocab_size=32_001, hybrid=True),
+    "llama-3.2-vision-90b": dict(n_layers=100, d_model=8192, n_heads=64,
+                                 n_kv_heads=8, d_ff=28_672,
+                                 vocab_size=128_256, cross_attn_every=5),
+    "whisper-large-v3": dict(n_layers=32, d_model=1280, n_heads=20,
+                             n_kv_heads=20, d_ff=5120, vocab_size=51_866,
+                             enc_layers=32),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCH_IDS) == 10
+    assert set(EXPECT) == set(ARCH_IDS)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECT))
+def test_exact_assignment_numbers(arch):
+    cfg = get_config(arch)
+    for field, want in EXPECT[arch].items():
+        assert getattr(cfg, field) == want, f"{arch}.{field}"
+
+
+def test_ssm_state_sizes():
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+    assert get_config("hymba-1.5b").ssm.d_state == 16
+
+
+def test_moe_shapes():
+    o = get_config("olmoe-1b-7b").moe
+    assert (o.n_experts, o.top_k, o.d_ff_expert) == (64, 8, 1024)
+    l4 = get_config("llama4-maverick-400b-a17b").moe
+    assert (l4.n_experts, l4.top_k, l4.d_ff_expert) == (128, 1, 8192)
+    assert l4.shared_expert
+
+
+def test_llama4_total_and_active_params():
+    """~400B total / ~17B active per the model card."""
+    from repro.models.api import active_params, count_params
+    cfg = get_config("llama4-maverick-400b-a17b")
+    total = count_params(cfg)
+    active = active_params(cfg)
+    assert 3.5e11 < total < 4.5e11, total
+    assert 1.2e10 < active < 2.2e10, active
+
+
+def test_long_500k_only_for_subquadratic():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        names = [c.name for c in supported_cells(cfg)]
+        if arch in ("mamba2-2.7b", "hymba-1.5b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(names)
+
+
+def test_vision_and_audio_stubs():
+    v = get_config("llama-3.2-vision-90b")
+    assert v.vision_tokens == 1601 and v.vision_dim == 7680
+    a = get_config("whisper-large-v3")
+    assert a.audio_frames == 1500

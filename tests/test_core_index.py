@@ -1,0 +1,102 @@
+"""Unit tests for projections, signatures, CSR and index build."""
+import numpy as np
+import pytest
+
+from repro.core import projection as proj
+from repro.core import signatures as sig
+from repro.core.index import build_index
+from repro.utils.csr import CSR, csr_from_lists, csr_from_pairs, invert_csr
+
+
+def test_unit_vectors_are_unit():
+    rng = np.random.default_rng(0)
+    z = proj.sample_unit_vectors(rng, 4, 33)
+    np.testing.assert_allclose(np.linalg.norm(z, axis=1), 1.0, atol=1e-5)
+
+
+def test_projection_contracts_distances():
+    """Lemma 1: |z.o1 - z.o2| <= ||o1 - o2||."""
+    rng = np.random.default_rng(1)
+    pts = rng.standard_normal((50, 12)).astype(np.float32)
+    z = proj.sample_unit_vectors(rng, 8, 12)
+    p = proj.project(pts, z)
+    for _ in range(200):
+        i, j = rng.integers(0, 50, 2)
+        lhs = np.abs(p[i] - p[j]).max()
+        rhs = np.linalg.norm(pts[i] - pts[j])
+        assert lhs <= rhs + 1e-4
+
+
+def test_overlapping_bins_dual_keys():
+    p = np.array([[0.4], [0.6], [1.1]], dtype=np.float32)
+    keys = proj.bin_keys_overlapping(p, w=1.0, c=100)
+    # h1 = floor(p), h2 = floor(p - 0.5) + 100
+    np.testing.assert_array_equal(keys[:, 0, 0], [0, 0, 1])
+    np.testing.assert_array_equal(keys[:, 0, 1], [99, 100, 100])
+
+
+def test_signature_cartesian_product():
+    keys2 = np.array([[[1, 2], [3, 4]]])          # one point, m=2
+    sigs = sig.signatures_overlapping(keys2)
+    assert sigs.shape == (1, 4, 2)
+    got = {tuple(s) for s in sigs[0]}
+    assert got == {(1, 3), (2, 3), (1, 4), (2, 4)}
+
+
+def test_hash_range_and_determinism():
+    rng = np.random.default_rng(2)
+    sigs = rng.integers(-1000, 1000, size=(100, 3)).astype(np.int64)
+    b1 = sig.hash_signatures(sigs, 128)
+    b2 = sig.hash_signatures(sigs, 128)
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.min() >= 0 and b1.max() < 128
+
+
+def test_csr_roundtrip_and_invert():
+    lists = [[3, 1], [], [2, 2, 0]]
+    csr = csr_from_lists(lists)
+    assert csr.n_rows == 3
+    np.testing.assert_array_equal(csr.row(0), [3, 1])
+    np.testing.assert_array_equal(csr.row(1), [])
+    inv = invert_csr(csr, 4)
+    np.testing.assert_array_equal(inv.row(2), [2, 2])
+    np.testing.assert_array_equal(inv.row(3), [0])
+
+
+def test_csr_from_pairs_dedup():
+    rows = np.array([1, 1, 0, 1])
+    vals = np.array([5, 5, 2, 7])
+    csr = csr_from_pairs(rows, vals, 2, dedup=True)
+    np.testing.assert_array_equal(np.sort(csr.row(1)), [5, 7])
+
+
+def test_index_build_shapes(small_synth):
+    idx = build_index(small_synth, m=2, n_scales=4, exact=True, seed=0)
+    assert len(idx.structures) == 4
+    for s, hi in enumerate(idx.structures):
+        assert hi.width == pytest.approx(idx.w0 * 2 ** s)
+        # every point appears in >=1 and <= 2^m buckets
+        assert hi.table.nnz >= small_synth.n
+        assert hi.table.nnz <= small_synth.n * 4
+        # khb covers every keyword that exists
+        for v in range(small_synth.n_keywords):
+            if len(small_synth.ikp.row(v)):
+                assert hi.khb.row_len(v) > 0
+
+
+def test_index_every_point_hashed_every_scale(small_synth):
+    idx = build_index(small_synth, m=2, n_scales=3, exact=True, seed=1)
+    for hi in idx.structures:
+        present = np.unique(hi.table.values)
+        assert len(present) == small_synth.n
+
+
+def test_approx_index_single_bucket_per_point(small_synth):
+    idx = build_index(small_synth, m=2, n_scales=3, exact=False, seed=1)
+    for hi in idx.structures:
+        assert hi.table.nnz == small_synth.n
+
+
+def test_num_scales_eq3():
+    assert proj.num_scales(32.0, 1.0) == 5
+    assert proj.num_scales(33.0, 1.0) == 6

@@ -1,0 +1,34 @@
+"""§IX disk extension: save/load round-trip; mmap'd queries == in-memory."""
+import numpy as np
+
+from repro.core import brute_force, promish_e
+from repro.core.disk import load_index, save_index
+from repro.core.index import build_index
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+
+def test_disk_roundtrip_query_equivalence(tmp_path):
+    ds = synthetic_dataset(n=400, d=8, u=20, t=2, seed=3)
+    idx = build_index(ds, m=2, n_scales=4, exact=True, seed=1)
+    save_index(str(tmp_path / "ix"), ds, idx)
+    ds2, idx2 = load_index(str(tmp_path / "ix"), mmap=True)
+
+    assert ds2.n == ds.n and ds2.dim == ds.dim
+    np.testing.assert_array_equal(np.asarray(ds2.points), ds.points)
+    for query in random_queries(ds, 3, 4, seed=7):
+        mem = promish_e.search(ds, idx, query, k=2)
+        dsk = promish_e.search(ds2, idx2, query, k=2)
+        truth = brute_force.search(ds, query, k=2)
+        np.testing.assert_allclose([c.diameter for c in dsk.items],
+                                   [c.diameter for c in mem.items], rtol=1e-6)
+        np.testing.assert_allclose([c.diameter for c in dsk.items],
+                                   [c.diameter for c in truth.items], rtol=1e-4)
+
+
+def test_disk_is_mmapped(tmp_path):
+    ds = synthetic_dataset(n=100, d=4, u=10, t=1, seed=0)
+    idx = build_index(ds, m=2, n_scales=3, exact=False, seed=0)
+    save_index(str(tmp_path / "ix"), ds, idx)
+    ds2, idx2 = load_index(str(tmp_path / "ix"), mmap=True)
+    assert isinstance(ds2.points, np.memmap)
+    assert isinstance(idx2.structures[0].table.values, np.memmap)

@@ -1,0 +1,83 @@
+"""Unit tests for the HLO census — the §Roofline measurement backbone."""
+import textwrap
+
+from repro.launch.hlo_census import census, dot_flops, parse_hlo
+
+HLO = textwrap.dedent("""
+HloModule test
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[32,128,128]{2,1,0} parameter(1)
+  %wslice = f32[1,128,128]{2,1,0} dynamic-slice(%w, %i), dynamic_slice_sizes={1,128,128}
+  %wmat = f32[128,128]{1,0} bitcast(%wslice)
+  %y = f32[8,128]{1,0} dot(%x, %wmat), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %red = f32[8,128]{1,0} all-reduce(%y), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %inext = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]{1,0}) tuple(%inext, %red)
+}
+
+%cond (pc: (s32[], f32[8,128])) -> pred[] {
+  %pc = (s32[], f32[8,128]{1,0}) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(32)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x0: f32[8,128]) -> (s32[], f32[8,128]) {
+  %x0 = f32[8,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]{1,0}) tuple(%zero, %x0)
+  ROOT %loop = (s32[], f32[8,128]{1,0}) while(%init), condition=%cond, body=%body
+}
+""")
+
+
+def test_parse_finds_computations():
+    comps = parse_hlo(HLO)
+    assert "body" in comps and "cond" in comps and "main" in comps
+
+
+def test_trip_count_from_condition_constant():
+    out = census(HLO)
+    # dot: 2 * 8*128 * 128 flops, x32 trips
+    assert out["dot_flops_scaled"] == 2 * 8 * 128 * 128 * 32
+
+
+def test_collective_bytes_scaled_by_trips():
+    out = census(HLO)
+    # all-reduce result f32[8,128] = 4096 bytes, x32
+    assert out["bytes_scaled"]["all-reduce"] == 8 * 128 * 4 * 32
+    assert out["bytes_raw"]["all-reduce"] == 8 * 128 * 4
+
+
+def test_dot_flops_uses_contracting_dims():
+    comps = parse_hlo(HLO)
+    assert dot_flops(comps["body"]) == 2 * 8 * 128 * 128
+
+
+def test_fallback_trip_count_from_dynamic_slice():
+    # strip the condition constant -> falls back to ds leading dim (32)
+    hlo2 = HLO.replace("%n = s32[] constant(32)", "%n = s32[] parameter(1)")
+    out = census(hlo2)
+    assert out["dot_flops_scaled"] == 2 * 8 * 128 * 128 * 32
+
+
+def test_out_bytes_excludes_bookkeeping():
+    comps = parse_hlo(HLO)
+    body = comps["body"]
+    # parameter/GTE/tuple/bitcast excluded; ds+dot+all-reduce+add counted
+    expected = (1 * 128 * 128 * 4      # dynamic-slice
+                + 8 * 128 * 4          # dot
+                + 8 * 128 * 4          # all-reduce
+                + 4)                   # inext add (s32[])
+    assert body.out_bytes == expected

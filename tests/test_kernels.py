@@ -1,0 +1,135 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracles,
+swept over shapes (incl. non-multiple-of-block tails) and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES_MN = [(8, 8, 4), (128, 128, 16), (130, 70, 33), (257, 129, 64), (64, 300, 8)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,n,d", SHAPES_MN)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pairwise_l2_join_matches_ref(m, n, d, dtype):
+    key = jax.random.PRNGKey(m * 1000 + n)
+    a = jax.random.normal(key, (m, d), dtype=dtype) * 10
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, d), dtype=dtype) * 10
+    r = 15.0
+    sq, cnt = ops.pairwise_l2_join(a, b, r, bm=64, bn=64, interpret=True)
+    sq_ref, cnt_ref = ref.pairwise_l2_join_ref(a, b, r)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-1
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_ref), rtol=tol, atol=tol)
+    # counts can differ by boundary ties under bf16 rounding; exact for fp32
+    if dtype == jnp.float32:
+        assert int(cnt.sum()) == int(cnt_ref)
+
+
+def test_pairwise_l2_join_count_blocks_sum():
+    key = jax.random.PRNGKey(7)
+    a = jax.random.normal(key, (200, 12)) * 5
+    sq, cnt = ops.pairwise_l2_join(a, a, 4.0, bm=64, bn=64, interpret=True)
+    assert cnt.shape == (4, 4)
+    _, cnt_ref = ref.pairwise_l2_join_ref(a, a, 4.0)
+    assert int(cnt.sum()) == int(cnt_ref)
+
+
+def test_pairwise_l2_self_diagonal_zeroish():
+    """fp32 ||a||^2+||b||^2-2ab cancels on the diagonal; the error must stay
+    within a few ulps of the squared-norm scale (the pruning-filter contract —
+    exact rescoring runs in float64 on the control plane)."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (96, 24)) * 100
+    sq, _ = ops.pairwise_l2_join(a, a, 1.0, interpret=True)
+    scale = float(jnp.max(jnp.sum(a * a, -1)))
+    assert float(jnp.diagonal(sq).max()) < 32 * np.finfo(np.float32).eps * scale
+
+
+@pytest.mark.parametrize("n,d,m", [(16, 8, 2), (300, 33, 2), (128, 64, 4), (70, 16, 3)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_project_and_bin_matches_ref(n, d, m, dtype):
+    key = jax.random.PRNGKey(n + d)
+    x = (jax.random.uniform(key, (n, d), dtype=jnp.float32) * 1000).astype(dtype)
+    z = jax.random.normal(jax.random.fold_in(key, 2), (m, d), dtype=jnp.float32)
+    z = (z / jnp.linalg.norm(z, axis=1, keepdims=True)).astype(dtype)
+    w, c = 37.5, 1 << 20
+    h1, h2, p = ops.project_and_bin(x, z, w, c, bn=64, interpret=True)
+    h1r, h2r, pr = ref.project_and_bin_ref(x, z, w, c)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(pr),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+    if dtype == jnp.float32:
+        # bin ids may legitimately differ on exact bin boundaries; require
+        # near-total agreement and never more than 1 bin apart.
+        agree = np.mean(np.asarray(h1) == np.asarray(h1r))
+        assert agree > 0.999
+        assert np.abs(np.asarray(h1) - np.asarray(h1r)).max() <= 1
+        assert np.abs(np.asarray(h2) - np.asarray(h2r)).max() <= 1
+
+
+@pytest.mark.parametrize("t,q,d", [(4, 2, 8), (100, 3, 16), (130, 5, 7), (257, 9, 32)])
+def test_tuple_diameters_matches_ref(t, q, d):
+    key = jax.random.PRNGKey(t * 7 + q)
+    pts = jax.random.normal(key, (t, q, d)) * 20
+    got = ops.tuple_diameters(pts, bt=64, interpret=True)
+    want = ref.tuple_diameters_ref(pts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+def test_tuple_diameters_padded_duplicates():
+    """Padding a tuple by repeating a point must not change its diameter."""
+    pts = jax.random.normal(jax.random.PRNGKey(3), (10, 3, 8)) * 10
+    padded = jnp.concatenate([pts, pts[:, :1, :]], axis=1)   # (10, 4, 8)
+    np.testing.assert_allclose(
+        np.asarray(ops.tuple_diameters(pts, interpret=True)),
+        np.asarray(ops.tuple_diameters(padded, interpret=True)), rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_vs_numpy_control_plane():
+    """Kernel path agrees with the float64 control-plane distances to fp32
+    tolerance (the exact-rescoring contract in subset_search)."""
+    from repro.core.subset_search import pairwise_l2_numpy
+    rng = np.random.default_rng(0)
+    a = rng.uniform(0, 100, (50, 16)).astype(np.float32)
+    sq, _ = ops.pairwise_l2_join(jnp.asarray(a), jnp.asarray(a), 1.0, interpret=True)
+    d_np = pairwise_l2_numpy(a, a)
+    np.testing.assert_allclose(np.sqrt(np.asarray(sq)), d_np, atol=5e-2)
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("s,t,h,hd,causal,window", [
+    (64, 64, 2, 16, True, None),
+    (128, 128, 1, 32, True, None),
+    (96, 96, 2, 16, False, None),
+    (64, 64, 2, 16, True, 32),
+    (72, 72, 3, 8, True, None),       # non-multiple-of-block tails
+])
+def test_flash_attention_matches_ref(s, t, h, hd, causal, window):
+    from repro.kernels.flash_attention import flash_attention
+    key = jax.random.PRNGKey(s + t)
+    q = jax.random.normal(key, (2, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, t, h, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, t, h, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=32, bk=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_matches_model_attention():
+    """The kernel agrees with the model's jnp blockwise path (its fallback)."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.common import blockwise_attention
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 2, 64, 2, 16
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    want = blockwise_attention(q, k, v, pos, pos, causal=True, window=None,
+                               block=16)
+    got = flash_attention(q, k, v, causal=True, bq=16, bk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,18 @@
+"""Drives tests/multidev_script.py in a subprocess with 8 forced host devices
+(device count is locked at first jax init, so in-process forcing is unsafe)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_multidevice_suite():
+    script = os.path.join(os.path.dirname(__file__), "multidev_script.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True, timeout=580)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL MULTIDEV OK" in proc.stdout

@@ -1,0 +1,119 @@
+"""End-to-end correctness of ProMiSH-E (exactness), ProMiSH-A (quality), and
+the Virtual bR*-Tree baseline, all against the brute-force oracle."""
+import numpy as np
+import pytest
+
+from repro.core import brute_force, promish_a, promish_e
+from repro.core.baseline_tree import VirtualBRTree
+from repro.core.index import build_index
+from repro.core.promish_e import SearchStats
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+
+def _diams(pq):
+    return [c.diameter for c in pq.items]
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synthetic_dataset(n=250, d=6, u=20, t=2, seed=5)
+
+
+@pytest.fixture(scope="module")
+def idx_e(ds):
+    return build_index(ds, m=2, n_scales=5, exact=True, seed=0)
+
+
+@pytest.fixture(scope="module")
+def idx_a(ds):
+    return build_index(ds, m=2, n_scales=5, exact=False, seed=0)
+
+
+@pytest.mark.parametrize("qsize,k,seed", [(2, 1, 0), (2, 3, 1), (3, 1, 2),
+                                          (3, 5, 3), (4, 2, 4)])
+def test_promish_e_exact_vs_oracle(ds, idx_e, qsize, k, seed):
+    for query in random_queries(ds, qsize, 4, seed=seed):
+        truth = brute_force.search(ds, query, k=k)
+        got = promish_e.search(ds, idx_e, query, k=k)
+        np.testing.assert_allclose(_diams(got), _diams(truth), rtol=1e-5,
+                                   err_msg=f"query={query}")
+
+
+def test_promish_e_top1_sets_match_oracle(ds, idx_e):
+    for query in random_queries(ds, 3, 6, seed=9):
+        truth = brute_force.search(ds, query, k=1).items[0]
+        got = promish_e.search(ds, idx_e, query, k=1).items[0]
+        assert got.diameter == pytest.approx(truth.diameter, rel=1e-5)
+
+
+def test_promish_e_stats_instrumentation(ds, idx_e):
+    stats = SearchStats()
+    promish_e.search(ds, idx_e, [0, 1], k=1, stats=stats)
+    assert stats.scales_visited >= 1
+    assert stats.subsets_searched + stats.duplicate_subsets >= 0
+
+
+def test_promish_a_quality_clustered():
+    """AAR of ProMiSH-A on clustered (real-like) data — the paper's fig. 7
+    regime, where AAR < 1.5. Uniform data admits worse ratios (the paper only
+    claims the bound on its real datasets)."""
+    from repro.data.flickr_like import flickr_like_dataset
+    ds = flickr_like_dataset(n=3000, d=16, u=25, t=3, n_clusters=12, seed=2)
+    idx = build_index(ds, m=2, n_scales=5, exact=False, seed=0)
+    ratios = []
+    for query in random_queries(ds, 3, 6, seed=21):
+        truth = brute_force.search(ds, query, k=1).items[0]
+        got = promish_a.search(ds, idx, query, k=1)
+        assert got.full(), "ProMiSH-A must return k results"
+        if truth.diameter > 0:
+            ratios.append(got.items[0].diameter / truth.diameter)
+    assert np.mean(ratios) < 1.6
+
+
+def test_promish_a_never_better_than_truth(ds, idx_a):
+    for query in random_queries(ds, 2, 6, seed=33):
+        truth = brute_force.search(ds, query, k=1).items[0]
+        got = promish_a.search(ds, idx_a, query, k=1).items[0]
+        assert got.diameter >= truth.diameter - 1e-4
+
+
+def test_virtual_brtree_exact(ds):
+    tree = VirtualBRTree(ds, leaf_size=32, fanout=8)
+    for query in random_queries(ds, 2, 4, seed=17):
+        truth = brute_force.search(ds, query, k=1)
+        pq, timed_out, _ = tree.search(query, k=1)
+        assert not timed_out
+        np.testing.assert_allclose(_diams(pq), _diams(truth), rtol=1e-5)
+
+
+def test_virtual_brtree_topk(ds):
+    tree = VirtualBRTree(ds, leaf_size=32, fanout=8)
+    query = random_queries(ds, 2, 1, seed=41)[0]
+    truth = brute_force.search(ds, query, k=4)
+    pq, timed_out, _ = tree.search(query, k=4)
+    assert not timed_out
+    np.testing.assert_allclose(_diams(pq), _diams(truth), rtol=1e-5)
+
+
+def test_single_keyword_query(ds, idx_e):
+    pq = promish_e.search(ds, idx_e, [3], k=2)
+    assert all(c.diameter == 0.0 and len(c.ids) == 1 for c in pq.items)
+
+
+def test_query_with_shared_point(ds, idx_e):
+    """A point tagged with both query keywords should be the top-1 (diam 0)."""
+    # find a point with >= 2 keywords
+    for pid in range(ds.n):
+        kws = ds.kw.row(pid)
+        if len(kws) >= 2:
+            query = [int(kws[0]), int(kws[1])]
+            break
+    truth = brute_force.search(ds, query, k=1).items[0]
+    got = promish_e.search(ds, idx_e, query, k=1).items[0]
+    assert truth.diameter == 0.0
+    assert got.diameter == 0.0 and len(got.ids) == 1
+
+
+def test_empty_keyword_raises(ds, idx_e):
+    with pytest.raises(ValueError):
+        promish_e.search(ds, idx_e, [ds.n_keywords + 4], k=1)

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import brute_force, promish_e
+from repro.core import projection as proj
+from repro.core.index import build_index
+from repro.core.subset_search import pairwise_l2_numpy
+from repro.core.types import Candidate, TopK, make_dataset
+from repro.train.grad_compress import _quantize
+from repro.utils.csr import csr_from_lists, invert_csr
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+pts_strategy = st.integers(5, 40)
+
+
+@given(n=pts_strategy, d=st.integers(2, 24), seed=st.integers(0, 10_000))
+def test_lemma1_projection_contracts(n, d, seed):
+    """Lemma 1: |z.o1 - z.o2| <= ||o1 - o2|| for unit z."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-100, 100, (n, d)).astype(np.float32)
+    z = proj.sample_unit_vectors(rng, 4, d)
+    p = proj.project(pts, z)                     # (n, 4)
+    dist = pairwise_l2_numpy(pts, pts)
+    for v in range(4):
+        gaps = np.abs(p[:, v][:, None] - p[:, v][None, :])
+        assert (gaps <= dist + 1e-3).all()
+
+
+@given(n=st.integers(2, 12), d=st.integers(2, 16), seed=st.integers(0, 10_000),
+       factor=st.floats(2.0, 8.0))
+def test_lemma2_overlapping_bins_contain_set(n, d, seed, factor):
+    """Lemma 2: bins of width w >= 2r contain any diameter-r set in ONE bin of
+    the overlapping pair planes."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-50, 50, (n, d)).astype(np.float32)
+    r = float(pairwise_l2_numpy(pts, pts).max())
+    w = max(factor * max(r, 1e-3), 1e-3)
+    z = proj.sample_unit_vectors(rng, 3, d)
+    p = proj.project(pts, z)
+    keys = proj.bin_keys_overlapping(p, w)       # (n, m, 2)
+    for v in range(3):
+        h1_same = len(np.unique(keys[:, v, 0])) == 1
+        h2_same = len(np.unique(keys[:, v, 1])) == 1
+        assert h1_same or h2_same, (r, w)
+
+
+@given(items=st.lists(st.tuples(st.floats(0, 100, allow_nan=False),
+                                st.integers(1, 6)), min_size=1, max_size=30),
+       k=st.integers(1, 5))
+def test_topk_invariants(items, k):
+    pq = TopK(k, init_full=True)
+    for i, (diam, card) in enumerate(items):
+        ids = tuple(range(i, i + card))
+        pq.offer(Candidate(ids=ids, diameter=float(diam)))
+    got = pq.items
+    assert len(got) <= k
+    keys = [c.key() for c in got]
+    assert keys == sorted(keys)
+    assert len({c.ids for c in got}) == len(got)          # dedup
+    if len(items) >= k:
+        best = sorted(d for d, _ in items)[:k]
+        np.testing.assert_allclose([c.diameter for c in got], best, rtol=1e-6)
+
+
+@given(lists=st.lists(st.lists(st.integers(0, 9), max_size=5), min_size=1,
+                      max_size=20))
+def test_csr_invert_roundtrip(lists):
+    csr = csr_from_lists([sorted(set(l)) for l in lists])
+    inv = invert_csr(csr, 10)
+    # membership is preserved both ways
+    for row_id in range(csr.n_rows):
+        for v in csr.row(row_id):
+            assert row_id in inv.row(int(v))
+    for v in range(10):
+        for row_id in inv.row(v):
+            assert v in csr.row(int(row_id))
+
+
+@given(n=st.integers(20, 80), seed=st.integers(0, 5000), q=st.integers(2, 3),
+       k=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_promish_e_exact_random_instances(n, seed, q, k):
+    """ProMiSH-E == brute force on arbitrary random instances (the paper's
+    100%-accuracy claim as a property)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1000, (n, 4)).astype(np.float32)
+    u = 6
+    kws = [rng.choice(u, size=2, replace=False).tolist() for _ in range(n)]
+    ds = make_dataset(pts, kws, n_keywords=u)
+    idx = build_index(ds, m=2, n_scales=4, exact=True, seed=seed % 7)
+    query = list(rng.choice(u, size=q, replace=False))
+    truth = brute_force.search(ds, query, k=k)
+    got = promish_e.search(ds, idx, query, k=k)
+    np.testing.assert_allclose([c.diameter for c in got.items],
+                               [c.diameter for c in truth.items], rtol=1e-4)
+
+
+@given(vals=st.lists(st.floats(-1e4, 1e4, allow_nan=False,
+                               allow_infinity=False, width=32),
+                     min_size=1, max_size=100))
+def test_int8_quantization_error_bound(vals):
+    import jax.numpy as jnp
+    g = jnp.asarray(np.asarray(vals, np.float32))
+    q, scale = _quantize(g)
+    deq = np.asarray(q, np.float32) * float(scale)
+    amax = float(np.abs(np.asarray(g)).max())
+    assert np.abs(deq - np.asarray(g)).max() <= amax / 127.0 + 1e-6
+
+
+@given(n=st.integers(2, 10), d=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_diameter_monotone_under_insertion(n, d, seed):
+    """Adding a point never decreases a set's diameter."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-10, 10, (n + 1, d)).astype(np.float32)
+    base = pairwise_l2_numpy(pts[:n], pts[:n]).max()
+    grown = pairwise_l2_numpy(pts, pts).max()
+    assert grown >= base - 1e-6
+
+
+@given(n=st.integers(1, 50), seed=st.integers(0, 1000))
+def test_hash_bucket_determinism_across_orderings(n, seed):
+    """Bucket ids are a pure function of signatures — shard-order independent
+    (the multi-pod index agreement property, DESIGN A3)."""
+    from repro.core import signatures as sig
+    rng = np.random.default_rng(seed)
+    sigs = rng.integers(-10_000, 10_000, size=(n, 2)).astype(np.int64)
+    perm = rng.permutation(n)
+    b = sig.hash_signatures(sigs, 4096)
+    b_perm = sig.hash_signatures(sigs[perm], 4096)
+    np.testing.assert_array_equal(b[perm], b_perm)

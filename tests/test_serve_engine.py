@@ -1,0 +1,74 @@
+"""Serving engine: tier consistency, device-tier quality, embedding ingestion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import brute_force
+from repro.data.flickr_like import flickr_like_dataset
+from repro.data.synthetic import random_queries
+from repro.serve.engine import NKSEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    ds = flickr_like_dataset(n=1_500, d=16, u=30, t=3, n_clusters=10, seed=4)
+    return NKSEngine(ds, m=2, n_scales=5, seed=0)
+
+
+def test_exact_tier_matches_oracle(engine):
+    for query in random_queries(engine.dataset, 3, 4, seed=1):
+        res = engine.query(query, k=2, tier="exact")
+        truth = brute_force.search(engine.dataset, query, k=2)
+        np.testing.assert_allclose([c.diameter for c in res.candidates],
+                                   [c.diameter for c in truth.items], rtol=1e-5)
+
+
+def test_device_tier_within_2x(engine):
+    """Anchor-star kernel: 2-approximation by the triangle inequality.
+    Tolerance accounts for fp32 distance noise (the tier is a fast filter;
+    exact rescoring is float64 on the control plane)."""
+    eps = 1.0   # fp32 sq-distance noise at this coordinate scale (~250)
+    for query in random_queries(engine.dataset, 3, 6, seed=2):
+        res = engine.query(query, k=1, tier="device")
+        truth = brute_force.search(engine.dataset, query, k=1).items[0]
+        assert res.candidates, f"no device-tier result for {query}"
+        got = res.candidates[0].diameter
+        assert got <= 2.0 * truth.diameter + eps
+        assert got >= truth.diameter - eps
+
+
+def test_approx_tier_returns_k(engine):
+    for query in random_queries(engine.dataset, 2, 4, seed=3):
+        res = engine.query(query, k=3, tier="approx")
+        assert len(res.candidates) == 3
+        diams = [c.diameter for c in res.candidates]
+        assert diams == sorted(diams)
+
+
+def test_query_batch(engine):
+    queries = random_queries(engine.dataset, 2, 3, seed=5)
+    out = engine.query_batch(queries, k=1, tier="approx")
+    assert len(out) == 3
+    assert all(r.latency_s >= 0 for r in out)
+
+
+def test_ingest_embeddings_roundtrip():
+    """Embeddings from a smoke arch flow into a queryable index."""
+    from repro.configs import get_config
+    from repro.models.api import model_api
+    cfg = get_config("minicpm-2b").smoke()
+    api = model_api(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8)),
+                                      jnp.int32)} for _ in range(2)]
+    keywords = [[int(rng.integers(0, 5)), int(rng.integers(0, 5))]
+                for _ in range(8)]
+    eng = NKSEngine.ingest_embeddings(api, params, batches, keywords,
+                                      n_scales=3)
+    assert eng.dataset.n == 8
+    assert eng.dataset.dim == cfg.d_model
+    kws = sorted({k for ks in keywords for k in ks})
+    res = eng.query(kws[:2], k=1, tier="exact")
+    assert res.candidates and np.isfinite(res.candidates[0].diameter)

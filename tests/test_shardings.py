@@ -1,0 +1,56 @@
+"""Sharding-rule coverage: every param/cache leaf of every arch gets a spec
+(KeyError here means a new layer type is missing a rule), and divisibility
+nulling behaves."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import DECODE_32K, TRAIN_4K
+from repro.launch import shardings as sh
+from repro.models.api import model_api, params_specs
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_rules_cover_all_leaves(arch, mesh11):
+    cfg = get_config(arch)
+    specs = sh.param_specs(params_specs(cfg), mesh11)   # KeyError on gaps
+    n_leaves = len(jax.tree.leaves(params_specs(cfg)))
+    n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_specs == n_leaves
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_rules_cover_all_leaves(arch, mesh11):
+    cfg = get_config(arch)
+    api = model_api(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(DECODE_32K.global_batch, 128))
+    specs = sh.cache_specs_tree(cfg, DECODE_32K, mesh11, cache)
+    assert len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))) == \
+        len(jax.tree.leaves(cache))
+
+
+def test_divisibility_nulling():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = sh._divisible(("model", None), (36, 64), mesh)   # 36 % 1 == 0
+    assert spec == P("model", None)
+    # simulate axis size 16 via a fake mesh-shape mapping
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = sh._divisible(("model", "data"), (36, 64), FakeMesh)
+    assert spec == P(None, "data")                          # 36 % 16 != 0
+
+
+def test_batch_specs_long500k_replicates_batch(mesh11):
+    from repro.configs.base import LONG_500K
+    cfg = get_config("mamba2-2.7b")
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    specs = sh.batch_specs(cfg, LONG_500K, FakeMesh)
+    assert specs["tokens"] == P(None)  # B=1 cannot shard over dp=16
