@@ -1,0 +1,83 @@
+"""Batched engine throughput — loop vs the staged plan/backend pipeline.
+
+The serving question behind the ROADMAP north star: given B concurrent
+queries, how much does amortising bucket selection + dedup + device dispatch
+buy over the per-query loop? Emits the usual CSV rows *and* writes
+``BENCH_batch.json`` so the perf trajectory is recorded across PRs:
+
+    PYTHONPATH=src python -m benchmarks.bench_batch_engine [--fast]
+
+Numbers of note: ``*_qps`` (queries/sec) per strategy and the pipeline's
+per-scale dispatch counts (the fused path should show exactly one device
+dispatch per live scale, vs one per subset for the loop).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core.backend import NumpyBackend, PallasBackend
+from repro.data.flickr_like import flickr_like_dataset
+from repro.data.synthetic import random_queries
+from repro.serve.engine import NKSEngine
+
+OUT = "BENCH_batch.json"
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main(fast: bool = False) -> dict:
+    n = 1_500 if fast else 6_000
+    batch = 16 if fast else 32
+    ds = flickr_like_dataset(n=n, d=16, u=30, t=3, n_clusters=12, seed=4)
+    engine = NKSEngine(ds, m=2, n_scales=5, seed=0)
+    queries = random_queries(ds, 3, batch, seed=9)
+    k = 2
+
+    results: dict = {"n": n, "d": ds.dim, "batch": batch, "k": k,
+                     "fast": fast, "tiers": {}}
+    for tier in ("exact", "approx"):
+        t_loop = _time(lambda: [engine.query(q, k=k, tier=tier)
+                                for q in queries])
+        t_np = _time(lambda: engine.query_batch(queries, k=k, tier=tier,
+                                                backend=NumpyBackend()))
+        np_stats = engine.last_batch_stats
+        pallas = PallasBackend()        # interpret resolves per jax backend
+        # one warm-up to amortise tracing/compile out of the steady-state rate
+        engine.query_batch(queries, k=k, tier=tier, backend=pallas)
+        t_pl = _time(lambda: engine.query_batch(queries, k=k, tier=tier,
+                                                backend=pallas))
+        pl_stats = engine.last_batch_stats
+        tier_res = {
+            "loop_qps": batch / t_loop,
+            "batch_numpy_qps": batch / t_np,
+            "batch_pallas_qps": batch / t_pl,
+            "numpy_dispatches": np_stats.total_dispatches,
+            "pallas_dispatches": pl_stats.total_dispatches,
+            "pallas_dispatches_per_scale": pl_stats.dispatches_per_scale,
+        }
+        results["tiers"][tier] = tier_res
+        emit(f"batch.loop.{tier}", t_loop / batch * 1e6, f"B={batch}")
+        emit(f"batch.numpy.{tier}", t_np / batch * 1e6,
+             f"dispatches={np_stats.total_dispatches}")
+        emit(f"batch.pallas.{tier}", t_pl / batch * 1e6,
+             f"dispatches={pl_stats.total_dispatches}")
+
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {os.path.abspath(OUT)}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("BENCH_FAST", "") == "1")
+    main(fast=ap.parse_args().fast)

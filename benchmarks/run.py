@@ -28,6 +28,7 @@ MODULES = [
     ("tab4", "benchmarks.tab4_space"),
     ("build", "benchmarks.index_build"),
     ("ablation", "benchmarks.ablation_m_L"),
+    ("batch", "benchmarks.bench_batch_engine"),
 ]
 
 

@@ -30,6 +30,17 @@ def main():
             print(f"  {name}: ids={top.ids} diameter={top.diameter:.2f}")
         assert abs(exact.items[0].diameter - truth.items[0].diameter) < 1e-3
 
+    # Batched serving path: one fused device dispatch per scale for the whole
+    # batch (see repro.serve.engine / core.plan / core.backend).
+    from repro.serve.engine import NKSEngine
+    engine = NKSEngine(ds, m=2, n_scales=5, seed=0)
+    batch = random_queries(ds, q=3, n_queries=8, seed=7)
+    results = engine.query_batch(batch, k=1, tier="exact", backend="numpy")
+    stats = engine.last_batch_stats
+    print(f"\nbatched: {len(results)} queries, "
+          f"{sum(s.tasks_searched for s in stats.scales)} subsets, "
+          f"dispatches/scale={stats.dispatches_per_scale}")
+
 
 if __name__ == "__main__":
     main()

@@ -4,10 +4,11 @@ Public API:
     make_dataset, KeywordDataset, Candidate, TopK
     build_index, PromishIndex
     promish_e.search / promish_a.search / brute_force.search
+    plan (batched bucket planning) / backend (distance backends)
     VirtualBRTree (reference baseline)
 """
 from repro.core.types import Candidate, KeywordDataset, TopK, make_dataset  # noqa: F401
 from repro.core.index import HIStructure, PromishIndex, build_index  # noqa: F401
-from repro.core import promish_e, promish_a, brute_force, theory  # noqa: F401
+from repro.core import backend, plan, promish_e, promish_a, brute_force, theory  # noqa: F401
 from repro.core.baseline_tree import VirtualBRTree  # noqa: F401
 from repro.core.subset_search import search_in_subset  # noqa: F401

@@ -1,0 +1,223 @@
+"""Distance backends for the subset-search pipeline.
+
+The §V inner joins and Algorithm 4 predicates consume one dense self-distance
+matrix per covering-bucket subset. This module routes that distance production:
+
+  * :class:`NumpyBackend` — float64 on the control plane; distances are exact,
+    so enumeration needs no slack and no rescoring. One "dispatch" per subset
+    (the per-query loop the paper measures).
+  * :class:`PallasBackend` — packs every subset of a batch into one dense
+    (S, P, d) tile block and issues **one** fused
+    ``kernels.ops.pairwise_l2_join_batched`` dispatch, with per-subset radii
+    riding in SMEM. fp32 on device is a *pruning filter*: each block carries an
+    absolute distance slack bounding the fp32 cancellation error, and the
+    enumeration stage re-scores surviving tuples through the float64 path
+    before they enter the queue (see ``subset_search.enumerate_with_distances``).
+
+Backends are deliberately jax-free at import time: the Pallas stack loads only
+when a PallasBackend actually dispatches, keeping the numpy control plane
+importable everywhere.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.subset_search import pairwise_l2_numpy
+
+_EPS32 = float(np.finfo(np.float32).eps)
+
+
+@dataclasses.dataclass
+class BackendStats:
+    """Dispatch accounting for the pipeline stats (§VII-style instrumentation)."""
+
+    dispatches: int = 0        # device/loop calls issued
+    subsets: int = 0           # distance blocks produced
+    points_packed: int = 0     # total valid points shipped
+    points_padded: int = 0     # pad waste (packed tile points - valid points)
+    join_pairs: int = 0        # threshold-join survivors across all subsets
+
+
+@dataclasses.dataclass(frozen=True)
+class DistanceBlock:
+    """One subset's distances plus the contract needed to consume them.
+
+    dist  : (n, n) pairwise L2 distances.
+    slack : absolute distance error bound; enumeration prunes at r + slack.
+    rescore : True when ``dist`` is approximate and accepted tuples must be
+              re-scored in float64 before entering the top-k queue.
+    join_count : #{pairs with dist <= r} at the requested radius (stats).
+    """
+
+    dist: np.ndarray
+    slack: float
+    rescore: bool
+    join_count: int
+
+
+class DistanceBackend(abc.ABC):
+    """Produces per-subset self-distance blocks for the enumeration stage."""
+
+    name: str = "abstract"
+
+    def __init__(self) -> None:
+        self.stats = BackendStats()
+
+    @abc.abstractmethod
+    def pairwise(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Dense (n, m) distance matrix for one pair of point sets."""
+
+    @abc.abstractmethod
+    def self_join_blocks(self, blocks: Sequence[np.ndarray],
+                         radii: Sequence[float]) -> list[DistanceBlock]:
+        """Self-distance blocks for a batch of subsets at per-subset radii."""
+
+
+class NumpyBackend(DistanceBackend):
+    """float64 control-plane backend: exact, loops subset by subset."""
+
+    name = "numpy"
+
+    def pairwise(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        self.stats.dispatches += 1
+        return pairwise_l2_numpy(a, b)
+
+    def self_join_blocks(self, blocks: Sequence[np.ndarray],
+                         radii: Sequence[float]) -> list[DistanceBlock]:
+        out = []
+        for pts, r in zip(blocks, radii):
+            dist = self.pairwise(pts, pts)
+            count = int((dist <= r).sum()) if np.isfinite(r) else dist.size
+            self.stats.subsets += 1
+            self.stats.points_packed += len(pts)
+            self.stats.join_pairs += count
+            out.append(DistanceBlock(dist=dist, slack=0.0, rescore=False,
+                                     join_count=count))
+        return out
+
+
+class PallasBackend(DistanceBackend):
+    """Fused device backend: one batched threshold-join dispatch per call.
+
+    Subset counts and pad widths are rounded up (``quantum``) so repeated
+    scales reuse compiled programs instead of retracing per shape. A call
+    whose packed (S, P, P) result block would exceed ``max_block_bytes``
+    (the fallback stage can pack near-corpus-sized subsets for many queries
+    at once) is split into size-bounded chunks — still one dispatch per
+    chunk, and a single dispatch in the common per-scale case.
+    """
+
+    name = "pallas"
+
+    def __init__(self, *, bm: int = 128, bn: int = 128,
+                 interpret: bool | None = None, quantum: int = 8,
+                 max_block_bytes: int = 256 << 20) -> None:
+        super().__init__()
+        self.bm = bm
+        self.bn = bn
+        self.interpret = interpret
+        self.quantum = quantum
+        self.max_block_bytes = max_block_bytes
+
+    @staticmethod
+    def _slack(pts: np.ndarray) -> float:
+        """Absolute L2 error bound for the fp32 ||a||^2+||b||^2-2ab identity.
+
+        The squared-distance error is dominated by cancellation at the
+        squared-norm scale S: |err_sq| <= c*eps32*S with c a small constant
+        times the reduction depth (the kernel tests bound the diagonal at
+        32*eps*S). sqrt is monotone, so |err_dist| <= sqrt(err_sq); we take
+        c = 64 + 4d for headroom across accumulation orders.
+        """
+        if pts.size == 0:
+            return 0.0
+        d = pts.shape[1]
+        s_norm = float((pts.astype(np.float64) ** 2).sum(axis=1).max())
+        return float(np.sqrt((64.0 + 4.0 * d) * _EPS32 * s_norm))
+
+    def pairwise(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        from repro.kernels import ops
+        self.stats.dispatches += 1
+        sq, _ = ops.pairwise_l2_join(np.asarray(a, np.float32),
+                                     np.asarray(b, np.float32),
+                                     bm=self.bm, bn=self.bn,
+                                     interpret=self.interpret)
+        return np.sqrt(np.asarray(sq, np.float64))
+
+    def _round(self, n: int) -> int:
+        q = self.quantum
+        return max(q, ((n + q - 1) // q) * q)
+
+    def self_join_blocks(self, blocks: Sequence[np.ndarray],
+                         radii: Sequence[float]) -> list[DistanceBlock]:
+        if not blocks:
+            return []
+        # Chunk so one dispatch's padded fp32 sq output (S, P, P) stays under
+        # the memory budget (order preserved; one chunk in the common case).
+        budget = max(1, self.max_block_bytes // 4)
+        out: list[DistanceBlock] = []
+        start = 0
+        while start < len(blocks):
+            end = start + 1
+            p_max = self._round(max(len(blocks[start]), 1))
+            while end < len(blocks):
+                p_new = max(p_max, self._round(len(blocks[end])))
+                if self._round(end + 1 - start) * p_new * p_new > budget:
+                    break
+                p_max = p_new
+                end += 1
+            out.extend(self._dispatch(blocks[start:end], radii[start:end]))
+            start = end
+        return out
+
+    def _dispatch(self, blocks: Sequence[np.ndarray],
+                  radii: Sequence[float]) -> list[DistanceBlock]:
+        from repro.kernels import ops
+        n_subsets = len(blocks)
+        d = blocks[0].shape[1]
+        lengths = np.fromiter((len(b) for b in blocks), np.int32,
+                              count=n_subsets)
+        s_pad = self._round(n_subsets)
+        p_pad = self._round(int(lengths.max()))
+        x = np.zeros((s_pad, p_pad, d), np.float32)
+        for i, pts in enumerate(blocks):
+            x[i, : len(pts)] = pts
+        lens_pad = np.zeros(s_pad, np.int32)
+        lens_pad[:n_subsets] = lengths
+        r = np.zeros(s_pad, np.float32)
+        r[:n_subsets] = np.asarray(radii, np.float32)
+
+        sq, cnt = ops.pairwise_l2_join_batched(x, lens_pad, r, bm=self.bm,
+                                               bn=self.bn,
+                                               interpret=self.interpret)
+        sq = np.asarray(sq)
+        counts = np.asarray(cnt).sum(axis=(1, 2))
+        self.stats.dispatches += 1
+        self.stats.subsets += n_subsets
+        self.stats.points_packed += int(lengths.sum())
+        self.stats.points_padded += s_pad * p_pad - int(lengths.sum())
+        self.stats.join_pairs += int(counts[:n_subsets].sum())
+
+        out = []
+        for i, pts in enumerate(blocks):
+            n = len(pts)
+            dist = np.sqrt(sq[i, :n, :n].astype(np.float64))
+            out.append(DistanceBlock(dist=dist, slack=self._slack(pts),
+                                     rescore=True,
+                                     join_count=int(counts[i])))
+        return out
+
+
+def get_backend(spec: str | DistanceBackend, **kw) -> DistanceBackend:
+    """Resolve a backend name ("numpy" | "pallas") or pass an instance through."""
+    if isinstance(spec, DistanceBackend):
+        return spec
+    if spec == "numpy":
+        return NumpyBackend()
+    if spec == "pallas":
+        return PallasBackend(**kw)
+    raise ValueError(f"unknown distance backend: {spec!r}")

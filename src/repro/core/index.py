@@ -82,23 +82,17 @@ def _build_scale(dataset: KeywordDataset, projected: np.ndarray, scale: int,
     table = csr_from_pairs(flat_buckets, point_ids, n_buckets, dedup=True)
 
     # I_khb: for every (bucket, point) entry expand the point's keywords and
-    # dedup (keyword, bucket) pairs.
-    reps = np.diff(dataset.kw.offsets)                                # kw count per point
+    # dedup (keyword, bucket) pairs (vectorised: gather each point's kw slice).
     pts = table.values                                                # points in bucket order
     bkt_of_entry = np.repeat(np.arange(n_buckets, dtype=np.int64), np.diff(table.offsets))
-    kw_rows = []
-    bk_rows = []
-    # expand keywords per entry (vectorised: gather each point's kw slice)
-    kw_counts = reps[pts]
+    kw_counts = np.diff(dataset.kw.offsets)[pts]                      # kws per entry
     bk_rep = np.repeat(bkt_of_entry, kw_counts)
     starts = dataset.kw.offsets[pts]
     # ragged gather of keyword slices
     total = int(kw_counts.sum())
     idx = np.repeat(starts, kw_counts) + _ragged_arange(kw_counts, total)
     kws = dataset.kw.values[idx].astype(np.int64)
-    kw_rows.append(kws)
-    bk_rows.append(bk_rep)
-    khb = csr_from_pairs(np.concatenate(kw_rows), np.concatenate(bk_rows).astype(np.int32),
+    khb = csr_from_pairs(kws, bk_rep.astype(np.int32),
                          dataset.n_keywords, dedup=True)
     return HIStructure(scale=scale, width=width, n_buckets=n_buckets, table=table, khb=khb)
 

@@ -7,7 +7,8 @@ Differences from ProMiSH-E (kept faithful):
     r_k and prune aggressively;
   * terminates after the first scale at which PQ holds k results;
   * no subset-duplicate check is needed (a point lives in exactly one bucket
-    per scale, so bucket subsets within a scale are disjoint).
+    per scale, so bucket subsets within a scale are disjoint) — the plan
+    layer runs with ``explored=None``.
 
 §VI's statistical model bounding the approximation ratio is implemented in
 ``repro.core.theory``.
@@ -16,10 +17,9 @@ from __future__ import annotations
 
 from typing import Sequence
 
-import numpy as np
-
+from repro.core import plan
 from repro.core.index import PromishIndex
-from repro.core.promish_e import SearchStats, _covering_buckets, query_bitset
+from repro.core.promish_e import SearchStats
 from repro.core.subset_search import DistanceFn, pairwise_l2_numpy, search_in_subset
 from repro.core.types import KeywordDataset, TopK
 
@@ -34,27 +34,22 @@ def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
     stats = stats if stats is not None else SearchStats()
 
     pq = TopK(k, init_full=False)
-    bs = query_bitset(dataset, query)
+    bitsets = [plan.query_bitset(dataset, query)]
 
     for s in range(index.n_scales):
         stats.scales_visited += 1
-        hi = index.structures[s]
-        for b in _covering_buckets(hi, query):
-            stats.buckets_selected += 1
-            pts = hi.table.row(int(b))
-            f = pts[bs[pts]]
-            if len(f) == 0:
-                continue
+        for task in plan.plan_scale(index, s, [query], bitsets, [0],
+                                    None, stats):
             stats.subsets_searched += 1
             stats.candidates_explored += search_in_subset(
-                f, query, dataset, pq, distance_fn=distance_fn)
+                task.f_ids, query, dataset, pq, distance_fn=distance_fn)
         if pq.full():
             return pq
 
     # Fallback mirrors ProMiSH-E: guarantees an answer when the hash never
     # co-locates all keywords (rare; more likely for very selective queries).
     stats.fallback = True
-    f = np.flatnonzero(bs)
-    stats.candidates_explored += search_in_subset(f, query, dataset, pq,
-                                                  distance_fn=distance_fn)
+    for task in plan.fallback_tasks(bitsets, [0]):
+        stats.candidates_explored += search_in_subset(
+            task.f_ids, query, dataset, pq, distance_fn=distance_fn)
     return pq

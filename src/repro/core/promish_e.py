@@ -1,28 +1,33 @@
 """ProMiSH-E: exact NKS search (paper §IV, Algorithm 1).
 
 Scale loop over the HI structures; per scale:
-  * select hash buckets whose keyword set covers the whole query
-    (inverted-index intersection, steps 10-16),
-  * filter each bucket through the query bitset BS to get a subset F'
-    (steps 17-22),
-  * dedup subsets (Algorithm 2 semantics — we key an exact set-hash on the
-    sorted id bytes, which is Algorithm 2 with a perfect hash: identical
-    semantics, no false positives) and run subset search (§V).
+  * the plan layer (:mod:`repro.core.plan`) selects covering buckets, filters
+    them through the query bitset BS, and dedups subsets (Algorithm 2
+    semantics — an exact set-hash on the sorted id bytes, which is Algorithm 2
+    with a perfect hash: identical semantics, no false positives),
+  * each planned subset runs subset search (§V).
 Terminates at the first scale where the k-th diameter r_k <= w/2 = w0*2^(s-1);
 Lemma 2 then guarantees every tighter candidate was already contained in some
 explored bucket. Falls back to a full search over the relevant points if no
 scale terminates (steps 33-39).
+
+This is the single-query path (a plan batch of one). The batched serving
+pipeline in ``repro.serve.engine`` shares the same plan layer and fuses all
+subsets of a scale into one device dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
-import numpy as np
-
+from repro.core import plan
 from repro.core.index import PromishIndex
 from repro.core.subset_search import DistanceFn, pairwise_l2_numpy, search_in_subset
 from repro.core.types import KeywordDataset, TopK
+
+# Re-exported for callers that predate the plan layer.
+query_bitset = plan.query_bitset
+_covering_buckets = plan.covering_buckets
 
 
 @dataclasses.dataclass
@@ -37,22 +42,6 @@ class SearchStats:
     fallback: bool = False
 
 
-def query_bitset(dataset: KeywordDataset, query: Sequence[int]) -> np.ndarray:
-    """BS: mark every point tagged with >=1 query keyword (Alg. 1 steps 4-6)."""
-    bs = np.zeros(dataset.n, dtype=bool)
-    for v in query:
-        bs[dataset.ikp.row(v)] = True
-    return bs
-
-
-def _covering_buckets(hi, query: Sequence[int]) -> np.ndarray:
-    """Buckets containing all query keywords: intersect I_khb rows by counting."""
-    counts = np.zeros(hi.n_buckets, dtype=np.int32)
-    for v in query:
-        counts[hi.khb.row(v)] += 1
-    return np.flatnonzero(counts == len(query))
-
-
 def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
            k: int = 1, distance_fn: DistanceFn = pairwise_l2_numpy,
            stats: SearchStats | None = None) -> TopK:
@@ -65,33 +54,23 @@ def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
     stats = stats if stats is not None else SearchStats()
 
     pq = TopK(k, init_full=True)
-    bs = query_bitset(dataset, query)
-    explored: set[bytes] = set()   # HC of Algorithm 2
+    bitsets = [query_bitset(dataset, query)]
+    explored: dict[int, set[bytes]] = {0: set()}   # HC of Algorithm 2
 
     for s in range(index.n_scales):
         stats.scales_visited += 1
-        hi = index.structures[s]
-        for b in _covering_buckets(hi, query):
-            stats.buckets_selected += 1
-            pts = hi.table.row(int(b))
-            f = pts[bs[pts]]
-            if len(f) == 0:
-                continue
-            key = np.sort(f).astype(np.int64).tobytes()
-            if key in explored:
-                stats.duplicate_subsets += 1
-                continue
-            explored.add(key)
+        for task in plan.plan_scale(index, s, [query], bitsets, [0],
+                                    explored, stats):
             stats.subsets_searched += 1
             stats.candidates_explored += search_in_subset(
-                f, query, dataset, pq, distance_fn=distance_fn)
+                task.f_ids, query, dataset, pq, distance_fn=distance_fn)
         # Termination (steps 29-31): r_k <= w0 * 2^(s-1)
         if pq.kth_diameter() <= index.w0 * (2.0 ** (s - 1)):
             return pq
 
     # Fallback: search all relevant points (steps 33-39).
     stats.fallback = True
-    f = np.flatnonzero(bs)
-    stats.candidates_explored += search_in_subset(f, query, dataset, pq,
-                                                  distance_fn=distance_fn)
+    for task in plan.fallback_tasks(bitsets, [0]):
+        stats.candidates_explored += search_in_subset(
+            task.f_ids, query, dataset, pq, distance_fn=distance_fn)
     return pq

@@ -5,11 +5,24 @@ find all candidates tighter than the current k-th diameter:
 
   1. group F' by query keyword                      (step 2-5 of Alg. 3)
   2. pairwise inner joins at threshold r_k          (steps 6-18) — this is the
-     dense hot spot; the distance matrix comes from `repro.kernels` on TPU and
-     numpy here on the control plane,
+     dense hot spot; the distance matrix comes from a
+     ``repro.core.backend.DistanceBackend`` (numpy on the control plane, the
+     fused Pallas threshold-join kernel on device),
   3. greedy least-edge group ordering               (steps 19-30; optimal is NP-hard),
   4. pruned nested-loop multi-way join              (Alg. 4), updating the
      top-k queue as tighter candidates appear.
+
+The module is split into two stages so a batch pipeline can run them apart:
+
+  * a *distance stage* — the backend produces one dense self-distance block
+    per subset (batched into a single device dispatch by the Pallas backend);
+  * a *host enumeration stage* — :func:`enumerate_with_distances` consumes a
+    precomputed block. Approximate (fp32) blocks carry a pruning ``slack`` and
+    set ``rescore``, in which case surviving tuples are re-scored through the
+    exact float64 path before entering the queue, keeping results bit-equal to
+    the pure-numpy pipeline.
+
+:func:`search_in_subset` composes both stages for the classic per-query path.
 """
 from __future__ import annotations
 
@@ -19,7 +32,7 @@ import numpy as np
 
 from repro.core.types import Candidate, KeywordDataset, TopK
 
-# distance backend: (A:(n,d), B:(m,d)) -> (n,m) float32 L2 distances
+# distance backend fn: (A:(n,d), B:(m,d)) -> (n,m) float L2 distances
 DistanceFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 
 
@@ -46,6 +59,18 @@ def group_by_keyword(f_ids: np.ndarray, query: Sequence[int],
         tagged = dataset.ikp.row(v)
         groups.append(f_ids[np.isin(f_ids, tagged, assume_unique=False)])
     return groups
+
+
+def local_groups(f_ids: np.ndarray, query: Sequence[int],
+                 dataset: KeywordDataset) -> list[np.ndarray] | None:
+    """Keyword groups as *row indices into f_ids* (Alg. 3 steps 2-5), or None
+    when some query keyword has no representative in the subset (no candidate
+    can exist — Alg. 3 bails before any distance work)."""
+    groups = group_by_keyword(f_ids, query, dataset)
+    if any(len(g) == 0 for g in groups):
+        return None
+    local = {int(p): i for i, p in enumerate(f_ids)}
+    return [np.array([local[int(p)] for p in g], dtype=np.int64) for g in groups]
 
 
 def greedy_group_order(m_counts: np.ndarray) -> list[int]:
@@ -87,33 +112,32 @@ def is_minimal_candidate(ids: Sequence[int], query: Sequence[int],
     return True
 
 
-def search_in_subset(f_ids: np.ndarray, query: Sequence[int],
-                     dataset: KeywordDataset, pq: TopK,
-                     distance_fn: DistanceFn = pairwise_l2_numpy) -> int:
-    """Algorithms 3+4. Mutates ``pq``; returns the number of candidate tuples
-    fully materialised (the N_p statistic of §VII)."""
+def enumerate_with_distances(f_ids: np.ndarray, gl: list[np.ndarray],
+                             query: Sequence[int], dataset: KeywordDataset,
+                             pq: TopK, dist: np.ndarray, *,
+                             slack: float = 0.0,
+                             rescore: bool = False) -> int:
+    """Host enumeration stage: Alg. 3 steps 6-30 + Alg. 4 over a precomputed
+    self-distance block ``dist`` for ``f_ids``.
+
+    ``slack`` widens every distance predicate to ``r_k + slack`` so an
+    approximate (fp32 device) block never prunes a true candidate; with
+    ``rescore`` the diameter of each surviving tuple is recomputed in float64
+    before it is offered, so approximate blocks only ever admit *extra* work,
+    never wrong results. Mutates ``pq``; returns the number of candidate
+    tuples fully materialised (the N_p statistic of §VII).
+    """
     q = len(query)
-    f_ids = np.unique(np.asarray(f_ids, dtype=np.int64))
-    if len(f_ids) == 0:
-        return 0
-    groups = group_by_keyword(f_ids, query, dataset)
-    if any(len(g) == 0 for g in groups):
-        return 0
 
     r_k = pq.kth_diameter()
 
-    # --- pairwise inner joins: one dense distance matrix over F' ------------
-    pts = dataset.points[f_ids]
-    dist = distance_fn(pts, pts)                      # (|F'|, |F'|)
-    local = {int(p): i for i, p in enumerate(f_ids)}  # point id -> row in dist
-    gl = [np.array([local[int(p)] for p in g], dtype=np.int64) for g in groups]
-
+    # --- pairwise inner joins: count survivors per group pair ---------------
     m_counts = np.zeros((q, q), dtype=np.int64)
     for i in range(q):
         for j in range(i + 1, q):
             sub = dist[np.ix_(gl[i], gl[j])]
-            m_counts[i, j] = m_counts[j, i] = int((sub <= r_k).sum()) if np.isfinite(r_k) \
-                else sub.size
+            m_counts[i, j] = m_counts[j, i] = int((sub <= r_k + slack).sum()) \
+                if np.isfinite(r_k) else sub.size
 
     # --- greedy ordering -----------------------------------------------------
     order = greedy_group_order(m_counts)
@@ -121,26 +145,41 @@ def search_in_subset(f_ids: np.ndarray, query: Sequence[int],
 
     # --- nested loops with pruning (Alg. 4) ----------------------------------
     explored = 0
+    # Lazy float64 self-distances for rescoring: built once per subset, on the
+    # first completed tuple (a per-tuple exact_diameter would re-run the
+    # pairwise build inside the innermost loop for every N_p materialisation).
+    exact_dist: np.ndarray | None = None
+
+    def offer(cur: list[int], cur_r: float, r_k: float) -> float:
+        nonlocal explored, exact_dist
+        explored += 1
+        ids = tuple(sorted(set(int(f_ids[c]) for c in cur)))
+        if rescore:
+            if exact_dist is None:
+                pts = dataset.points[f_ids]
+                exact_dist = pairwise_l2_numpy(pts, pts)
+            diam = max((float(exact_dist[a, b]) for i, a in enumerate(cur)
+                        for b in cur[i + 1:]), default=0.0)
+        else:
+            diam = float(cur_r)
+        if diam < r_k and is_minimal_candidate(ids, query, dataset):
+            if pq.offer(Candidate(ids=ids, diameter=diam)):
+                return pq.kth_diameter()
+        return r_k
 
     def recurse(idx: int, cur: list[int], cur_r: float, r_k: float) -> float:
-        nonlocal explored
         if idx == q:
-            explored += 1
-            ids = tuple(sorted(set(int(f_ids[c]) for c in cur)))
-            if cur_r < r_k and is_minimal_candidate(ids, query, dataset):
-                if pq.offer(Candidate(ids=ids, diameter=float(cur_r))):
-                    return pq.kth_diameter()
-            return r_k
+            return offer(cur, cur_r, r_k)
         last = cur[-1]
         for o in ordered_groups[idx]:
             dlast = dist[last, o]
-            if dlast > r_k:
+            if dlast > r_k + slack:
                 continue
             new_r = cur_r
             ok = True
             for c in cur:
                 dd = dist[c, o]
-                if dd > r_k:
+                if dd > r_k + slack:
                     ok = False
                     break
                 if dd > new_r:
@@ -152,10 +191,27 @@ def search_in_subset(f_ids: np.ndarray, query: Sequence[int],
         return r_k
 
     for o in ordered_groups[0]:
-        r_k = recurse(1, [int(o)], 0.0, r_k) if q > 1 else r_k
-        if q == 1:
+        if q > 1:
+            r_k = recurse(1, [int(o)], 0.0, r_k)
+        else:
             ids = (int(f_ids[o]),)
             if pq.offer(Candidate(ids=ids, diameter=0.0)):
                 r_k = pq.kth_diameter()
             explored += 1
     return explored
+
+
+def search_in_subset(f_ids: np.ndarray, query: Sequence[int],
+                     dataset: KeywordDataset, pq: TopK,
+                     distance_fn: DistanceFn = pairwise_l2_numpy) -> int:
+    """Algorithms 3+4, both stages fused (the per-query path). Mutates ``pq``;
+    returns the number of candidate tuples fully materialised."""
+    f_ids = np.unique(np.asarray(f_ids, dtype=np.int64))
+    if len(f_ids) == 0:
+        return 0
+    gl = local_groups(f_ids, query, dataset)
+    if gl is None:
+        return 0
+    pts = dataset.points[f_ids]
+    dist = distance_fn(pts, pts)                      # (|F'|, |F'|)
+    return enumerate_with_distances(f_ids, gl, query, dataset, pq, dist)

@@ -20,14 +20,30 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("r", "bm", "bn", "interpret"))
-def pairwise_l2_join(a: jax.Array, b: jax.Array, r: float = float("inf"), *,
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def pairwise_l2_join(a: jax.Array, b: jax.Array,
+                     r: float | jax.Array = float("inf"), *,
                      bm: int = 128, bn: int = 128,
                      interpret: bool | None = None):
     """Blocked pairwise sq-L2 + threshold-join counts. Returns (sq, counts)
-    where counts is the per-tile join-size grid (sum() = edge weight)."""
+    where counts is the per-tile join-size grid (sum() = edge weight). ``r``
+    is a traced operand (SMEM scalar): per-query r_k sweeps share one
+    compiled program."""
     interpret = _default_interpret() if interpret is None else interpret
     return _pairwise.pairwise_l2_join(a, b, r, bm=bm, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def pairwise_l2_join_batched(x: jax.Array, lengths: jax.Array,
+                             r: jax.Array | float = float("inf"), *,
+                             bm: int = 128, bn: int = 128,
+                             interpret: bool | None = None):
+    """One fused self-join over a batch of padded subsets (S, P, d) with
+    per-subset valid lengths (S,) and per-subset radii (S,). Returns
+    (sq (S, P, P), counts (S, gm, gn))."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pairwise.pairwise_l2_join_batched(x, lengths, r, bm=bm, bn=bn,
+                                              interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "c", "bn", "interpret"))

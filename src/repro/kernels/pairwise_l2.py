@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blocked pairwise squared-L2 **threshold join**.
+"""Pallas TPU kernels: blocked pairwise squared-L2 **threshold join**.
 
 This is the paper's hot spot (§V pairwise inner joins + Algorithm 4's distance
 predicate). One fused pass computes, for tiles A:(bm,d), B:(bn,d) resident in
@@ -8,10 +8,23 @@ VMEM:
     count    = #{(i,j) : sq[i,j] <= r^2}                (the inner-join edge
                                                          weight M[vi,vj])
 
-Grid is (ceil(M/bm), ceil(N/bn)); the full d extent is kept per block (for the
-embedding widths we index, bm*d*4B + bn*d*4B + bm*bn*4B stays well inside the
-~16 MiB v5e VMEM budget: 128x8192 fp32 tiles are 4 MiB each). Tail tiles are
-masked with an in-kernel iota validity test — no host-side padding games.
+Two entry points share the kernel body:
+
+  * :func:`pairwise_l2_join` — one (M, d) x (N, d) join. The threshold ``r``
+    is a *runtime* scalar delivered through a scalar-prefetch SMEM ref, so
+    per-query ``r_k`` thresholds never force a recompilation (they used to be
+    baked into the kernel as a static float).
+  * :func:`pairwise_l2_join_batched` — the serving hot path: a whole batch of
+    padded subsets (S, P, d) self-joined in **one** dispatch, with per-subset
+    lengths and per-subset radii prefetched into SMEM. This is what
+    ``core.backend.PallasBackend`` calls once per scale for all covering-bucket
+    subsets of a query batch.
+
+Grid is (ceil(M/bm), ceil(N/bn)) (with a leading subset axis for the batched
+variant); the full d extent is kept per block (for the embedding widths we
+index, bm*d*4B + bn*d*4B + bm*bn*4B stays well inside the ~16 MiB v5e VMEM
+budget: 128x8192 fp32 tiles are 4 MiB each). Tail tiles are masked with an
+in-kernel iota validity test — no host-side padding games.
 
 MXU notes: bm=bn=128 aligns the matmul to the 128x128 systolic array;
 ``preferred_element_type=float32`` keeps the accumulator fp32 even for bf16
@@ -24,63 +37,134 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_FMAX = float(jnp.finfo(jnp.float32).max)
 
 
-def _kernel(a_ref, b_ref, sq_ref, cnt_ref, *, m_actual: int, n_actual: int,
-            bm: int, bn: int, r2: float):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    a = a_ref[...].astype(jnp.float32)            # (bm, d)
-    b = b_ref[...].astype(jnp.float32)            # (bn, d)
+def _join_block(a, b):
+    """sq-L2 block from fp32 tiles: ||a||^2 + ||b||^2 - 2ab on the MXU."""
     a2 = jnp.sum(a * a, axis=1, keepdims=True)    # (bm, 1)
     b2 = jnp.sum(b * b, axis=1, keepdims=True)    # (bn, 1)
     ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)  # (bm, bn)
-    sq = jnp.maximum(a2 + b2.T - 2.0 * ab, 0.0)
+    return jnp.maximum(a2 + b2.T - 2.0 * ab, 0.0)
 
+
+def _kernel(r2_ref, a_ref, b_ref, sq_ref, cnt_ref, *, m_actual: int,
+            n_actual: int, bm: int, bn: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    sq = _join_block(a_ref[...].astype(jnp.float32),
+                     b_ref[...].astype(jnp.float32))
     rows = (i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)) < m_actual
     cols = (j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)) < n_actual
     valid = rows & cols
-    big = jnp.float32(jnp.finfo(jnp.float32).max)
-    sq = jnp.where(valid, sq, big)
+    sq = jnp.where(valid, sq, jnp.float32(_FMAX))
     sq_ref[...] = sq
-    cnt_ref[0, 0] = jnp.sum((sq <= r2) & valid, dtype=jnp.int32)
+    cnt_ref[0, 0] = jnp.sum((sq <= r2_ref[0]) & valid, dtype=jnp.int32)
 
 
-def pairwise_l2_join(a: jax.Array, b: jax.Array, r: float | jax.Array = jnp.inf,
-                     *, bm: int = 128, bn: int = 128,
-                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+def pairwise_l2_join(a: jax.Array, b: jax.Array,
+                     r: float | jax.Array = jnp.inf, *, bm: int = 128,
+                     bn: int = 128, interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
     """Returns (sq, counts): sq (M,N) squared distances (invalid tail = fmax),
     counts (gm, gn) int32 per-tile join sizes. ``sum(counts)`` is the paper's
-    inner-join edge weight for the group pair."""
+    inner-join edge weight for the group pair. ``r`` may be a traced scalar —
+    it rides in SMEM, so sweeping r_k costs zero recompiles."""
     m, d = a.shape
     n, _ = b.shape
     gm = pl.cdiv(m, bm)
     gn = pl.cdiv(n, bn)
-    pad_m = gm * bm - m
-    pad_n = gn * bn - n
-    a_p = jnp.pad(a, ((0, pad_m), (0, 0)))
-    b_p = jnp.pad(b, ((0, pad_n), (0, 0)))
-    r2 = float(r) ** 2 if not isinstance(r, jax.Array) else None
-    if r2 is None:
-        raise TypeError("r must be a static float for the fused-count kernel")
+    a_p = jnp.pad(a, ((0, gm * bm - m), (0, 0)))
+    b_p = jnp.pad(b, ((0, gn * bn - n), (0, 0)))
+    r2 = jnp.square(jnp.asarray(r, jnp.float32)).reshape((1,))
 
-    kern = functools.partial(_kernel, m_actual=m, n_actual=n, bm=bm, bn=bn, r2=r2)
-    sq, cnt = pl.pallas_call(
-        kern,
+    kern = functools.partial(_kernel, m_actual=m, n_actual=n, bm=bm, bn=bn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(gm, gn),
         in_specs=[
-            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, d), lambda i, j, r2_ref: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j, r2_ref: (j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, r2_ref: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, r2_ref: (i, j)),
         ],
+    )
+    sq, cnt = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32),
             jax.ShapeDtypeStruct((gm, gn), jnp.int32),
         ],
         interpret=interpret,
-    )(a_p, b_p)
+    )(r2, a_p, b_p)
     return sq[:m, :n], cnt
+
+
+def _batched_kernel(len_ref, r2_ref, a_ref, b_ref, sq_ref, cnt_ref, *,
+                    bm: int, bn: int):
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    sq = _join_block(a_ref[0].astype(jnp.float32),
+                     b_ref[0].astype(jnp.float32))
+    n_valid = len_ref[s]
+    rows = (i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)) < n_valid
+    cols = (j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)) < n_valid
+    valid = rows & cols
+    sq = jnp.where(valid, sq, jnp.float32(_FMAX))
+    sq_ref[0] = sq
+    cnt_ref[0, 0, 0] = jnp.sum((sq <= r2_ref[s]) & valid, dtype=jnp.int32)
+
+
+def pairwise_l2_join_batched(x: jax.Array, lengths: jax.Array,
+                             r: jax.Array | float = jnp.inf, *, bm: int = 128,
+                             bn: int = 128, interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Self-join every padded subset of a batch in one fused dispatch.
+
+    x        : (S, P, d) — S subsets, each padded to P points.
+    lengths  : (S,) int32 — valid point count per subset; rows/cols past the
+               length are masked (sq = fmax, excluded from counts).
+    r        : per-subset join radii, (S,) or scalar, runtime-traced (SMEM).
+
+    Returns (sq, counts): sq (S, P, P) squared distances, counts (S, gm, gn)
+    per-tile join sizes (``counts.sum(axis=(1, 2))`` is the per-subset inner
+    join cardinality).
+    """
+    n_subsets, p, d = x.shape
+    gm = pl.cdiv(p, bm)
+    gn = pl.cdiv(p, bn)
+    p_pad = max(gm * bm, gn * bn)
+    x_p = jnp.pad(x, ((0, 0), (0, p_pad - p), (0, 0)))
+    lengths = jnp.asarray(lengths, jnp.int32).reshape((n_subsets,))
+    r2 = jnp.square(jnp.broadcast_to(jnp.asarray(r, jnp.float32), (n_subsets,)))
+
+    kern = functools.partial(_batched_kernel, bm=bm, bn=bn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_subsets, gm, gn),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda s, i, j, *_: (s, i, 0)),
+            pl.BlockSpec((1, bn, d), lambda s, i, j, *_: (s, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda s, i, j, *_: (s, i, j)),
+            pl.BlockSpec((1, 1, 1), lambda s, i, j, *_: (s, i, j)),
+        ],
+    )
+    sq, cnt = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_subsets, gm * bm, gn * bn), jnp.float32),
+            jax.ShapeDtypeStruct((n_subsets, gm, gn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lengths, r2, x_p, x_p)
+    return sq[:, :p, :p], cnt

@@ -17,6 +17,26 @@ def pairwise_l2_join_ref(a: jax.Array, b: jax.Array, r: float = jnp.inf
     return sq, cnt
 
 
+def pairwise_l2_join_batched_ref(x: jax.Array, lengths, r
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Per-subset (sq (S,P,P) with fmax outside the valid square, counts (S,))
+    oracle for the batched self-join kernel."""
+    x = x.astype(jnp.float32)
+    n_subsets, p, _ = x.shape
+    lengths = jnp.asarray(lengths, jnp.int32).reshape((n_subsets,))
+    r2 = jnp.square(jnp.broadcast_to(jnp.asarray(r, jnp.float32), (n_subsets,)))
+    n2 = jnp.sum(x * x, axis=-1)                               # (S, P)
+    gram = jnp.einsum("spd,sqd->spq", x, x)
+    sq = jnp.maximum(n2[:, :, None] + n2[:, None, :] - 2.0 * gram, 0.0)
+    idx = jnp.arange(p)
+    valid = ((idx[None, :, None] < lengths[:, None, None])
+             & (idx[None, None, :] < lengths[:, None, None]))
+    sq = jnp.where(valid, sq, jnp.float32(jnp.finfo(jnp.float32).max))
+    cnt = jnp.sum((sq <= r2[:, None, None]) & valid, axis=(1, 2),
+                  dtype=jnp.int32)
+    return sq, cnt
+
+
 def project_and_bin_ref(x: jax.Array, z: jax.Array, w: float, c: int
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """(h1, h2, proj) per paper eqs. 1-2; z is (m, d)."""

@@ -30,7 +30,7 @@ def pipeline_forward(stage_fn, stage_params, microbatches, *, axis_name: str):
     Returns (M, ...) outputs valid on the LAST stage (zeros elsewhere).
     """
     idx = jax.lax.axis_index(axis_name)
-    n_stages = jax.lax.axis_size(axis_name)
+    n_stages = jax.lax.psum(1, axis_name)   # axis size (jax.lax.axis_size is newer jax)
     m = microbatches.shape[0]
     steps = m + n_stages - 1
     x_shape = microbatches.shape[1:]

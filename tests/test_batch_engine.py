@@ -1,0 +1,155 @@
+"""Batched pipeline parity: ``NKSEngine.query_batch`` on the plan/backend
+layers must reproduce the per-query searches exactly — including with the
+fp32 Pallas distance backend (interpret=True on CPU), whose blocks are a
+pruning filter re-scored through the float64 path."""
+import numpy as np
+import pytest
+
+from repro.core import brute_force, promish_a, promish_e
+from repro.core.backend import NumpyBackend, PallasBackend, get_backend
+from repro.core.types import make_dataset
+from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.serve.engine import NKSEngine
+
+UNUSED_KW = 19   # keyword present in the dictionary but tagging no point
+
+
+def _diams(cands):
+    return [c.diameter for c in cands]
+
+
+@pytest.fixture(scope="module")
+def ds():
+    base = synthetic_dataset(n=220, d=6, u=18, t=2, seed=7)
+    # re-wrap with one extra, never-used keyword for the empty-group edge case
+    kws = [base.kw.row(i).tolist() for i in range(base.n)]
+    return make_dataset(base.points, kws, n_keywords=UNUSED_KW + 1)
+
+
+@pytest.fixture(scope="module")
+def engine(ds):
+    return NKSEngine(ds, m=2, n_scales=5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch32(ds):
+    qs = random_queries(ds, 2, 16, seed=3) + random_queries(ds, 3, 16, seed=4)
+    assert len(qs) == 32
+    return qs
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_exact_batch_matches_per_query_and_oracle(ds, engine, batch32, backend):
+    """Acceptance: 32-query exact batch == per-query ProMiSH-E == brute force."""
+    be = get_backend(backend, interpret=True) if backend == "pallas" \
+        else get_backend(backend)
+    out = engine.query_batch(batch32, k=2, tier="exact", backend=be)
+    assert len(out) == 32
+    for q, res in zip(batch32, out):
+        per = promish_e.search(ds, engine.index_e, q, k=2)
+        truth = brute_force.search(ds, q, k=2)
+        np.testing.assert_allclose(_diams(res.candidates), _diams(per.items),
+                                   rtol=1e-9, err_msg=f"query={q}")
+        np.testing.assert_allclose(_diams(res.candidates), _diams(truth.items),
+                                   rtol=1e-5, err_msg=f"query={q}")
+
+
+def test_pallas_backend_one_dispatch_per_scale(engine, batch32):
+    """Acceptance: the fused pipeline issues exactly one pairwise_l2_join
+    dispatch per scale that has live subsets (and none afterwards)."""
+    be = PallasBackend(interpret=True)
+    engine.query_batch(batch32, k=2, tier="exact", backend=be)
+    stats = engine.last_batch_stats
+    assert stats.tier == "exact" and stats.backend == "pallas"
+    assert stats.batch_size == 32
+    assert len(stats.scales) >= 1
+    for s in stats.scales:
+        assert s.dispatches == (1 if s.tasks_searched else 0), \
+            f"scale {s.scale}: {s.dispatches} dispatches for {s.tasks_searched} tasks"
+    assert stats.total_dispatches == be.stats.dispatches
+    assert stats.fallback_dispatches <= 1
+    assert be.stats.subsets > 0 and be.stats.points_packed > 0
+
+
+def test_numpy_backend_dispatches_per_subset(engine, batch32):
+    """The loop baseline the fused path amortises: one dispatch per subset."""
+    be = NumpyBackend()
+    engine.query_batch(batch32, k=2, tier="exact", backend=be)
+    stats = engine.last_batch_stats
+    assert sum(s.dispatches for s in stats.scales) == \
+        sum(s.tasks_searched for s in stats.scales)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_approx_batch_matches_per_query(ds, engine, backend):
+    be = get_backend(backend, interpret=True) if backend == "pallas" \
+        else get_backend(backend)
+    queries = random_queries(ds, 3, 8, seed=11)
+    out = engine.query_batch(queries, k=3, tier="approx", backend=be)
+    for q, res in zip(queries, out):
+        per = promish_a.search(ds, engine.index_a, q, k=3)
+        np.testing.assert_allclose(_diams(res.candidates), _diams(per.items),
+                                   rtol=1e-9, err_msg=f"query={q}")
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_edge_cases_q1_and_empty_group(ds, engine, backend):
+    """q=1 queries return diameter-0 singletons; a query containing a keyword
+    that tags no point has no candidate set at all — batched alongside
+    regular queries."""
+    be = get_backend(backend, interpret=True) if backend == "pallas" \
+        else get_backend(backend)
+    populated = random_queries(ds, 2, 1, seed=1)[0]
+    queries = [[populated[0]],                 # q = 1
+               [UNUSED_KW, populated[0]],      # empty keyword group
+               populated]                      # regular
+    out = engine.query_batch(queries, k=2, tier="exact", backend=be)
+    assert all(c.diameter == 0.0 and len(c.ids) == 1
+               for c in out[0].candidates) and out[0].candidates
+    assert out[1].candidates == []
+    per = promish_e.search(ds, engine.index_e, populated, k=2)
+    np.testing.assert_allclose(_diams(out[2].candidates), _diams(per.items),
+                               rtol=1e-9)
+
+
+def test_candidate_id_sets_match_per_query(ds, engine, batch32):
+    """Beyond diameters: the actual result id-sets agree with ProMiSH-E
+    (modulo equal-diameter ties, which the synthetic data avoids at fp64)."""
+    be = PallasBackend(interpret=True)
+    out = engine.query_batch(batch32[:8], k=1, tier="exact", backend=be)
+    for q, res in zip(batch32[:8], out):
+        per = promish_e.search(ds, engine.index_e, q, k=1)
+        assert [c.ids for c in res.candidates] == [c.ids for c in per.items]
+
+
+def test_batch_of_one_and_empty_batch(ds, engine):
+    q = random_queries(ds, 2, 1, seed=2)[0]
+    out = engine.query_batch([q], k=1, tier="exact", backend="numpy")
+    per = promish_e.search(ds, engine.index_e, q, k=1)
+    np.testing.assert_allclose(_diams(out[0].candidates), _diams(per.items))
+    assert engine.query_batch([], k=1, tier="exact", backend="numpy") == []
+
+
+def test_unknown_backend_rejected(engine):
+    with pytest.raises(ValueError):
+        engine.query_batch([[0]], tier="exact", backend="cuda")
+
+
+def test_pallas_memory_budget_chunks_dispatches(ds, engine, batch32):
+    """A tiny max_block_bytes splits a scale into several size-bounded
+    dispatches without changing any result."""
+    be = PallasBackend(interpret=True, max_block_bytes=4 << 10)
+    out = engine.query_batch(batch32[:6], k=1, tier="exact", backend=be)
+    stats = engine.last_batch_stats
+    assert any(s.dispatches > 1 for s in stats.scales if s.tasks_searched > 1)
+    for q, res in zip(batch32[:6], out):
+        per = promish_e.search(ds, engine.index_e, q, k=1)
+        np.testing.assert_allclose(_diams(res.candidates), _diams(per.items),
+                                   rtol=1e-9)
+
+
+def test_device_tier_clears_batch_stats(engine, batch32):
+    engine.query_batch(batch32[:2], k=1, tier="exact", backend="numpy")
+    assert engine.last_batch_stats is not None
+    engine.query_batch(batch32[:1], k=1, tier="device")
+    assert engine.last_batch_stats is None

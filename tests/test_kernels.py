@@ -87,14 +87,64 @@ def test_tuple_diameters_padded_duplicates():
 
 
 def test_kernel_vs_numpy_control_plane():
-    """Kernel path agrees with the float64 control-plane distances to fp32
-    tolerance (the exact-rescoring contract in subset_search)."""
+    """Kernel path agrees with the float64 control-plane distances within the
+    backend's published fp32 cancellation bound — the slack the enumeration
+    stage prunes with before exact rescoring (the pruning-filter contract)."""
+    from repro.core.backend import PallasBackend
     from repro.core.subset_search import pairwise_l2_numpy
     rng = np.random.default_rng(0)
     a = rng.uniform(0, 100, (50, 16)).astype(np.float32)
     sq, _ = ops.pairwise_l2_join(jnp.asarray(a), jnp.asarray(a), 1.0, interpret=True)
     d_np = pairwise_l2_numpy(a, a)
-    np.testing.assert_allclose(np.sqrt(np.asarray(sq)), d_np, atol=5e-2)
+    err = np.abs(np.sqrt(np.asarray(sq, np.float64)) - d_np).max()
+    assert err < PallasBackend._slack(a)     # the published contract bound
+    assert err < 0.3   # regression guard: ~2x the observed worst case (0.125)
+
+
+def test_pairwise_l2_join_runtime_r_no_recompile():
+    """r is a traced SMEM scalar: sweeping thresholds reuses one compiled fn."""
+    key = jax.random.PRNGKey(11)
+    a = jax.random.normal(key, (90, 12)) * 10
+    b = jax.random.normal(jax.random.fold_in(key, 1), (70, 12)) * 10
+    f = jax.jit(lambda a, b, r: ops.pairwise_l2_join(
+        a, b, r, bm=64, bn=64, interpret=True)[1].sum())
+    for r in (20.0, 45.0, 70.0):
+        _, want = ref.pairwise_l2_join_ref(a, b, r)
+        assert int(f(a, b, jnp.float32(r))) == int(want)
+    assert f._cache_size() == 1
+
+
+@pytest.mark.parametrize("s,p,d,bm", [(3, 10, 8, 16), (5, 37, 9, 16),
+                                      (2, 200, 12, 128), (9, 7, 33, 128)])
+def test_pairwise_l2_join_batched_matches_ref(s, p, d, bm):
+    rng = np.random.default_rng(s * 100 + p)
+    x = rng.uniform(0, 100, (s, p, d)).astype(np.float32)
+    lens = rng.integers(1, p + 1, size=s).astype(np.int32)
+    radii = rng.uniform(0, 150, size=s).astype(np.float32)
+    radii[0] = np.inf
+    sq, cnt = ops.pairwise_l2_join_batched(
+        jnp.asarray(x), jnp.asarray(lens), jnp.asarray(radii),
+        bm=bm, bn=bm, interpret=True)
+    sq_ref, cnt_ref = ref.pairwise_l2_join_batched_ref(jnp.asarray(x), lens, radii)
+    assert sq.shape == (s, p, p)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_ref),
+                               rtol=1e-4, atol=0.5)
+    np.testing.assert_array_equal(np.asarray(cnt).sum(axis=(1, 2)),
+                                  np.asarray(cnt_ref))
+
+
+def test_pairwise_l2_join_batched_masks_padding():
+    """Rows/cols past each subset's length are fmax and never counted."""
+    x = np.ones((2, 8, 4), np.float32)
+    lens = np.array([3, 0], np.int32)
+    sq, cnt = ops.pairwise_l2_join_batched(
+        jnp.asarray(x), jnp.asarray(lens), 1.0, bm=8, bn=8, interpret=True)
+    sq = np.asarray(sq)
+    fmax = np.finfo(np.float32).max
+    assert np.all(sq[0, :3, :3] == 0.0)
+    assert np.all(sq[0, 3:, :] == fmax) and np.all(sq[0, :, 3:] == fmax)
+    assert np.all(sq[1] == fmax)
+    assert np.asarray(cnt).sum(axis=(1, 2)).tolist() == [9, 0]
 
 
 # ----------------------------------------------------------- flash attention

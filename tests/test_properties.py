@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this env")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import brute_force, promish_e
