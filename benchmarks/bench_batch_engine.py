@@ -27,10 +27,16 @@ from repro.serve.engine import NKSEngine
 OUT = "BENCH_batch.json"
 
 
-def _time(fn) -> float:
-    t0 = time.perf_counter()
-    fn()
-    return time.perf_counter() - t0
+def _time(fn, reps: int = 3) -> float:
+    """Best-of-``reps`` wall time: this box is small and noisy; taking the
+    minimum suppresses scheduler interference, and every strategy is measured
+    the same way, so the reported QPS are comparable best-case rates."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def main(fast: bool = False) -> dict:
@@ -52,6 +58,12 @@ def main(fast: bool = False) -> dict:
         pallas = PallasBackend()        # interpret resolves per jax backend
         # one warm-up to amortise tracing/compile out of the steady-state rate
         engine.query_batch(queries, k=k, tier=tier, backend=pallas)
+        # cache-cold rate: a fresh backend per rep (compile stays warm —
+        # it is process-global — but every subset re-packs and re-ships),
+        # vs the steady-state rate where the packed-tile LRU is hot. Real
+        # serving with repeated keyword sets sits between the two.
+        t_pl_cold = _time(lambda: engine.query_batch(
+            queries, k=k, tier=tier, backend=PallasBackend()))
         t_pl = _time(lambda: engine.query_batch(queries, k=k, tier=tier,
                                                 backend=pallas))
         pl_stats = engine.last_batch_stats
@@ -59,9 +71,15 @@ def main(fast: bool = False) -> dict:
             "loop_qps": batch / t_loop,
             "batch_numpy_qps": batch / t_np,
             "batch_pallas_qps": batch / t_pl,
+            "batch_pallas_cold_qps": batch / t_pl_cold,
             "numpy_dispatches": np_stats.total_dispatches,
             "pallas_dispatches": pl_stats.total_dispatches,
             "pallas_dispatches_per_scale": pl_stats.dispatches_per_scale,
+            # Per-phase wall breakdown (plan / pack / dispatch / enumerate)
+            # plus the packed-subset LRU hit rate, so future perf PRs can see
+            # where batch time goes without re-instrumenting.
+            "numpy_phases": np_stats.phases,
+            "pallas_phases": pl_stats.phases,
         }
         results["tiers"][tier] = tier_res
         emit(f"batch.loop.{tier}", t_loop / batch * 1e6, f"B={batch}")

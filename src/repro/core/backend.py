@@ -1,27 +1,44 @@
 """Distance backends for the subset-search pipeline.
 
-The §V inner joins and Algorithm 4 predicates consume one dense self-distance
-matrix per covering-bucket subset. This module routes that distance production:
+The §V inner joins and Algorithm 4 predicates consume one *join structure*
+per covering-bucket subset. This module routes that production:
 
   * :class:`NumpyBackend` — float64 on the control plane; distances are exact,
-    so enumeration needs no slack and no rescoring. One "dispatch" per subset
-    (the per-query loop the paper measures).
+    so enumeration needs no slack and no rescoring. Emits dense distance
+    blocks; the enumeration stage packs its own bitmask at the live r_k. One
+    "dispatch" per subset (the per-query loop the paper measures).
   * :class:`PallasBackend` — packs every subset of a batch into one dense
     (S, P, d) tile block and issues **one** fused
-    ``kernels.ops.pairwise_l2_join_batched`` dispatch, with per-subset radii
-    riding in SMEM. fp32 on device is a *pruning filter*: each block carries an
-    absolute distance slack bounding the fp32 cancellation error, and the
-    enumeration stage re-scores surviving tuples through the float64 path
-    before they enter the queue (see ``subset_search.enumerate_with_distances``).
+    ``kernels.ops.pairwise_l2_join_batched_masked`` dispatch, with per-subset
+    pruning radii riding in SMEM. The result shipped back to the host is the
+    **packed adjacency bitmask** (S, P, ceil(P/32)) — a 32x smaller D2H
+    readback than the dense fp32 block, which is no longer materialised on
+    the host at all. fp32 on device is a *pruning filter*: the per-subset
+    radius is widened by an absolute slack bounding fp32 cancellation error,
+    and the enumeration stage re-scores surviving tuples through the float64
+    path before they enter the queue (``subset_search.enumerate_with_block``).
 
-Backends are deliberately jax-free at import time: the Pallas stack loads only
-when a PallasBackend actually dispatches, keeping the numpy control plane
-importable everywhere.
+The block contract (:class:`DistanceBlock`) carries either ``dist`` (dense
+float64, numpy) or ``mask`` (packed uint32 at the dispatch-time pruning
+radius, device), plus ``join_count`` — the kernel's inner-join cardinality,
+which the enumeration stage uses to skip subsets whose join is empty before
+any host work (the adaptive-radii feedback loop).
+
+``PallasBackend`` keeps a byte-bounded LRU cache keyed on the Algorithm-2
+subset hash (the sorted-id bytes): per-subset packed fp32 rows + slack, and
+whole packed dispatch tiles already committed to the device — steady-state
+repeated subsets skip gather, packing, and H2D entirely.
+
+Backends are deliberately jax-free at import time: the device stack loads
+only when a PallasBackend actually dispatches, keeping the numpy control
+plane importable everywhere.
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
+import time
+from collections import OrderedDict
 from typing import Sequence
 
 import numpy as np
@@ -29,6 +46,7 @@ import numpy as np
 from repro.core.subset_search import pairwise_l2_numpy
 
 _EPS32 = float(np.finfo(np.float32).eps)
+_F32_MAX = float(np.finfo(np.float32).max)
 
 
 @dataclasses.dataclass
@@ -36,31 +54,49 @@ class BackendStats:
     """Dispatch accounting for the pipeline stats (§VII-style instrumentation)."""
 
     dispatches: int = 0        # device/loop calls issued
-    subsets: int = 0           # distance blocks produced
+    subsets: int = 0           # join blocks produced
     points_packed: int = 0     # total valid points shipped
     points_padded: int = 0     # pad waste (packed tile points - valid points)
     join_pairs: int = 0        # threshold-join survivors across all subsets
+    t_pack_s: float = 0.0      # host time: gather + tile packing
+    t_dispatch_s: float = 0.0  # device time: dispatch + D2H readback
+    cache_hits: int = 0        # packed-subset/tile LRU hits
+    cache_misses: int = 0
+    cache_evictions: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class DistanceBlock:
-    """One subset's distances plus the contract needed to consume them.
+    """One subset's join structure plus the contract needed to consume it.
 
-    dist  : (n, n) pairwise L2 distances.
-    slack : absolute distance error bound; enumeration prunes at r + slack.
-    rescore : True when ``dist`` is approximate and accepted tuples must be
-              re-scored in float64 before entering the top-k queue.
-    join_count : #{pairs with dist <= r} at the requested radius (stats).
+    n          : number of valid points in the subset.
+    dist       : (n, n) float64 pairwise L2 distances, or None for mask-only
+                 device blocks.
+    mask       : (n, ceil(n/32)) uint32 packed adjacency at the dispatch-time
+                 pruning radius (bit j%32 of word j//32 set iff points i, j
+                 join). None for dense blocks — and for device blocks whose
+                 radius was infinite (every pair joins by construction; the
+                 backend skips the dispatch and enumeration treats the
+                 adjacency as all-ones).
+    slack      : absolute distance error bound; dense approximate blocks are
+                 pruned at r + slack (mask blocks bake it into the radius).
+    rescore    : True when the block is approximate and accepted tuples must
+                 be re-scored in float64 before entering the top-k queue.
+    join_count : #{pairs joining at the pruning radius}, diagonal included —
+                 ``join_count <= n`` proves the inner join empty, letting the
+                 enumeration stage skip the subset (adaptive radii).
     """
 
-    dist: np.ndarray
+    n: int
     slack: float
     rescore: bool
     join_count: int
+    dist: np.ndarray | None = None
+    mask: np.ndarray | None = None
 
 
 class DistanceBackend(abc.ABC):
-    """Produces per-subset self-distance blocks for the enumeration stage."""
+    """Produces per-subset self-join blocks for the enumeration stage."""
 
     name: str = "abstract"
 
@@ -72,9 +108,17 @@ class DistanceBackend(abc.ABC):
         """Dense (n, m) distance matrix for one pair of point sets."""
 
     @abc.abstractmethod
-    def self_join_blocks(self, blocks: Sequence[np.ndarray],
-                         radii: Sequence[float]) -> list[DistanceBlock]:
-        """Self-distance blocks for a batch of subsets at per-subset radii."""
+    def self_join_blocks(self, points: np.ndarray,
+                         id_lists: Sequence[np.ndarray],
+                         radii: Sequence[float],
+                         keys: Sequence[bytes] | None = None
+                         ) -> list[DistanceBlock]:
+        """Self-join blocks for a batch of subsets at per-subset radii.
+
+        ``points`` is the full corpus; each ``id_lists[i]`` selects one
+        subset's rows (sorted unique ids). ``keys`` are the Algorithm-2
+        subset hashes (sorted-id bytes) used as cache keys; pass None to
+        bypass caching."""
 
 
 class NumpyBackend(DistanceBackend):
@@ -86,17 +130,23 @@ class NumpyBackend(DistanceBackend):
         self.stats.dispatches += 1
         return pairwise_l2_numpy(a, b)
 
-    def self_join_blocks(self, blocks: Sequence[np.ndarray],
-                         radii: Sequence[float]) -> list[DistanceBlock]:
+    def self_join_blocks(self, points: np.ndarray,
+                         id_lists: Sequence[np.ndarray],
+                         radii: Sequence[float],
+                         keys: Sequence[bytes] | None = None
+                         ) -> list[DistanceBlock]:
+        t0 = time.perf_counter()
         out = []
-        for pts, r in zip(blocks, radii):
+        for ids, r in zip(id_lists, radii):
+            pts = points[ids]
             dist = self.pairwise(pts, pts)
             count = int((dist <= r).sum()) if np.isfinite(r) else dist.size
             self.stats.subsets += 1
             self.stats.points_packed += len(pts)
             self.stats.join_pairs += count
-            out.append(DistanceBlock(dist=dist, slack=0.0, rescore=False,
-                                     join_count=count))
+            out.append(DistanceBlock(n=len(pts), dist=dist, slack=0.0,
+                                     rescore=False, join_count=count))
+        self.stats.t_dispatch_s += time.perf_counter() - t0
         return out
 
 
@@ -105,23 +155,60 @@ class PallasBackend(DistanceBackend):
 
     Subset counts and pad widths are rounded up (``quantum``) so repeated
     scales reuse compiled programs instead of retracing per shape. A call
-    whose packed (S, P, P) result block would exceed ``max_block_bytes``
-    (the fallback stage can pack near-corpus-sized subsets for many queries
-    at once) is split into size-bounded chunks — still one dispatch per
-    chunk, and a single dispatch in the common per-scale case.
+    whose packed (S, P, P) on-device join block would exceed
+    ``max_block_bytes`` (the fallback stage can pack near-corpus-sized
+    subsets for many queries at once) is split into size-bounded chunks —
+    still one dispatch per chunk, and a single dispatch in the common
+    per-scale case.
+
+    Off-TPU the fused dispatch lowers through XLA (``kernels.ops`` routes by
+    backend; the Pallas program is the Mosaic artifact, its interpreter a
+    debugging tool). ``cache_bytes`` bounds the packed-subset/tile LRU.
     """
 
     name = "pallas"
 
     def __init__(self, *, bm: int = 128, bn: int = 128,
                  interpret: bool | None = None, quantum: int = 8,
-                 max_block_bytes: int = 256 << 20) -> None:
+                 max_block_bytes: int = 256 << 20,
+                 cache_bytes: int = 128 << 20) -> None:
         super().__init__()
         self.bm = bm
         self.bn = bn
         self.interpret = interpret
         self.quantum = quantum
         self.max_block_bytes = max_block_bytes
+        self.cache_bytes = cache_bytes
+        # LRU over both per-subset packed rows and whole device-committed
+        # dispatch tiles; values are (nbytes, payload). Entries are only
+        # valid for one corpus: subset keys are id bytes, so a backend
+        # re-used against different points must drop the cache (see
+        # ``self_join_blocks``).
+        self._cache: OrderedDict[tuple, tuple[int, tuple]] = OrderedDict()
+        self._cache_nbytes = 0
+        self._corpus: np.ndarray | None = None
+        self._min_class: int | None = None
+
+    # ------------------------------------------------------------------ cache
+    def _cache_get(self, key: tuple):
+        entry = self._cache.get(key)
+        if entry is None:
+            return None
+        self._cache.move_to_end(key)
+        return entry[1]
+
+    def _cache_put(self, key: tuple, payload: tuple, nbytes: int) -> None:
+        if nbytes > self.cache_bytes:
+            return
+        old = self._cache.pop(key, None)
+        if old is not None:
+            self._cache_nbytes -= old[0]
+        self._cache[key] = (nbytes, payload)
+        self._cache_nbytes += nbytes
+        while self._cache_nbytes > self.cache_bytes:
+            _, (dropped, _) = self._cache.popitem(last=False)
+            self._cache_nbytes -= dropped
+            self.stats.cache_evictions += 1
 
     @staticmethod
     def _slack(pts: np.ndarray) -> float:
@@ -152,50 +239,153 @@ class PallasBackend(DistanceBackend):
         q = self.quantum
         return max(q, ((n + q - 1) // q) * q)
 
-    def self_join_blocks(self, blocks: Sequence[np.ndarray],
-                         radii: Sequence[float]) -> list[DistanceBlock]:
-        if not blocks:
-            return []
-        # Chunk so one dispatch's padded fp32 sq output (S, P, P) stays under
-        # the memory budget (order preserved; one chunk in the common case).
-        budget = max(1, self.max_block_bytes // 4)
-        out: list[DistanceBlock] = []
-        start = 0
-        while start < len(blocks):
-            end = start + 1
-            p_max = self._round(max(len(blocks[start]), 1))
-            while end < len(blocks):
-                p_new = max(p_max, self._round(len(blocks[end])))
-                if self._round(end + 1 - start) * p_new * p_new > budget:
-                    break
-                p_max = p_new
-                end += 1
-            out.extend(self._dispatch(blocks[start:end], radii[start:end]))
-            start = end
-        return out
+    def _subset_rows(self, points: np.ndarray, ids: np.ndarray,
+                     key: bytes | None) -> tuple[np.ndarray, float]:
+        """fp32 rows + fp32 slack for one subset, through the LRU."""
+        if key is not None:
+            hit = self._cache_get(("subset", key))
+            if hit is not None:
+                self.stats.cache_hits += 1
+                return hit
+        rows = np.ascontiguousarray(points[ids], dtype=np.float32)
+        payload = (rows, self._slack(rows))
+        if key is not None:
+            self.stats.cache_misses += 1
+            self._cache_put(("subset", key), payload, rows.nbytes)
+        return payload
 
-    def _dispatch(self, blocks: Sequence[np.ndarray],
-                  radii: Sequence[float]) -> list[DistanceBlock]:
+    def _class_pad(self, n: int) -> int:
+        """Size class for one subset: next power of two >= max(n, floor).
+        Pow2 classes bound both pad waste (< 2x the valid points) and the
+        number of compiled program shapes. On TPU the floor is the kernel
+        tile ``bm`` (Mosaic pads every block to it anyway, so sub-tile
+        classes would only add dispatches); the XLA lowering uses exact
+        shapes, so small classes genuinely save compute there."""
+        if self._min_class is None:
+            import jax
+            self._min_class = self.bm if jax.default_backend() == "tpu" \
+                else max(self.quantum, 1)
+        p = self._min_class
+        while p < n:
+            p <<= 1
+        return p
+
+    def self_join_blocks(self, points: np.ndarray,
+                         id_lists: Sequence[np.ndarray],
+                         radii: Sequence[float],
+                         keys: Sequence[bytes] | None = None
+                         ) -> list[DistanceBlock]:
+        if not len(id_lists):
+            return []
+        if keys is None:
+            keys = [None] * len(id_lists)
+        # Cache entries are keyed on subset-id bytes, which only identify
+        # points *within one corpus*: a backend reused against a different
+        # points array must start cold or it would serve stale rows.
+        if self._corpus is not points:
+            self._cache.clear()
+            self._cache_nbytes = 0
+            self._corpus = points
+        # Size-binned dispatch: padding every subset of a scale to the batch
+        # max wastes quadratically (a single near-corpus subset makes every
+        # tiny one pay its P^2); pow2 size classes keep padded cells < 4x the
+        # valid ones at a handful of dispatches per scale. Within a class,
+        # chunk so one dispatch's (S, P, P) on-device join block stays under
+        # the memory budget. Result order matches the task order.
+        classes: dict[int, list[int]] = {}
+        blocks: list[DistanceBlock | None] = [None] * len(id_lists)
+        for i, ids in enumerate(id_lists):
+            if not np.isfinite(radii[i]):
+                # An infinite pruning radius joins every pair by construction
+                # (fresh queues at scale 0): the mask is all-ones, so skip the
+                # device round-trip and synthesize the trivial block. The
+                # enumeration stage prunes with its live r_k instead.
+                n = len(ids)
+                self.stats.subsets += 1
+                self.stats.points_packed += n
+                self.stats.join_pairs += n * n
+                blocks[i] = DistanceBlock(n=n, slack=0.0, rescore=True,
+                                          join_count=n * n)
+                continue
+            classes.setdefault(self._class_pad(len(ids)), []).append(i)
+        budget = max(1, self.max_block_bytes // 4)
+        for p_pad, idxs in sorted(classes.items()):
+            # Budget the *padded* subset count: _dispatch rounds it up to
+            # quantum for shape reuse, so floor max_s to a quantum multiple
+            # (falling back to unrounded single-subset dispatches when even
+            # one quantum of this class would blow the budget).
+            max_s = budget // (p_pad * p_pad)
+            if max_s >= self.quantum:
+                max_s = (max_s // self.quantum) * self.quantum
+            max_s = max(1, max_s)
+            for c0 in range(0, len(idxs), max_s):
+                chunk = idxs[c0:c0 + max_s]
+                out = self._dispatch(points, [id_lists[i] for i in chunk],
+                                     [radii[i] for i in chunk],
+                                     [keys[i] for i in chunk], p_pad)
+                for i, b in zip(chunk, out):
+                    blocks[i] = b
+        return blocks
+
+    def _dispatch(self, points: np.ndarray, id_lists: Sequence[np.ndarray],
+                  radii: Sequence[float], keys: Sequence[bytes | None],
+                  p_pad: int) -> list[DistanceBlock]:
         from repro.kernels import ops
-        n_subsets = len(blocks)
-        d = blocks[0].shape[1]
-        lengths = np.fromiter((len(b) for b in blocks), np.int32,
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        n_subsets = len(id_lists)
+        lengths = np.fromiter((len(ids) for ids in id_lists), np.int32,
                               count=n_subsets)
         s_pad = self._round(n_subsets)
-        p_pad = self._round(int(lengths.max()))
-        x = np.zeros((s_pad, p_pad, d), np.float32)
-        for i, pts in enumerate(blocks):
-            x[i, : len(pts)] = pts
-        lens_pad = np.zeros(s_pad, np.int32)
-        lens_pad[:n_subsets] = lengths
-        r = np.zeros(s_pad, np.float32)
-        r[:n_subsets] = np.asarray(radii, np.float32)
+        if s_pad * p_pad * p_pad > max(1, self.max_block_bytes // 4):
+            s_pad = n_subsets   # shape-reuse rounding must not blow the budget
 
-        sq, cnt = ops.pairwise_l2_join_batched(x, lens_pad, r, bm=self.bm,
-                                               bn=self.bn,
-                                               interpret=self.interpret)
-        sq = np.asarray(sq)
-        counts = np.asarray(cnt).sum(axis=(1, 2))
+        tile_key = None if any(k is None for k in keys) \
+            else ("tile", tuple(keys), s_pad, p_pad)
+        cached_tile = self._cache_get(tile_key) if tile_key else None
+        if cached_tile is not None:
+            # Packed tiles already live on the device: skip gather, packing,
+            # and H2D entirely; only the radii change between calls. Slacks
+            # ride in the payload, so the hit path touches no per-subset
+            # state at all. Hit/miss counters are per *subset* (a tile hit
+            # serves every subset it packs), so cache_hit_rate reads as the
+            # fraction of subset packs avoided.
+            self.stats.cache_hits += n_subsets
+            x_dev, lens_dev, slacks = cached_tile
+        else:
+            slacks = np.zeros(n_subsets, np.float64)
+            d = points.shape[1]
+            x = np.zeros((s_pad, p_pad, d), np.float32)
+            for i, (ids, key) in enumerate(zip(id_lists, keys)):
+                rows, slacks[i] = self._subset_rows(points, ids, key)
+                x[i, : len(ids)] = rows
+            lens_pad = np.zeros(s_pad, np.int32)
+            lens_pad[:n_subsets] = lengths
+            x_dev = jnp.asarray(x)
+            lens_dev = jnp.asarray(lens_pad)
+            if tile_key is not None:
+                self._cache_put(tile_key, (x_dev, lens_dev, slacks),
+                                x.nbytes + slacks.nbytes)
+
+        # Pruning radius r + slack, rounded *up* to fp32 so the device
+        # comparison can never be tighter than the published slack contract.
+        r = np.zeros(s_pad, np.float32)
+        r_mask = np.asarray(radii, np.float64) + slacks
+        with np.errstate(over="ignore"):    # nextafter(f32max) saturates to inf
+            r[:n_subsets] = np.nextafter(r_mask.astype(np.float32),
+                                         np.float32(np.inf))
+        r[:n_subsets][~np.isfinite(r_mask)] = np.float32(np.inf)
+        self.stats.t_pack_s += time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        mask, cnt = ops.pairwise_l2_join_batched_masked(
+            x_dev, lens_dev, r, bm=self.bm, bn=self.bn,
+            interpret=self.interpret)
+        mask = np.asarray(mask)
+        counts = np.asarray(cnt)
+        self.stats.t_dispatch_s += time.perf_counter() - t1
+
         self.stats.dispatches += 1
         self.stats.subsets += n_subsets
         self.stats.points_packed += int(lengths.sum())
@@ -203,12 +393,12 @@ class PallasBackend(DistanceBackend):
         self.stats.join_pairs += int(counts[:n_subsets].sum())
 
         out = []
-        for i, pts in enumerate(blocks):
-            n = len(pts)
-            dist = np.sqrt(sq[i, :n, :n].astype(np.float64))
-            out.append(DistanceBlock(dist=dist, slack=self._slack(pts),
-                                     rescore=True,
-                                     join_count=int(counts[i])))
+        for i, ids in enumerate(id_lists):
+            n = len(ids)
+            words = (n + 31) // 32
+            out.append(DistanceBlock(
+                n=n, mask=mask[i, :n, :words], slack=float(slacks[i]),
+                rescore=True, join_count=int(counts[i])))
         return out
 
 

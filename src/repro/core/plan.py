@@ -77,7 +77,9 @@ def plan_scale(index: PromishIndex, scale: int,
             if stats is not None:
                 stats.buckets_selected += 1
             pts = hi.table.row(int(b))
-            f = np.unique(pts[bs[pts]].astype(np.int64))
+            # table rows are sorted unique point ids (CSR contract), so the
+            # bitset filter preserves that — no np.unique on the hot path.
+            f = np.ascontiguousarray(pts[bs[pts]], dtype=np.int64)
             if len(f) == 0:
                 continue
             if explored is not None:

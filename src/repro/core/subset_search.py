@@ -5,22 +5,30 @@ find all candidates tighter than the current k-th diameter:
 
   1. group F' by query keyword                      (step 2-5 of Alg. 3)
   2. pairwise inner joins at threshold r_k          (steps 6-18) — this is the
-     dense hot spot; the distance matrix comes from a
-     ``repro.core.backend.DistanceBackend`` (numpy on the control plane, the
-     fused Pallas threshold-join kernel on device),
+     dense hot spot; the join comes from a ``repro.core.backend``
+     ``DistanceBackend`` (numpy float64 on the control plane, the fused
+     Pallas/XLA threshold-join on device),
   3. greedy least-edge group ordering               (steps 19-30; optimal is NP-hard),
-  4. pruned nested-loop multi-way join              (Alg. 4), updating the
-     top-k queue as tighter candidates appear.
+  4. pruned multi-way join (Alg. 4), updating the top-k queue.
 
-The module is split into two stages so a batch pipeline can run them apart:
+The join contract between the distance stage and enumeration is a **packed
+adjacency bitmask**: ``mask[i, j // 32]`` bit ``j % 32`` (LSB-first) is set
+iff points i and j of the subset join at the pruning radius ``r_k + slack``.
+The device backend emits the mask directly (a 32x smaller readback than the
+dense fp32 block); the numpy backend packs it on the host from exact float64
+distances at the *current* r_k.
 
-  * a *distance stage* — the backend produces one dense self-distance block
-    per subset (batched into a single device dispatch by the Pallas backend);
-  * a *host enumeration stage* — :func:`enumerate_with_distances` consumes a
-    precomputed block. Approximate (fp32) blocks carry a pruning ``slack`` and
-    set ``rescore``, in which case surviving tuples are re-scored through the
-    exact float64 path before entering the queue, keeping results bit-equal to
-    the pure-numpy pipeline.
+Algorithm 4 itself is a **vectorized frontier expansion** over that bitmask
+(:func:`_frontier_tuples`): candidate prefixes live in numpy blocks, each
+prefix carries the bitwise-AND of its members' adjacency rows, and extending
+by the next keyword group is one bit-gather + ``np.nonzero`` — no per-element
+Python until the final offers. Completed tuples are re-scored in batched
+float64 (:func:`tuple_diameters_f64`, the host twin of the
+``kernels.tuple_diameters`` device kernel) instead of rebuilding a dense
+(|F'|, |F'|) float64 matrix per subset. Above ``frontier_limit`` materialised
+prefixes the stage falls back to the classic pruned recursion
+(:func:`_enumerate_recursive`), whose shrinking-r_k pruning bounds worst-case
+blowup; approximate blocks only ever admit *extra* work, never wrong results.
 
 :func:`search_in_subset` composes both stages for the classic per-query path.
 """
@@ -34,6 +42,14 @@ from repro.core.types import Candidate, KeywordDataset, TopK
 
 # distance backend fn: (A:(n,d), B:(m,d)) -> (n,m) float L2 distances
 DistanceFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
+
+# Frontier rows above which Alg. 4 falls back to the pruned recursion: the
+# frontier prunes at the (stale) dispatch-time radius, so a loose radius over
+# a big subset can materialise far more prefixes than the recursion would
+# visit with its live r_k.
+DEFAULT_FRONTIER_LIMIT = 100_000
+
+_BIT_SHIFTS = np.arange(32, dtype=np.uint32)
 
 
 def pairwise_l2_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -51,26 +67,34 @@ def pairwise_l2_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.sqrt(sq, out=sq)
 
 
+def _sorted_member(values: np.ndarray, sorted_ref: np.ndarray) -> np.ndarray:
+    """Boolean membership of ``values`` in sorted ``sorted_ref`` (both int),
+    via searchsorted — no hashing, no np.unique."""
+    if len(sorted_ref) == 0:
+        return np.zeros(len(values), dtype=bool)
+    idx = np.searchsorted(sorted_ref, values)
+    idx[idx == len(sorted_ref)] = 0
+    return sorted_ref[idx] == values
+
+
 def group_by_keyword(f_ids: np.ndarray, query: Sequence[int],
                      dataset: KeywordDataset) -> list[np.ndarray]:
-    """SL: one id-array per query keyword (a point may appear in several)."""
-    groups = []
-    for v in query:
-        tagged = dataset.ikp.row(v)
-        groups.append(f_ids[np.isin(f_ids, tagged, assume_unique=False)])
-    return groups
+    """SL: one id-array per query keyword (a point may appear in several).
+    ``f_ids`` must be sorted (plan emits sorted unique ids); membership runs
+    through searchsorted against each keyword's sorted I_kp row."""
+    return [f_ids[_sorted_member(f_ids, dataset.ikp.row(v))] for v in query]
 
 
 def local_groups(f_ids: np.ndarray, query: Sequence[int],
                  dataset: KeywordDataset) -> list[np.ndarray] | None:
     """Keyword groups as *row indices into f_ids* (Alg. 3 steps 2-5), or None
     when some query keyword has no representative in the subset (no candidate
-    can exist — Alg. 3 bails before any distance work)."""
+    can exist — Alg. 3 bails before any distance work). Row indices come from
+    ``np.searchsorted`` over the already-sorted ``f_ids``."""
     groups = group_by_keyword(f_ids, query, dataset)
     if any(len(g) == 0 for g in groups):
         return None
-    local = {int(p): i for i, p in enumerate(f_ids)}
-    return [np.array([local[int(p)] for p in g], dtype=np.int64) for g in groups]
+    return [np.searchsorted(f_ids, g) for g in groups]
 
 
 def greedy_group_order(m_counts: np.ndarray) -> list[int]:
@@ -112,42 +136,146 @@ def is_minimal_candidate(ids: Sequence[int], query: Sequence[int],
     return True
 
 
-def enumerate_with_distances(f_ids: np.ndarray, gl: list[np.ndarray],
-                             query: Sequence[int], dataset: KeywordDataset,
-                             pq: TopK, dist: np.ndarray, *,
-                             slack: float = 0.0,
-                             rescore: bool = False) -> int:
-    """Host enumeration stage: Alg. 3 steps 6-30 + Alg. 4 over a precomputed
-    self-distance block ``dist`` for ``f_ids``.
+# --------------------------------------------------------------- bitmask join
+def pack_join_mask(adj: np.ndarray) -> np.ndarray:
+    """(n, m) bool adjacency -> (n, ceil(m/32)) uint32, LSB-first per word.
 
-    ``slack`` widens every distance predicate to ``r_k + slack`` so an
-    approximate (fp32 device) block never prunes a true candidate; with
-    ``rescore`` the diameter of each surviving tuple is recomputed in float64
-    before it is offered, so approximate blocks only ever admit *extra* work,
-    never wrong results. Mutates ``pq``; returns the number of candidate
-    tuples fully materialised (the N_p statistic of §VII).
+    The host-side twin of the kernel's packed-mask output: bit ``j % 32`` of
+    ``mask[i, j // 32]`` is ``adj[i, j]``; bits past ``m`` are zero.
     """
-    q = len(query)
+    n, m = adj.shape
+    w = max((m + 31) // 32, 1)
+    bits = np.zeros((n, w * 32), dtype=np.uint32)
+    bits[:, :m] = adj
+    return (bits.reshape(n, w, 32) << _BIT_SHIFTS).sum(axis=2, dtype=np.uint32)
 
-    r_k = pq.kth_diameter()
 
-    # --- pairwise inner joins: count survivors per group pair ---------------
+def unpack_join_mask(mask: np.ndarray, n_cols: int) -> np.ndarray:
+    """(n, W) uint32 packed adjacency -> (n, n_cols) uint8 0/1 matrix.
+
+    One ``np.unpackbits`` call: the little-endian byte view of each uint32
+    word yields bits in exactly column order (LSB-first contract)."""
+    bytes_view = np.ascontiguousarray(mask).view(np.uint8)
+    return np.unpackbits(bytes_view, axis=1, bitorder="little",
+                         count=n_cols)
+
+
+def pair_counts(adj: np.ndarray, groups: list[np.ndarray]) -> np.ndarray:
+    """Inner-join edge weights M[vi, vj] (Alg. 3 steps 6-18): survivors of
+    the join between each group pair, counted on the 0/1 adjacency."""
+    q = len(groups)
     m_counts = np.zeros((q, q), dtype=np.int64)
     for i in range(q):
+        rows = adj[groups[i]]
         for j in range(i + 1, q):
-            sub = dist[np.ix_(gl[i], gl[j])]
-            m_counts[i, j] = m_counts[j, i] = int((sub <= r_k + slack).sum()) \
-                if np.isfinite(r_k) else sub.size
+            m_counts[i, j] = m_counts[j, i] = int(
+                rows[:, groups[j]].sum())
+    return m_counts
 
-    # --- greedy ordering -----------------------------------------------------
-    order = greedy_group_order(m_counts)
-    ordered_groups = [gl[i] for i in order]
 
-    # --- nested loops with pruning (Alg. 4) ----------------------------------
+def _frontier_tuples(adj: np.ndarray, ordered_groups: list[np.ndarray],
+                     limit: int, pts: np.ndarray | None = None,
+                     thr: float = np.inf
+                     ) -> tuple[np.ndarray, np.ndarray | None] | None:
+    """Vectorized Alg. 4: expand candidate prefixes group-by-group over the
+    join adjacency. Each frontier row keeps the bitwise-AND of its members'
+    adjacency rows, so the extension test for the next group is one column
+    gather; ``np.nonzero``'s row-major order preserves the recursion's
+    lexicographic enumeration order.
+
+    With ``pts`` (float64 subset coordinates), every adjacency-surviving
+    extension is additionally *refined* against exact float64 distances at
+    ``thr`` — the live r_k at subset start. This recovers the recursion's
+    live-radius pruning that a dispatch-time mask cannot encode (the mask
+    radius is a stale upper bound), and yields each completed tuple's
+    diameter for free as the running max of refined pair distances.
+
+    Returns ``(tuples (T, q), diams (T,) | None)``, or None once the frontier
+    exceeds ``limit`` (caller falls back to the pruned recursion)."""
+    g0 = np.asarray(ordered_groups[0], dtype=np.int64)
+    prefix = g0[:, None]
+    compat = adj[g0]
+    thr2 = thr * thr
+    d2max = np.zeros(len(g0)) if pts is not None else None
+    for g in ordered_groups[1:]:
+        g = np.asarray(g, dtype=np.int64)
+        fi, gj = np.nonzero(compat[:, g])
+        if fi.size > limit:
+            return None
+        cand = g[gj]
+        if pts is not None:
+            diff = pts[prefix[fi]] - pts[cand][:, None, :]   # (C, i, d)
+            d2 = np.maximum(np.einsum("cid,cid->ci", diff, diff)
+                            .max(axis=1), d2max[fi])
+            keep = d2 <= thr2
+            fi, cand, d2max = fi[keep], cand[keep], d2[keep]
+        prefix = np.concatenate([prefix[fi], cand[:, None]], axis=1)
+        compat = compat[fi] & adj[cand]
+    return prefix, (np.sqrt(d2max) if pts is not None else None)
+
+
+def tuple_diameters_f64(pts: np.ndarray) -> np.ndarray:
+    """(T, q, d) float64 -> (T,) max pairwise L2 distances.
+
+    Batched float64 rescore for frontier tuples — the host twin of the
+    ``kernels.tuple_diameters`` device kernel, kept in float64 because the
+    enumeration contract requires exact diameters before the top-k queue.
+    """
+    pts = np.asarray(pts, dtype=np.float64)
+    sq = np.einsum("tqd,tqd->tq", pts, pts)
+    gram = np.einsum("tqd,trd->tqr", pts, pts)
+    d2 = np.maximum(sq[:, :, None] + sq[:, None, :] - 2.0 * gram, 0.0)
+    return np.sqrt(d2.max(axis=(1, 2)))
+
+
+# ------------------------------------------------------------------- offers
+def _offer_singletons(rows: np.ndarray, f_ids: np.ndarray,
+                      query: Sequence[int], dataset: KeywordDataset,
+                      pq: TopK, gate: bool) -> int:
+    """Offer one-point candidates (diameter 0) for every row whose point
+    covers the whole query — the only tuples Alg. 4 can produce when the
+    inner join has no off-diagonal pairs. ``gate`` applies the recursion's
+    offer predicate (diam < r_k plus minimality); the q=1 fast path offers
+    ungated, exactly as Alg. 4's base case does."""
+    for o in rows:
+        ids = (int(f_ids[o]),)
+        if not gate:
+            pq.offer(Candidate(ids=ids, diameter=0.0))
+        elif 0.0 < pq.kth_diameter() and is_minimal_candidate(ids, query, dataset):
+            pq.offer(Candidate(ids=ids, diameter=0.0))
+    return len(rows)
+
+
+def _offer_tuples(tuples: np.ndarray, diams: np.ndarray, f_ids: np.ndarray,
+                  query: Sequence[int], dataset: KeywordDataset,
+                  pq: TopK) -> None:
+    """Offer completed tuples in enumeration order. The vectorized prefilter
+    uses the entry r_k (an upper bound of the running r_k); the live gate
+    re-checks against the current k-th diameter exactly as the recursion's
+    ``offer`` does."""
+    for i in np.flatnonzero(diams < pq.kth_diameter()):
+        diam = float(diams[i])
+        if diam >= pq.kth_diameter():
+            continue
+        ids = tuple(sorted(set(int(x) for x in f_ids[tuples[i]])))
+        if is_minimal_candidate(ids, query, dataset):
+            pq.offer(Candidate(ids=ids, diameter=diam))
+
+
+# ----------------------------------------------------- recursion (fallback)
+def _enumerate_recursive(f_ids: np.ndarray, ordered_groups: list[np.ndarray],
+                         query: Sequence[int], dataset: KeywordDataset,
+                         pq: TopK, dist: np.ndarray, slack: float,
+                         rescore: bool) -> int:
+    """Alg. 4's pruned nested loops — the above-``frontier_limit`` fallback.
+    Prunes with the *live* r_k (tightening after every successful offer), so
+    worst-case blowup stays bounded where the frontier's dispatch-time radius
+    would not."""
+    q = len(query)
+    r_k = pq.kth_diameter()
     explored = 0
     # Lazy float64 self-distances for rescoring: built once per subset, on the
-    # first completed tuple (a per-tuple exact_diameter would re-run the
-    # pairwise build inside the innermost loop for every N_p materialisation).
+    # first completed tuple.
     exact_dist: np.ndarray | None = None
 
     def offer(cur: list[int], cur_r: float, r_k: float) -> float:
@@ -191,14 +319,106 @@ def enumerate_with_distances(f_ids: np.ndarray, gl: list[np.ndarray],
         return r_k
 
     for o in ordered_groups[0]:
-        if q > 1:
-            r_k = recurse(1, [int(o)], 0.0, r_k)
-        else:
-            ids = (int(f_ids[o]),)
-            if pq.offer(Candidate(ids=ids, diameter=0.0)):
-                r_k = pq.kth_diameter()
-            explored += 1
+        r_k = recurse(1, [int(o)], 0.0, r_k)
     return explored
+
+
+# ------------------------------------------------------- enumeration stages
+def enumerate_with_distances(f_ids: np.ndarray, gl: list[np.ndarray],
+                             query: Sequence[int], dataset: KeywordDataset,
+                             pq: TopK, dist: np.ndarray, *,
+                             slack: float = 0.0,
+                             rescore: bool = False,
+                             frontier_limit: int = DEFAULT_FRONTIER_LIMIT
+                             ) -> int:
+    """Host enumeration over a dense self-distance block ``dist``.
+
+    Packs the join mask at the *current* ``r_k + slack`` and runs the
+    vectorized frontier; ``slack`` widens the predicate so an approximate
+    (fp32 device) block never prunes a true candidate, and ``rescore``
+    recomputes surviving diameters in float64 so approximate blocks only ever
+    admit *extra* work, never wrong results. Mutates ``pq``; returns the
+    number of candidate tuples fully materialised (the N_p statistic of
+    §VII).
+    """
+    q = len(query)
+    if q == 1:
+        return _offer_singletons(gl[0], f_ids, query, dataset, pq,
+                                  gate=False)
+
+    r_k = pq.kth_diameter()
+    thr = r_k + slack
+    adj = dist <= thr if np.isfinite(thr) \
+        else np.ones(dist.shape, dtype=bool)
+    order = greedy_group_order(pair_counts(adj, gl))
+    ordered_groups = [gl[i] for i in order]
+
+    out = _frontier_tuples(adj, ordered_groups, frontier_limit)
+    if out is None:
+        return _enumerate_recursive(f_ids, ordered_groups, query, dataset,
+                                    pq, dist, slack, rescore)
+    tuples, _ = out
+    if rescore:
+        diams = tuple_diameters_f64(dataset.points[f_ids][tuples])
+    else:
+        diams = dist[tuples[:, :, None], tuples[:, None, :]].max(axis=(1, 2))
+    _offer_tuples(tuples, diams, f_ids, query, dataset, pq)
+    return len(tuples)
+
+
+def enumerate_with_block(f_ids: np.ndarray, gl: list[np.ndarray],
+                         query: Sequence[int], dataset: KeywordDataset,
+                         pq: TopK, block, *,
+                         frontier_limit: int = DEFAULT_FRONTIER_LIMIT) -> int:
+    """Host enumeration over a backend ``DistanceBlock``.
+
+    Dense blocks re-pack the mask at the live r_k; mask-only device blocks
+    are consumed as-is (their mask is fixed at the dispatch-time pruning
+    radius, a safe superset of the live one). A block whose inner join has no
+    off-diagonal pair at the dispatch radius short-circuits to the singleton
+    scan — the adaptive-radii feedback that skips host enumeration for
+    subsets the kernel already proved empty. Mutates ``pq``; returns N_p.
+    """
+    if block.dist is not None:
+        return enumerate_with_distances(
+            f_ids, gl, query, dataset, pq, block.dist, slack=block.slack,
+            rescore=block.rescore, frontier_limit=frontier_limit)
+
+    q = len(query)
+    if q == 1:
+        return _offer_singletons(gl[0], f_ids, query, dataset, pq,
+                                  gate=False)
+
+    if block.join_count <= block.n:
+        # Only diagonal (self) pairs join: the multi-way join can only emit
+        # single repeated points, i.e. points present in every keyword group.
+        common = gl[0]
+        for g in gl[1:]:
+            common = common[_sorted_member(common, g)]
+        return _offer_singletons(common, f_ids, query, dataset, pq,
+                                  gate=True)
+
+    # mask=None marks an infinite-radius block (all pairs join by
+    # construction; the backend skipped the device round-trip).
+    adj = np.ones((block.n, block.n), dtype=np.uint8) if block.mask is None \
+        else unpack_join_mask(block.mask, block.n)
+    order = greedy_group_order(pair_counts(adj, gl))
+    ordered_groups = [gl[i] for i in order]
+    pts = np.asarray(dataset.points[f_ids], dtype=np.float64)
+    # The mask prunes at the (stale) dispatch radius; the float64 refine
+    # inside the expansion re-prunes at the live r_k and hands back exact
+    # diameters, subsuming the batched rescore.
+    out = _frontier_tuples(adj, ordered_groups, frontier_limit, pts=pts,
+                           thr=pq.kth_diameter())
+    if out is None:
+        # Mask too loose for vectorized expansion: rebuild exact float64
+        # distances and run the live-r_k recursion (no slack, no rescore).
+        return _enumerate_recursive(f_ids, ordered_groups, query, dataset,
+                                    pq, pairwise_l2_numpy(pts, pts),
+                                    0.0, False)
+    tuples, diams = out
+    _offer_tuples(tuples, diams, f_ids, query, dataset, pq)
+    return len(tuples)
 
 
 def search_in_subset(f_ids: np.ndarray, query: Sequence[int],

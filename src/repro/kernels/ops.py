@@ -3,6 +3,15 @@
 On CPU (this container) the kernels execute with ``interpret=True`` — the
 kernel body runs in Python per grid step, which validates the exact TPU
 program logic. On a TPU backend the same wrappers emit Mosaic kernels.
+
+The serving hot path (:func:`pairwise_l2_join_batched_masked`) additionally
+routes by *implementation*: the Pallas program is a Mosaic artifact, and
+interpreting it per grid step is a debugging tool, not a lowering — a
+(S, gm, gn) grid costs milliseconds of Python per step. Off-TPU the same
+math (the ``kernels.ref`` formulation, bit-exact in fp32 modulo reduction
+order) compiles through XLA instead, so ``impl=None`` picks Mosaic on TPU
+and the XLA lowering everywhere else. Kernel-validation tests pin
+``impl="pallas", interpret=True`` to keep exercising the TPU program logic.
 """
 from __future__ import annotations
 
@@ -14,6 +23,7 @@ import jax.numpy as jnp
 from repro.kernels import diameter as _diameter
 from repro.kernels import pairwise_l2 as _pairwise
 from repro.kernels import project_bin as _project
+from repro.kernels import ref as _ref
 
 
 def _default_interpret() -> bool:
@@ -44,6 +54,83 @@ def pairwise_l2_join_batched(x: jax.Array, lengths: jax.Array,
     interpret = _default_interpret() if interpret is None else interpret
     return _pairwise.pairwise_l2_join_batched(x, lengths, r, bm=bm, bn=bn,
                                               interpret=interpret)
+
+
+def _xla_join_batched_masked(x, lengths, r, with_sq):
+    """Optimized XLA lowering of the masked batched self-join.
+
+    Same contract as the Pallas kernel, tuned for memory traffic: one batched
+    gemm for the Gram term, one fused elementwise pass for the join bits, and
+    a (…, 16)-wide fp32 matvec that packs 16-bit half-words exactly (max
+    0xFFFF < 2^24) — no 32x uint32 broadcast like the naive pack. Counts come
+    from popcounting the packed words (cells/32 traffic instead of cells).
+    """
+    n_subsets, p, _ = x.shape
+    xf = x.astype(jnp.float32)
+    lengths = jnp.asarray(lengths, jnp.int32).reshape((n_subsets,))
+    r2 = jnp.square(jnp.broadcast_to(jnp.asarray(r, jnp.float32), (n_subsets,)))
+    n2 = jnp.sum(xf * xf, axis=-1)                              # (S, P)
+    gram = jax.lax.dot_general(xf, xf, (((2,), (2,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)
+    sq = jnp.maximum(n2[:, :, None] + n2[:, None, :] - 2.0 * gram, 0.0)
+    valid_row = jnp.arange(p)[None, :] < lengths[:, None]       # (S, P)
+    joined = ((sq <= r2[:, None, None])
+              & valid_row[:, :, None] & valid_row[:, None, :])
+    w = (p + 31) // 32
+    bits = jnp.pad(joined.astype(jnp.float32),
+                   ((0, 0), (0, 0), (0, w * 32 - p)))
+    halves = bits.reshape(n_subsets, p, w, 2, 16) @ (
+        jnp.uint32(1) << jnp.arange(16, dtype=jnp.uint32)).astype(jnp.float32)
+    mask = (halves[..., 0].astype(jnp.uint32)
+            | (halves[..., 1].astype(jnp.uint32) << 16))        # (S, P, W)
+    cnt = jnp.sum(jax.lax.population_count(mask), axis=(1, 2)) \
+        .astype(jnp.int32)
+    if with_sq:
+        fmax = jnp.float32(jnp.finfo(jnp.float32).max)
+        sq = jnp.where(valid_row[:, :, None] & valid_row[:, None, :], sq, fmax)
+        return mask, cnt, sq
+    return mask, cnt
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "with_sq", "impl",
+                                             "interpret"))
+def _join_batched_masked(x, lengths, r, *, bm, bn, with_sq, impl, interpret):
+    if impl == "xla":
+        return _xla_join_batched_masked(x, lengths, r, with_sq)
+    out = _pairwise.pairwise_l2_join_batched_masked(
+        x, lengths, r, bm=bm, bn=bn, with_sq=with_sq, interpret=interpret)
+    if with_sq:
+        mask, cnt, sq = out
+        return mask, cnt.sum(axis=(1, 2)), sq
+    mask, cnt = out
+    return mask, cnt.sum(axis=(1, 2))
+
+
+def pairwise_l2_join_batched_masked(x: jax.Array, lengths: jax.Array,
+                                    r: jax.Array | float = float("inf"), *,
+                                    bm: int = 128, bn: int = 128,
+                                    with_sq: bool = False,
+                                    impl: str | None = None,
+                                    interpret: bool | None = None):
+    """Fused batched self-join emitting the packed adjacency bitmask.
+
+    Returns ``(mask, counts[, sq])`` — mask (S, P, ceil(P/32)) uint32 (bit
+    ``j % 32`` of word ``j // 32`` of row i set iff points i, j of the subset
+    join at its radius), counts (S,) int32 per-subset join cardinalities
+    (diagonal included), and the dense fp32 block only when ``with_sq``.
+
+    ``impl`` selects the lowering: "pallas" (the Mosaic kernel; interpreted
+    off-TPU), "xla" (the reference formulation compiled by XLA), or None to
+    pick "pallas" on TPU and "xla" elsewhere. Both lowerings share the mask
+    contract bit-for-bit on identical fp32 inputs.
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    interpret = _default_interpret() if interpret is None else interpret
+    return _join_batched_masked(x, lengths, r, bm=bm, bn=bn, with_sq=with_sq,
+                                impl=impl, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "c", "bn", "interpret"))

@@ -20,6 +20,18 @@ Two entry points share the kernel body:
     ``core.backend.PallasBackend`` calls once per scale for all covering-bucket
     subsets of a query batch.
 
+A third entry point, :func:`pairwise_l2_join_batched_masked`, emits the join
+*result* as a packed per-subset adjacency bitmask instead of (or in addition
+to) the dense fp32 block: word ``mask[s, i, w]`` holds bits for columns
+``32*w .. 32*w+31`` of row ``i`` (LSB-first), bit set iff
+``sq[s, i, j] <= r[s]^2`` and both endpoints are valid. The mask is the
+enumeration stage's entire join contract, so the D2H readback shrinks 32x
+(uint32 words vs fp32 cells) and the dense ``sq`` block becomes optional.
+In-kernel packing rides the MXU: the 0/1 bit tile is multiplied by a static
+(bn, 2W) weight matrix of powers of two that accumulates each 16-bit half-word
+exactly in fp32 (max 0xFFFF < 2^24), and the halves are fused into uint32
+words with one shift-or.
+
 Grid is (ceil(M/bm), ceil(N/bn)) (with a leading subset axis for the batched
 variant); the full d extent is kept per block (for the embedding widths we
 index, bm*d*4B + bn*d*4B + bm*bn*4B stays well inside the ~16 MiB v5e VMEM
@@ -28,7 +40,9 @@ in-kernel iota validity test — no host-side padding games.
 
 MXU notes: bm=bn=128 aligns the matmul to the 128x128 systolic array;
 ``preferred_element_type=float32`` keeps the accumulator fp32 even for bf16
-inputs.
+inputs. The masked variant is interpret-validated; its (bm, bn//32) output
+tile is narrower than one lane register, which Mosaic pads — real-TPU lane
+utilisation of the mask store is part of the ROADMAP v5e validation item.
 """
 from __future__ import annotations
 
@@ -168,3 +182,110 @@ def pairwise_l2_join_batched(x: jax.Array, lengths: jax.Array,
         interpret=interpret,
     )(lengths, r2, x_p, x_p)
     return sq[:, :p, :p], cnt
+
+
+def _pack_bits_mxu(bits: jax.Array, bn: int) -> jax.Array:
+    """(bm, bn) 0/1 fp32 -> (bm, bn//32) uint32 words, LSB-first per word.
+
+    One MXU matmul against a static (bn, 2W) powers-of-two weight accumulates
+    the low/high 16-bit halves of every word exactly in fp32 (<= 0xFFFF), then
+    a shift-or fuses them. Avoids >=3D reshapes inside the kernel, which keeps
+    the Mosaic lowering to plain 2D vector/matrix ops.
+    """
+    w = bn // 32
+    cc = jax.lax.broadcasted_iota(jnp.int32, (bn, 2 * w), 0)     # column id
+    hh = jax.lax.broadcasted_iota(jnp.int32, (bn, 2 * w), 1)     # half slot
+    target = cc // 32 + w * ((cc // 16) % 2)   # lo halves 0..W-1, hi W..2W-1
+    # powers of two via integer shift: jnp.exp2 is a polynomial approximation
+    # in fp32 (2^13 -> 8192.0039) and would corrupt the packed words
+    pow2 = (jnp.uint32(1) << (cc % 16).astype(jnp.uint32)).astype(jnp.float32)
+    weight = jnp.where(hh == target, pow2, 0.0)
+    halves = jax.lax.dot_general(bits, weight, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    return (halves[:, :w].astype(jnp.uint32)
+            | (halves[:, w:].astype(jnp.uint32) << 16))
+
+
+def _batched_masked_kernel(len_ref, r2_ref, a_ref, b_ref, *out_refs,
+                           bm: int, bn: int, with_sq: bool):
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    sq = _join_block(a_ref[0].astype(jnp.float32),
+                     b_ref[0].astype(jnp.float32))
+    n_valid = len_ref[s]
+    rows = (i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)) < n_valid
+    cols = (j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)) < n_valid
+    valid = rows & cols
+    sq = jnp.where(valid, sq, jnp.float32(_FMAX))
+    joined = (sq <= r2_ref[s]) & valid
+    if with_sq:
+        sq_ref, mask_ref, cnt_ref = out_refs
+        sq_ref[0] = sq
+    else:
+        mask_ref, cnt_ref = out_refs
+    mask_ref[0] = _pack_bits_mxu(joined.astype(jnp.float32), bn)
+    cnt_ref[0, 0, 0] = jnp.sum(joined, dtype=jnp.int32)
+
+
+def pairwise_l2_join_batched_masked(x: jax.Array, lengths: jax.Array,
+                                    r: jax.Array | float = jnp.inf, *,
+                                    bm: int = 128, bn: int = 128,
+                                    with_sq: bool = False,
+                                    interpret: bool = False):
+    """Batched self-join emitting the packed adjacency bitmask.
+
+    Same contract as :func:`pairwise_l2_join_batched` plus a packed join mask:
+
+    Returns ``(mask, counts[, sq])``:
+      mask   : (S, P, ceil(P/32)) uint32 — bit ``j % 32`` of ``mask[s, i, j//32]``
+               is 1 iff ``sq[s, i, j] <= r[s]^2`` and i, j < lengths[s].
+      counts : (S, gm, gn) int32 per-tile join sizes (``sum(axis=(1, 2))`` is
+               the per-subset inner-join cardinality at r).
+      sq     : dense (S, P, P) fp32 block, only when ``with_sq`` — the mask
+               replaces it as the enumeration contract, making the 32x-larger
+               dense readback optional.
+    """
+    if bn % 32:
+        raise ValueError(f"bn must be a multiple of 32 for mask packing: {bn}")
+    n_subsets, p, d = x.shape
+    gm = pl.cdiv(p, bm)
+    gn = pl.cdiv(p, bn)
+    p_pad = max(gm * bm, gn * bn)
+    x_p = jnp.pad(x, ((0, 0), (0, p_pad - p), (0, 0)))
+    lengths = jnp.asarray(lengths, jnp.int32).reshape((n_subsets,))
+    r2 = jnp.square(jnp.broadcast_to(jnp.asarray(r, jnp.float32), (n_subsets,)))
+    wn = bn // 32
+
+    kern = functools.partial(_batched_masked_kernel, bm=bm, bn=bn,
+                             with_sq=with_sq)
+    out_specs = [
+        pl.BlockSpec((1, bm, wn), lambda s, i, j, *_: (s, i, j)),
+        pl.BlockSpec((1, 1, 1), lambda s, i, j, *_: (s, i, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_subsets, gm * bm, gn * wn), jnp.uint32),
+        jax.ShapeDtypeStruct((n_subsets, gm, gn), jnp.int32),
+    ]
+    if with_sq:
+        out_specs.insert(0, pl.BlockSpec((1, bm, bn),
+                                         lambda s, i, j, *_: (s, i, j)))
+        out_shape.insert(0, jax.ShapeDtypeStruct(
+            (n_subsets, gm * bm, gn * bn), jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_subsets, gm, gn),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda s, i, j, *_: (s, i, 0)),
+            pl.BlockSpec((1, bn, d), lambda s, i, j, *_: (s, j, 0)),
+        ],
+        out_specs=out_specs,
+    )
+    out = pl.pallas_call(kern, grid_spec=grid_spec, out_shape=out_shape,
+                         interpret=interpret)(lengths, r2, x_p, x_p)
+    n_words = (p + 31) // 32
+    if with_sq:
+        sq, mask, cnt = out
+        return mask[:, :p, :n_words], cnt, sq[:, :p, :p]
+    mask, cnt = out
+    return mask[:, :p, :n_words], cnt

@@ -37,6 +37,34 @@ def pairwise_l2_join_batched_ref(x: jax.Array, lengths, r
     return sq, cnt
 
 
+def pack_join_mask_ref(joined: jax.Array) -> jax.Array:
+    """(S, P, N) bool -> (S, P, ceil(N/32)) uint32, LSB-first within a word."""
+    s, p, n = joined.shape
+    w = (n + 31) // 32
+    bits = jnp.pad(joined.astype(jnp.uint32), ((0, 0), (0, 0), (0, w * 32 - n)))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits.reshape(s, p, w, 32) << shifts, axis=-1,
+                   dtype=jnp.uint32)
+
+
+def pairwise_l2_join_batched_masked_ref(x: jax.Array, lengths, r,
+                                        with_sq: bool = False):
+    """Oracle for the masked batched self-join: ``(mask, counts[, sq])`` with
+    mask (S, P, ceil(P/32)) uint32, counts (S,) int32 — and the XLA lowering
+    of the same math for off-TPU backends (see ``kernels.ops``)."""
+    sq, cnt = pairwise_l2_join_batched_ref(x, lengths, r)
+    n_subsets, p, _ = x.shape
+    lengths = jnp.asarray(lengths, jnp.int32).reshape((n_subsets,))
+    r2 = jnp.square(jnp.broadcast_to(jnp.asarray(r, jnp.float32), (n_subsets,)))
+    idx = jnp.arange(p)
+    valid = ((idx[None, :, None] < lengths[:, None, None])
+             & (idx[None, None, :] < lengths[:, None, None]))
+    mask = pack_join_mask_ref((sq <= r2[:, None, None]) & valid)
+    if with_sq:
+        return mask, cnt, sq
+    return mask, cnt
+
+
 def project_and_bin_ref(x: jax.Array, z: jax.Array, w: float, c: int
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """(h1, h2, proj) per paper eqs. 1-2; z is (m, d)."""

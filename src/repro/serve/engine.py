@@ -12,10 +12,13 @@ from a ProMiSH index over an embedding corpus. Three quality/latency tiers:
 ``query_batch`` runs the exact/approx tiers as a **staged batched pipeline**
 on the plan/backend layers: per scale, bucket selection for the whole batch
 is amortised through ``core.plan.plan_scale`` (shared per-query Algorithm-2
-dedup), all surviving subsets are packed into **one** fused Pallas
-threshold-join dispatch (``backend="pallas"``) or looped through float64 numpy
-(``backend="numpy"``), and the host enumeration stage consumes the
-precomputed distance blocks. Per-scale device traffic is recorded in
+dedup), surviving subsets are packed into a handful of size-binned fused
+Pallas threshold-join dispatches (``backend="pallas"``, each emitting the
+packed join bitmask; subsets whose pruning radius is still infinite skip the
+device entirely) or looped through float64 numpy (``backend="numpy"``), and
+the host enumeration stage consumes the join blocks through the vectorized
+frontier of ``subset_search.enumerate_with_block``. Per-scale device traffic,
+phase timings, and packed-subset cache hits are recorded in
 :class:`PipelineStats` (``engine.last_batch_stats``).
 
 The corpus can be ingested directly (points + keywords) or produced by any
@@ -34,7 +37,7 @@ from repro.core import plan, promish_a, promish_e
 from repro.core.backend import DistanceBackend, get_backend
 from repro.core.distributed import nks_anchor_topk, pack_groups
 from repro.core.index import PromishIndex, build_index
-from repro.core.subset_search import enumerate_with_distances, local_groups
+from repro.core.subset_search import enumerate_with_block, local_groups
 from repro.core.types import Candidate, KeywordDataset, TopK, make_dataset
 
 
@@ -63,7 +66,14 @@ class ScaleStats:
 
 @dataclasses.dataclass
 class PipelineStats:
-    """End-to-end accounting for one ``query_batch`` call."""
+    """End-to-end accounting for one ``query_batch`` call.
+
+    The four phase timers split the batch wall time the way the ISSUE-2 perf
+    work carves the pipeline: ``plan`` (bucket selection + keyword grouping),
+    ``pack`` (host gather/tile packing, backend-side), ``dispatch`` (device
+    dispatch + D2H readback), ``enumerate`` (host Alg. 4 over the join
+    masks). Cache counters mirror the backend's packed-subset LRU.
+    """
 
     batch_size: int
     tier: str
@@ -72,6 +82,12 @@ class PipelineStats:
     fallback_queries: int = 0
     fallback_dispatches: int = 0
     candidates_explored: int = 0
+    t_plan_s: float = 0.0
+    t_pack_s: float = 0.0
+    t_dispatch_s: float = 0.0
+    t_enumerate_s: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     @property
     def dispatches_per_scale(self) -> list[int]:
@@ -80,6 +96,18 @@ class PipelineStats:
     @property
     def total_dispatches(self) -> int:
         return sum(s.dispatches for s in self.scales) + self.fallback_dispatches
+
+    @property
+    def phases(self) -> dict:
+        """JSON-ready phase breakdown for the benchmark trajectory."""
+        probed = self.cache_hits + self.cache_misses
+        return {
+            "plan_s": round(self.t_plan_s, 6),
+            "pack_s": round(self.t_pack_s, 6),
+            "dispatch_s": round(self.t_dispatch_s, 6),
+            "enumerate_s": round(self.t_enumerate_s, 6),
+            "cache_hit_rate": round(self.cache_hits / probed, 4) if probed else None,
+        }
 
 
 class NKSEngine:
@@ -148,23 +176,28 @@ class NKSEngine:
         """Distance stage + enumeration stage for one batch of subset tasks.
 
         Returns (tasks_searched, dispatches_issued, join_pairs)."""
+        t0 = time.perf_counter()
         prepared = []
         for t in tasks:
             gl = local_groups(t.f_ids, queries[t.qidx], self.dataset)
             if gl is not None:
                 prepared.append((t, gl))
+        stats.t_plan_s += time.perf_counter() - t0
         if not prepared:
             return 0, 0, 0
         d0 = backend.stats.dispatches
         blocks = backend.self_join_blocks(
-            [self.dataset.points[t.f_ids] for t, _ in prepared],
-            [pqs[t.qidx].kth_diameter() for t, _ in prepared])
+            self.dataset.points,
+            [t.f_ids for t, _ in prepared],
+            [pqs[t.qidx].kth_diameter() for t, _ in prepared],
+            keys=[t.f_ids.tobytes() for t, _ in prepared])
+        t1 = time.perf_counter()
         join_pairs = 0
         for (t, gl), db in zip(prepared, blocks):
             join_pairs += db.join_count
-            stats.candidates_explored += enumerate_with_distances(
-                t.f_ids, gl, queries[t.qidx], self.dataset, pqs[t.qidx],
-                db.dist, slack=db.slack, rescore=db.rescore)
+            stats.candidates_explored += enumerate_with_block(
+                t.f_ids, gl, queries[t.qidx], self.dataset, pqs[t.qidx], db)
+        stats.t_enumerate_s += time.perf_counter() - t1
         return len(prepared), backend.stats.dispatches - d0, join_pairs
 
     def _batch_search(self, queries: list[list[int]], k: int, tier: str,
@@ -175,8 +208,11 @@ class NKSEngine:
             raise ValueError(f"engine built without the {tier!r} index")
         stats = PipelineStats(batch_size=len(queries), tier=tier,
                               backend=backend.name)
+        b0 = dataclasses.replace(backend.stats)
         pqs = [TopK(k, init_full=exact) for _ in queries]
+        t0 = time.perf_counter()
         bitsets = [plan.query_bitset(self.dataset, q) for q in queries]
+        stats.t_plan_s += time.perf_counter() - t0
         explored = {i: set() for i in range(len(queries))} if exact else None
         active = list(range(len(queries)))
 
@@ -185,8 +221,10 @@ class NKSEngine:
                 break
             sstats = ScaleStats(scale=s, active_queries=len(active))
             pstats = plan.PlanStats()
+            t0 = time.perf_counter()
             tasks = plan.plan_scale(index, s, queries, bitsets, active,
                                     explored, pstats)
+            stats.t_plan_s += time.perf_counter() - t0
             sstats.buckets_selected = pstats.buckets_selected
             sstats.duplicate_subsets = pstats.duplicate_subsets
             sstats.tasks_planned = len(tasks)
@@ -215,6 +253,10 @@ class NKSEngine:
             tasks = plan.fallback_tasks(bitsets, active)
             _, stats.fallback_dispatches, _ = self._run_tasks(
                 tasks, queries, pqs, backend, stats)
+        stats.t_pack_s = backend.stats.t_pack_s - b0.t_pack_s
+        stats.t_dispatch_s = backend.stats.t_dispatch_s - b0.t_dispatch_s
+        stats.cache_hits = backend.stats.cache_hits - b0.cache_hits
+        stats.cache_misses = backend.stats.cache_misses - b0.cache_misses
         return pqs, stats
 
     def query_batch(self, queries: Sequence[Sequence[int]], k: int = 1,
@@ -224,12 +266,13 @@ class NKSEngine:
         """Answer a batch of queries through the staged pipeline.
 
         Bucket selection, Algorithm-2 dedup, and device dispatch are amortised
-        across the batch: with ``backend="pallas"`` every scale issues exactly
-        one fused threshold-join dispatch covering all live subsets. The
-        ``device`` tier keeps its per-query kernel loop. Per-result latency is
-        the batch wall time divided by the batch size (attribution inside a
-        fused dispatch is meaningless). Pipeline accounting lands in
-        ``self.last_batch_stats``.
+        across the batch: with ``backend="pallas"`` each scale issues a few
+        size-binned fused threshold-join dispatches covering all live subsets
+        (subsets at an infinite pruning radius skip the device — their join
+        mask is all-ones by construction). The ``device`` tier keeps its
+        per-query kernel loop. Per-result latency is the batch wall time
+        divided by the batch size (attribution inside a fused dispatch is
+        meaningless). Pipeline accounting lands in ``self.last_batch_stats``.
         """
         if tier == "device":
             self.last_batch_stats = None    # no pipeline ran; don't leave stale stats

@@ -133,6 +133,56 @@ def test_pairwise_l2_join_batched_matches_ref(s, p, d, bm):
                                   np.asarray(cnt_ref))
 
 
+@pytest.mark.parametrize("s,p,d,bm", [(3, 10, 8, 16), (5, 37, 9, 16),
+                                      (2, 200, 12, 128), (9, 7, 33, 128)])
+def test_pairwise_l2_join_batched_masked_matches_ref(s, p, d, bm):
+    """Packed-bitmask output: Pallas kernel (interpret) == jnp reference ==
+    the XLA serving lowering, bit for bit, including r = inf and zero-length
+    (empty) subsets."""
+    rng = np.random.default_rng(s * 100 + p)
+    x = rng.uniform(0, 100, (s, p, d)).astype(np.float32)
+    lens = rng.integers(0, p + 1, size=s).astype(np.int32)
+    lens[-1] = 0                                     # empty subset
+    radii = rng.uniform(0, 150, size=s).astype(np.float32)
+    radii[0] = np.inf
+    bn = max(32, bm)
+    m_pl, c_pl = ops.pairwise_l2_join_batched_masked(
+        jnp.asarray(x), lens, radii, bm=bm, bn=bn, impl="pallas",
+        interpret=True)
+    m_ref, c_ref = ref.pairwise_l2_join_batched_masked_ref(
+        jnp.asarray(x), lens, radii)
+    m_xla, c_xla = ops.pairwise_l2_join_batched_masked(
+        jnp.asarray(x), lens, radii, impl="xla")
+    assert m_pl.shape == (s, p, (p + 31) // 32)
+    np.testing.assert_array_equal(np.asarray(m_pl), np.asarray(m_ref))
+    np.testing.assert_array_equal(np.asarray(m_xla), np.asarray(m_ref))
+    np.testing.assert_array_equal(np.asarray(c_pl), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(c_xla), np.asarray(c_ref))
+
+
+def test_pairwise_l2_join_batched_masked_bits_match_dense():
+    """Every mask bit equals thresholding the kernel's own dense sq block —
+    including pad columns (always 0) and the fmax-masked tail under r=inf."""
+    rng = np.random.default_rng(3)
+    s, p, d = 4, 21, 6
+    x = rng.uniform(0, 50, (s, p, d)).astype(np.float32)
+    lens = np.array([21, 7, 1, 0], np.int32)
+    radii = np.array([30.0, np.inf, 10.0, 5.0], np.float32)
+    mask, cnt, sq = ops.pairwise_l2_join_batched_masked(
+        jnp.asarray(x), lens, radii, bm=16, bn=32, impl="pallas",
+        interpret=True, with_sq=True)
+    mask, sq = np.asarray(mask), np.asarray(sq)
+    cols = np.arange(p)
+    for si in range(s):
+        n = int(lens[si])
+        dense = np.zeros((p, p), bool)
+        dense[:n, :n] = sq[si, :n, :n] <= np.float32(radii[si]) ** 2
+        unpacked = ((mask[si][:, cols // 32]
+                     >> (cols % 32).astype(np.uint32)) & 1).astype(bool)
+        np.testing.assert_array_equal(unpacked, dense, err_msg=f"subset {si}")
+        assert int(np.asarray(cnt)[si]) == int(dense.sum())
+
+
 def test_pairwise_l2_join_batched_masks_padding():
     """Rows/cols past each subset's length are fmax and never counted."""
     x = np.ones((2, 8, 4), np.float32)

@@ -1,0 +1,206 @@
+"""Bitmask-join enumeration: packed-mask helpers, vectorized frontier vs the
+pruned recursion, greedy ordering edge cases, the empty-join short-circuit,
+and the PallasBackend packed-subset LRU."""
+import numpy as np
+import pytest
+
+from repro.core import subset_search as ss
+from repro.core.backend import DistanceBlock, NumpyBackend, PallasBackend
+from repro.core.types import TopK, make_dataset
+from repro.data.synthetic import random_queries, synthetic_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synthetic_dataset(n=250, d=6, u=14, t=2, seed=5)
+
+
+# ------------------------------------------------------------- mask helpers
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    for n, m in [(1, 1), (7, 31), (40, 32), (13, 100)]:
+        adj = rng.random((n, m)) < 0.4
+        words = ss.pack_join_mask(adj)
+        assert words.shape == (n, max((m + 31) // 32, 1))
+        np.testing.assert_array_equal(
+            ss.unpack_join_mask(words, m).astype(bool), adj)
+
+
+def test_pair_counts_matches_bruteforce():
+    rng = np.random.default_rng(2)
+    adj = (rng.random((30, 30)) < 0.3)
+    adj = (adj | adj.T).astype(np.uint8)     # join adjacency is symmetric
+    groups = [np.array([0, 3, 7]), np.array([1, 2]), np.array([5, 7, 9, 11])]
+    m = ss.pair_counts(adj, groups)
+    for i in range(3):
+        for j in range(3):
+            if i == j:
+                assert m[i, j] == 0
+            else:
+                want = sum(int(adj[a, b]) for a in groups[i] for b in groups[j])
+                assert m[i, j] == want
+
+
+# ------------------------------------------------------- frontier expansion
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_frontier_matches_recursion(ds, seed):
+    """The vectorized frontier and the pruned recursion produce identical
+    top-k queues (diameters and id sets) on random subsets."""
+    rng = np.random.default_rng(seed)
+    query = list(random_queries(ds, 3, 1, seed=seed)[0])
+    f_ids = np.unique(rng.integers(0, ds.n, size=60))
+    gl = ss.local_groups(f_ids, query, ds)
+    if gl is None:
+        pytest.skip("subset misses a keyword")
+    pts = ds.points[f_ids]
+    dist = ss.pairwise_l2_numpy(pts, pts)
+    pq_f, pq_r = TopK(3), TopK(3)
+    ss.enumerate_with_distances(f_ids, gl, query, ds, pq_f, dist)
+    ss.enumerate_with_distances(f_ids, gl, query, ds, pq_r, dist,
+                                frontier_limit=0)     # force recursion
+    assert len(pq_f.items) > 0
+    assert [c.ids for c in pq_f.items] == [c.ids for c in pq_r.items]
+    np.testing.assert_allclose([c.diameter for c in pq_f.items],
+                               [c.diameter for c in pq_r.items], rtol=1e-12)
+
+
+def test_mask_block_matches_dense_block(ds):
+    """enumerate_with_block over a device-style packed mask == over the dense
+    float64 block (the bitmask-join parity contract), including a pad word."""
+    query = list(random_queries(ds, 2, 1, seed=7)[0])
+    rng = np.random.default_rng(7)
+    f_ids = np.unique(rng.integers(0, ds.n, size=40))   # > 32 -> 2 mask words
+    gl = ss.local_groups(f_ids, query, ds)
+    if gl is None:
+        pytest.skip("subset misses a keyword")
+    pts = ds.points[f_ids]
+    dist = ss.pairwise_l2_numpy(pts, pts)
+    n = len(f_ids)
+    r = float(np.median(dist))
+    dense = DistanceBlock(n=n, slack=0.0, rescore=False, join_count=n * n,
+                          dist=dist)
+    mask = DistanceBlock(n=n, slack=0.0, rescore=True,
+                         join_count=int((dist <= r).sum()),
+                         mask=ss.pack_join_mask(dist <= r))
+    pq_d, pq_m = TopK(3), TopK(3)
+    ss.enumerate_with_block(f_ids, gl, query, ds, pq_d, dense)
+    ss.enumerate_with_block(f_ids, gl, query, ds, pq_m, mask)
+    assert [c.ids for c in pq_m.items] == [c.ids for c in pq_d.items]
+    np.testing.assert_allclose([c.diameter for c in pq_m.items],
+                               [c.diameter for c in pq_d.items], rtol=1e-9)
+
+
+def test_empty_join_short_circuit(ds):
+    """join_count <= n (only diagonal pairs) must yield exactly the single
+    points covering the whole query — and nothing else."""
+    query = list(random_queries(ds, 2, 1, seed=9)[0])
+    cov = [p for p in range(ds.n)
+           if all(ds.has_keyword(p, v) for v in query)]
+    if not cov:
+        pytest.skip("no point covers the query")
+    f_ids = np.unique(np.concatenate(
+        [np.array(cov[:2]), ds.ikp.row(query[0])[:5], ds.ikp.row(query[1])[:5]]
+    ).astype(np.int64))
+    gl = ss.local_groups(f_ids, query, ds)
+    n = len(f_ids)
+    block = DistanceBlock(n=n, slack=0.0, rescore=True, join_count=n,
+                          mask=ss.pack_join_mask(np.eye(n, dtype=bool)))
+    pq = TopK(4)
+    ss.enumerate_with_block(f_ids, gl, query, ds, pq, block)
+    got = {c.ids for c in pq.items}
+    want_pool = {(int(p),) for p in f_ids
+                 if all(ds.has_keyword(int(p), v) for v in query)}
+    assert got <= want_pool and all(c.diameter == 0.0 for c in pq.items)
+    assert len(got) == min(4, len(want_pool))
+
+
+# ------------------------------------------------------------ greedy order
+def test_greedy_group_order_tie_breaking():
+    """Equal-weight edges resolve by (i, j) index order — deterministic."""
+    m = np.zeros((3, 3), dtype=np.int64)      # all edges tie at 0
+    assert ss.greedy_group_order(m) == [0, 1, 2]
+    m = np.array([[0, 5, 2], [5, 0, 2], [2, 2, 0]])
+    # ties between (0,2) and (1,2) at weight 2: edge (0,2) wins by index
+    assert ss.greedy_group_order(m) == [0, 2, 1]
+
+
+def test_greedy_group_order_isolated_groups():
+    """Groups with no surviving pairs still appear exactly once (Alg. 3's
+    isolated-vertex sweep), and a single group is trivially [0]."""
+    assert ss.greedy_group_order(np.zeros((1, 1), dtype=np.int64)) == [0]
+    m = np.array([[0, 3, 0, 0], [3, 0, 0, 0], [0, 0, 0, 0], [0, 0, 0, 0]])
+    order = ss.greedy_group_order(m)
+    assert sorted(order) == [0, 1, 2, 3]
+    assert order[:2] in ([0, 2], [0, 1])  # smallest edge first, then sweep
+
+
+# ----------------------------------------------------------------- the LRU
+def _subset_batch(ds, n_subsets, rng):
+    ids = [np.unique(rng.integers(0, ds.n, size=12)) for _ in range(n_subsets)]
+    keys = [i.tobytes() for i in ids]
+    radii = [5.0] * n_subsets
+    return ids, keys, radii
+
+
+def test_pallas_lru_hits_and_parity(ds):
+    """Second dispatch of the same subsets is served from the packed-tile
+    cache (hits, no extra misses) and returns identical masks."""
+    rng = np.random.default_rng(0)
+    ids, keys, radii = _subset_batch(ds, 6, rng)
+    be = PallasBackend(interpret=True)
+    b1 = be.self_join_blocks(ds.points, ids, radii, keys=keys)
+    misses1 = be.stats.cache_misses
+    assert misses1 > 0 and be.stats.cache_hits == 0
+    b2 = be.self_join_blocks(ds.points, ids, radii, keys=keys)
+    assert be.stats.cache_misses == misses1
+    assert be.stats.cache_hits > 0
+    for x, y in zip(b1, b2):
+        np.testing.assert_array_equal(x.mask, y.mask)
+        assert x.join_count == y.join_count and x.n == y.n
+
+
+def test_pallas_lru_eviction_under_tiny_budget(ds):
+    """A cache too small for the working set evicts (LRU) but never changes
+    results; nothing is cached above budget."""
+    rng = np.random.default_rng(1)
+    ids, keys, radii = _subset_batch(ds, 8, rng)
+    ref = PallasBackend(interpret=True).self_join_blocks(
+        ds.points, ids, radii, keys=keys)
+    be = PallasBackend(interpret=True, cache_bytes=1 << 10)
+    for _ in range(3):
+        got = be.self_join_blocks(ds.points, ids, radii, keys=keys)
+        for x, y in zip(ref, got):
+            np.testing.assert_array_equal(x.mask, y.mask)
+            assert x.join_count == y.join_count
+    assert be.stats.cache_evictions > 0
+    assert be._cache_nbytes <= be.cache_bytes
+
+
+def test_pallas_uncached_without_keys(ds):
+    rng = np.random.default_rng(2)
+    ids, _, radii = _subset_batch(ds, 4, rng)
+    be = PallasBackend(interpret=True)
+    be.self_join_blocks(ds.points, ids, radii)          # keys omitted
+    assert be.stats.cache_hits == 0 and be.stats.cache_misses == 0
+    assert len(be._cache) == 0
+
+
+def test_backends_same_top1(ds):
+    """End-to-end spot check at the subset level: numpy dense blocks and
+    pallas mask blocks drive enumeration to the same best candidate."""
+    query = list(random_queries(ds, 2, 1, seed=13)[0])
+    rng = np.random.default_rng(13)
+    f_ids = np.unique(rng.integers(0, ds.n, size=80))
+    gl = ss.local_groups(f_ids, query, ds)
+    if gl is None:
+        pytest.skip("subset misses a keyword")
+    results = []
+    for be in (NumpyBackend(), PallasBackend(interpret=True)):
+        pq = TopK(1)
+        blocks = be.self_join_blocks(ds.points, [f_ids], [np.inf],
+                                     keys=[f_ids.tobytes()])
+        ss.enumerate_with_block(f_ids, gl, query, ds, pq, blocks[0])
+        results.append(pq.items)
+    assert [c.ids for c in results[0]] == [c.ids for c in results[1]]
+    np.testing.assert_allclose([c.diameter for c in results[0]],
+                               [c.diameter for c in results[1]], rtol=1e-9)
