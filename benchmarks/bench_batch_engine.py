@@ -1,15 +1,25 @@
-"""Batched engine throughput — loop vs the staged plan/backend pipeline.
+"""Batched engine throughput — loop vs the staged plan/backend pipeline,
+single-device vs the sharded serving plane.
 
 The serving question behind the ROADMAP north star: given B concurrent
 queries, how much does amortising bucket selection + dedup + device dispatch
-buy over the per-query loop? Emits the usual CSV rows *and* writes
+buy over the per-query loop — and what does sharding the size-binned join
+dispatches over the mesh add on top? Emits the usual CSV rows *and* writes
 ``BENCH_batch.json`` so the perf trajectory is recorded across PRs:
 
-    PYTHONPATH=src python -m benchmarks.bench_batch_engine [--fast]
+    PYTHONPATH=src python -m benchmarks.bench_batch_engine [--fast] [--mesh N]
 
-Numbers of note: ``*_qps`` (queries/sec) per strategy and the pipeline's
+``--mesh N`` forces N host devices (XLA_FLAGS is set before the first jax
+computation, so it must be the same process from the start — the module
+imports no jax at import time) and adds a sharded-vs-single-device
+comparison per tier: QPS, per-device dispatch counts, and per-shard
+padded-cell utilisation from ``PipelineStats.sharding``.
+
+Numbers of note: ``*_qps`` (queries/sec) per strategy, the pipeline's
 per-scale dispatch counts (the fused path should show exactly one device
-dispatch per live scale, vs one per subset for the loop).
+dispatch per live scale, vs one per subset for the loop), and
+``sharded.shard_utilisation`` (valid-cell fraction per shard — the
+complement is pad waste shipped to that device).
 """
 from __future__ import annotations
 
@@ -17,12 +27,6 @@ import argparse
 import json
 import os
 import time
-
-from benchmarks.common import emit
-from repro.core.backend import NumpyBackend, PallasBackend
-from repro.data.flickr_like import flickr_like_dataset
-from repro.data.synthetic import random_queries
-from repro.serve.engine import NKSEngine
 
 OUT = "BENCH_batch.json"
 
@@ -39,7 +43,33 @@ def _time(fn, reps: int = 3) -> float:
     return best
 
 
-def main(fast: bool = False) -> dict:
+def main(fast: bool = False, mesh: int = 0) -> dict:
+    if mesh > 1 and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        # Must land before the first jax computation: the device count is
+        # locked at backend init. Heavy imports are deferred for the same
+        # reason. An externally forced count (e.g. the CI matrix) wins.
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={mesh}").strip()
+    from benchmarks.common import emit
+    from repro.core.backend import NumpyBackend, PallasBackend
+    from repro.data.flickr_like import flickr_like_dataset
+    from repro.data.synthetic import random_queries
+    from repro.serve.engine import NKSEngine
+
+    if mesh > 1:
+        # Fail fast, before minutes of single-device timing: the device
+        # count is locked at backend init, so a short environment (external
+        # XLA_FLAGS with a smaller count, or jax touched before main) can't
+        # be fixed later in the run.
+        import jax
+        if jax.local_device_count() < mesh:
+            raise RuntimeError(
+                f"--mesh {mesh} needs {mesh} devices but jax sees "
+                f"{jax.local_device_count()} (was a jax computation issued "
+                f"before this process set XLA_FLAGS?)")
+
     n = 1_500 if fast else 6_000
     batch = 16 if fast else 32
     ds = flickr_like_dataset(n=n, d=16, u=30, t=3, n_clusters=12, seed=4)
@@ -48,7 +78,8 @@ def main(fast: bool = False) -> dict:
     k = 2
 
     results: dict = {"n": n, "d": ds.dim, "batch": batch, "k": k,
-                     "fast": fast, "tiers": {}}
+                     "fast": fast, "mesh": mesh if mesh > 1 else 1,
+                     "tiers": {}}
     for tier in ("exact", "approx"):
         t_loop = _time(lambda: [engine.query(q, k=k, tier=tier)
                                 for q in queries])
@@ -88,6 +119,32 @@ def main(fast: bool = False) -> dict:
         emit(f"batch.pallas.{tier}", t_pl / batch * 1e6,
              f"dispatches={pl_stats.total_dispatches}")
 
+    if mesh > 1:
+        from repro.core.device_plane import DevicePlane
+        from repro.launch.mesh import make_serving_mesh
+        plane = DevicePlane(make_serving_mesh(data=mesh))
+        for tier in ("exact", "approx"):
+            shard_be = PallasBackend(plane=plane)
+            engine.query_batch(queries, k=k, tier=tier, backend=shard_be)
+            t_sh = _time(lambda: engine.query_batch(
+                queries, k=k, tier=tier, backend=shard_be))
+            st = engine.last_batch_stats
+            single_qps = results["tiers"][tier]["batch_pallas_qps"]
+            results["tiers"][tier]["sharded"] = {
+                "mesh": mesh,
+                "batch_pallas_sharded_qps": batch / t_sh,
+                "speedup_vs_single": (batch / t_sh) / single_qps,
+                "sharded_dispatches": st.sharded_dispatches,
+                "shard_dispatches": list(st.shard_dispatches),
+                "shard_utilisation": st.shard_utilisation,
+                "padded_cell_ratio": [round(1.0 - u, 4)
+                                      for u in st.shard_utilisation],
+                "phases": st.phases,
+            }
+            emit(f"batch.pallas_sharded.{tier}", t_sh / batch * 1e6,
+                 f"mesh={mesh} sharded={st.sharded_dispatches}"
+                 f"/{st.total_dispatches}")
+
     with open(OUT, "w") as f:
         json.dump(results, f, indent=2)
     print(f"# wrote {os.path.abspath(OUT)}")
@@ -98,4 +155,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     default=os.environ.get("BENCH_FAST", "") == "1")
-    main(fast=ap.parse_args().fast)
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="force N host devices and add the sharded-vs-single"
+                         " comparison (serving plane over the data axis)")
+    args = ap.parse_args()
+    main(fast=args.fast, mesh=args.mesh)

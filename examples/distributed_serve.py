@@ -1,8 +1,11 @@
 """Distributed NKS serving on a device mesh (8 forced host devices).
 
-Demonstrates the DESIGN.md §5 serving path: the relevant-point groups are
-sharded over the ``data`` axis, anchors stay local, candidates merge via a
-global top-k — all inside one shard_map program.
+Demonstrates the sharded serving plane (``core.device_plane``): one
+:class:`DevicePlane` carries every tier — the anchor-star shard_map program
+(relevant-point groups sharded over ``data``, anchors local, candidates
+merged via the replicated top-k collective) *and* the batched exact/approx
+pipeline, whose size-binned join dispatches shard over the same mesh when
+the engine is built with ``mesh=...``.
 
     PYTHONPATH=src python examples/distributed_serve.py
 """
@@ -16,31 +19,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import brute_force
-from repro.core.distributed import distributed_nks_topk, pack_groups
+from repro.core.device_plane import DevicePlane
 from repro.data.flickr_like import flickr_like_dataset
 from repro.data.synthetic import random_queries
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_serving_mesh
+from repro.serve.engine import NKSEngine
 
 
 def main():
-    mesh = make_local_mesh(data=8, model=1)
+    plane = DevicePlane(make_serving_mesh(data=8))
     ds = flickr_like_dataset(n=20_000, d=32, u=300, t=4, n_clusters=32, seed=0)
-    print(f"corpus: {ds.n} points sharded over {mesh.shape['data']} devices")
+    print(f"corpus: {ds.n} points on a {plane.n_shards}-shard serving plane")
 
+    # device tier: the anchor-star shard_map program
     for query in random_queries(ds, q=3, n_queries=3, seed=4):
-        groups, mask, ids = pack_groups(ds, query)
-        with mesh:
-            t0 = time.perf_counter()
-            diams, cand_ids = distributed_nks_topk(
-                mesh, jnp.asarray(groups), jnp.asarray(mask),
-                jnp.asarray(ids), k=3)
-            diams.block_until_ready()
-            dt = time.perf_counter() - t0
+        pg = plane.pack_groups(ds, query)
+        t0 = time.perf_counter()
+        diams, cand_ids = plane.nks_topk(jnp.asarray(pg.groups),
+                                         jnp.asarray(pg.mask),
+                                         jnp.asarray(pg.ids), k=3)
+        np.asarray(diams)
+        dt = time.perf_counter() - t0
         truth = brute_force.search(ds, query, k=1).items[0]
         best = float(diams[0])
         print(f"query {query}: device top-1 diameter={best:.2f} "
               f"(truth {truth.diameter:.2f}, ratio {best / max(truth.diameter, 1e-9):.3f}) "
               f"ids={sorted(set(int(i) for i in cand_ids[0]))} [{dt * 1e3:.1f} ms]")
+
+    # exact tier on the same plane: sharded size-binned join dispatches
+    engine = NKSEngine(ds, m=2, n_scales=5, seed=0, build_approx=False,
+                       mesh=plane)
+    queries = random_queries(ds, q=3, n_queries=8, seed=5)
+    out = engine.query_batch(queries, k=2, tier="exact", backend="pallas")
+    st = engine.last_batch_stats
+    print(f"exact batch: {len(out)} queries, "
+          f"{st.sharded_dispatches}/{st.total_dispatches} dispatches sharded, "
+          f"per-device counts {st.shard_dispatches}, "
+          f"shard utilisation {st.shard_utilisation}")
 
 
 if __name__ == "__main__":

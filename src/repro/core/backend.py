@@ -63,6 +63,19 @@ class BackendStats:
     cache_hits: int = 0        # packed-subset/tile LRU hits
     cache_misses: int = 0
     cache_evictions: int = 0
+    # Sharded-dispatch accounting (populated when a DevicePlane routes the
+    # dispatch over the mesh; lists are indexed by shard/device position on
+    # the plane's data axis and sized lazily on first device dispatch).
+    sharded_dispatches: int = 0            # dispatches routed via shard_map
+    t_collective_s: float = 0.0            # wall inside sharded dispatches
+    shard_dispatches: list = dataclasses.field(default_factory=list)
+    shard_valid_cells: list = dataclasses.field(default_factory=list)
+    shard_total_cells: list = dataclasses.field(default_factory=list)
+
+    def ensure_shards(self, n: int) -> None:
+        for lst in (self.shard_dispatches, self.shard_valid_cells,
+                    self.shard_total_cells):
+            lst.extend([0] * (n - len(lst)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +177,15 @@ class PallasBackend(DistanceBackend):
     Off-TPU the fused dispatch lowers through XLA (``kernels.ops`` routes by
     backend; the Pallas program is the Mosaic artifact, its interpreter a
     debugging tool). ``cache_bytes`` bounds the packed-subset/tile LRU.
+
+    ``plane`` (a :class:`~repro.core.device_plane.DevicePlane`) makes
+    multi-device execution a property of this backend: a size-binned dispatch
+    that packs at least one subset per mesh shard is routed through the
+    plane's ``shard_map`` join — subsets sharded on S over the ``data`` axis,
+    packed bitmasks + join counts gathered back on readback, per-shard
+    utilisation recorded in the stats. Remainder bins (fewer subsets than
+    shards) keep the single-device dispatch; the per-shard math is identical
+    either way, so blocks are bit-exact across routes.
     """
 
     name = "pallas"
@@ -171,7 +193,8 @@ class PallasBackend(DistanceBackend):
     def __init__(self, *, bm: int = 128, bn: int = 128,
                  interpret: bool | None = None, quantum: int = 8,
                  max_block_bytes: int = 256 << 20,
-                 cache_bytes: int = 128 << 20) -> None:
+                 cache_bytes: int = 128 << 20,
+                 plane=None) -> None:
         super().__init__()
         self.bm = bm
         self.bn = bn
@@ -179,6 +202,7 @@ class PallasBackend(DistanceBackend):
         self.quantum = quantum
         self.max_block_bytes = max_block_bytes
         self.cache_bytes = cache_bytes
+        self.plane = plane
         # LRU over both per-subset packed rows and whole device-committed
         # dispatch tiles; values are (nbytes, payload). Entries are only
         # valid for one corpus: subset keys are id bytes, so a backend
@@ -337,12 +361,28 @@ class PallasBackend(DistanceBackend):
         n_subsets = len(id_lists)
         lengths = np.fromiter((len(ids) for ids in id_lists), np.int32,
                               count=n_subsets)
+        # Route over the device plane when the bin packs at least one subset
+        # per shard; thinner bins (the remainder after chunking) stay on a
+        # single device — sharding them would only ship empty slabs.
+        plane = self.plane
+        sharded = plane is not None and n_subsets >= plane.n_shards
         s_pad = self._round(n_subsets)
-        if s_pad * p_pad * p_pad > max(1, self.max_block_bytes // 4):
-            s_pad = n_subsets   # shape-reuse rounding must not blow the budget
+        if sharded:
+            s_pad = plane.shard_pad(s_pad)
+        budget_cells = max(1, self.max_block_bytes // 4)
+        if s_pad * p_pad * p_pad > budget_cells:
+            # Shape-reuse rounding must not blow the budget. Sharding needs a
+            # shard multiple; if even the minimal one is over budget, the bin
+            # drops to the single-device route at its exact size.
+            s_pad = plane.shard_pad(n_subsets) if sharded else n_subsets
+            if sharded and s_pad * p_pad * p_pad > budget_cells:
+                sharded = False
+                s_pad = n_subsets
 
         tile_key = None if any(k is None for k in keys) \
-            else ("tile", tuple(keys), s_pad, p_pad)
+            else ("tile", tuple(keys), s_pad, p_pad, sharded)
+        lens_pad = np.zeros(s_pad, np.int32)
+        lens_pad[:n_subsets] = lengths
         cached_tile = self._cache_get(tile_key) if tile_key else None
         if cached_tile is not None:
             # Packed tiles already live on the device: skip gather, packing,
@@ -353,6 +393,14 @@ class PallasBackend(DistanceBackend):
             # fraction of subset packs avoided.
             self.stats.cache_hits += n_subsets
             x_dev, lens_dev, slacks = cached_tile
+            # Keep the per-subset row entries warm too: a long streak of
+            # tile hits must not LRU-starve them, or a later re-binning
+            # (chunk boundaries shift when radii tighten) re-packs rows the
+            # cache nominally still held. Recency touch only — the hit
+            # counter above already accounts for these subsets.
+            for key in keys:
+                if ("subset", key) in self._cache:
+                    self._cache.move_to_end(("subset", key))
         else:
             slacks = np.zeros(n_subsets, np.float64)
             d = points.shape[1]
@@ -360,10 +408,14 @@ class PallasBackend(DistanceBackend):
             for i, (ids, key) in enumerate(zip(id_lists, keys)):
                 rows, slacks[i] = self._subset_rows(points, ids, key)
                 x[i, : len(ids)] = rows
-            lens_pad = np.zeros(s_pad, np.int32)
-            lens_pad[:n_subsets] = lengths
-            x_dev = jnp.asarray(x)
-            lens_dev = jnp.asarray(lens_pad)
+            if sharded:
+                # Commit the tile scattered over the mesh's data axis so the
+                # sharded dispatch starts from the right placement (a cached
+                # sharded tile stays resident exactly where it will be used).
+                x_dev, lens_dev = plane.put_sharded(x, lens_pad)
+            else:
+                x_dev = jnp.asarray(x)
+                lens_dev = jnp.asarray(lens_pad)
             if tile_key is not None:
                 self._cache_put(tile_key, (x_dev, lens_dev, slacks),
                                 x.nbytes + slacks.nbytes)
@@ -379,18 +431,44 @@ class PallasBackend(DistanceBackend):
         self.stats.t_pack_s += time.perf_counter() - t0
 
         t1 = time.perf_counter()
-        mask, cnt = ops.pairwise_l2_join_batched_masked(
-            x_dev, lens_dev, r, bm=self.bm, bn=self.bn,
-            interpret=self.interpret)
+        if sharded:
+            mask, cnt = plane.join_batched_masked(
+                x_dev, lens_dev, r, bm=self.bm, bn=self.bn,
+                interpret=self.interpret)
+        else:
+            mask, cnt = ops.pairwise_l2_join_batched_masked(
+                x_dev, lens_dev, r, bm=self.bm, bn=self.bn,
+                interpret=self.interpret)
         mask = np.asarray(mask)
         counts = np.asarray(cnt)
-        self.stats.t_dispatch_s += time.perf_counter() - t1
+        dt = time.perf_counter() - t1
+        self.stats.t_dispatch_s += dt
 
         self.stats.dispatches += 1
         self.stats.subsets += n_subsets
         self.stats.points_packed += int(lengths.sum())
         self.stats.points_padded += s_pad * p_pad - int(lengths.sum())
         self.stats.join_pairs += int(counts[:n_subsets].sum())
+        if sharded:
+            # Per-shard accounting: every device participated; utilisation is
+            # valid vs total join-block cells on each shard's slab.
+            self.stats.sharded_dispatches += 1
+            self.stats.t_collective_s += dt
+            n_sh = plane.n_shards
+            self.stats.ensure_shards(n_sh)
+            valid, total = plane.shard_cells(lens_pad, p_pad)
+            for i in range(n_sh):
+                self.stats.shard_dispatches[i] += 1
+                self.stats.shard_valid_cells[i] += valid[i]
+                self.stats.shard_total_cells[i] += total[i]
+        else:
+            # Single-device dispatch lands on the default device (shard 0 of
+            # the plane when one is attached).
+            self.stats.ensure_shards(max(1, plane.n_shards if plane else 1))
+            self.stats.shard_dispatches[0] += 1
+            self.stats.shard_valid_cells[0] += int(
+                (lengths.astype(np.int64) ** 2).sum())
+            self.stats.shard_total_cells[0] += s_pad * p_pad * p_pad
 
         out = []
         for i, ids in enumerate(id_lists):

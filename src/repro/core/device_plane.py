@@ -1,0 +1,261 @@
+"""The device plane: one mesh/placement layer for every serving tier.
+
+Before this layer existed the repo had two parallel universes: the batched
+bitmask-join pipeline (``core.backend``) dispatched every packed (S, P, d)
+bin on a single device, while the shard_map anchor-star tier lived alone in
+``core.distributed`` behind a separate engine code path. :class:`DevicePlane`
+makes multi-device execution a property of the backend instead:
+
+  * **mesh acquisition** — a plane wraps a jax mesh (``launch.mesh``
+    constructors, ``REPRO_MESH_OVERRIDE`` honored) and exposes the serving
+    axis contract: the ``data`` axis shards subsets/groups; ``model`` is
+    unused by serving.
+  * **sharded batched join** — :meth:`join_batched_masked` runs the packed
+    masked self-join as a ``shard_map`` over ``data``: each shard computes
+    its (S/n, P, d) slab locally through the same lowering as the
+    single-device path (``kernels.ops.join_batched_masked_local`` — Mosaic
+    on TPU, XLA elsewhere), packed bitmasks + join counts gather back on
+    readback. The join is embarrassingly parallel over S, so the per-shard
+    math is *identical* to the single-device dispatch and the bitmasks are
+    bit-exact (the parity suite asserts this).
+  * **group/tile packing** — :func:`pack_groups` (moved here from
+    ``core.distributed``) pads keyword groups to an MXU/shard-aligned (q, R,
+    d) block and now reports truncation instead of silently dropping points.
+  * **replicated top-k merge** — :func:`replicated_topk_merge` is the
+    phase-C collective every sharded tier ends on; ``nks_topk`` rebuilds the
+    anchor-star tier (``distributed_nks_topk``) on it.
+
+``PallasBackend(plane=...)`` routes size-binned dispatches here when a bin
+packs at least one subset per shard; remainder bins (S < mesh size) fall
+back to its single-device dispatch. ``serve.engine.NKSEngine(mesh=...)``
+builds the plane once and threads it through all three tiers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class PackedGroups:
+    """Padded (q, R, d) group tensor + mask + ids for one query.
+
+    Iterates as the classic ``(groups, mask, ids)`` triple so existing
+    callers keep unpacking it; ``truncated`` counts relevant points silently
+    dropped because a keyword group exceeded ``r_max`` (0 when every group
+    fit), and ``group_sizes`` records the pre-truncation group sizes.
+    """
+
+    groups: np.ndarray          # (q, R, d) float32
+    mask: np.ndarray            # (q, R) bool
+    ids: np.ndarray             # (q, R) int32
+    truncated: int
+    group_sizes: list[int]
+
+    def __iter__(self):
+        return iter((self.groups, self.mask, self.ids))
+
+
+def pack_groups(dataset, query, r_max: int | None = None, *,
+                strict: bool = False, align: int = 128) -> PackedGroups:
+    """Host packing of per-keyword relevant groups for the device tiers.
+
+    R defaults to the largest group size rounded up to ``align`` (128 = MXU
+    lane alignment; planes round it up further to a shard multiple). A group
+    larger than an explicit ``r_max`` is truncated to the first ``r_max``
+    points — counted in ``PackedGroups.truncated`` and fatal under
+    ``strict=True`` (candidates containing a dropped point are unreachable,
+    so a strict caller wants the signal, not a quietly degraded answer).
+    """
+    groups = [dataset.points_with(v) for v in query]
+    sizes = [len(g) for g in groups]
+    if r_max is None:
+        r_max = max(align, int(np.ceil(max(sizes) / align)) * align)
+    truncated = sum(max(s - r_max, 0) for s in sizes)
+    if strict and truncated:
+        raise ValueError(
+            f"pack_groups: {truncated} relevant points truncated beyond "
+            f"r_max={r_max} (group sizes {sizes}); raise r_max or drop strict")
+    q = len(query)
+    out = np.zeros((q, r_max, dataset.dim), np.float32)
+    mask = np.zeros((q, r_max), bool)
+    ids = np.zeros((q, r_max), np.int32)
+    for j, g in enumerate(groups):
+        g = g[:r_max]
+        out[j, :len(g)] = dataset.points[g]
+        mask[j, :len(g)] = True
+        ids[j, :len(g)] = g
+    return PackedGroups(out, mask, ids, truncated, sizes)
+
+
+def replicated_topk_merge(axis: str, diams, cand_ids, k: int):
+    """Phase-C collective: merge per-shard top-k into a replicated global one.
+
+    ``diams`` (k,) ascending per shard, ``cand_ids`` (k, q). all_gathers both
+    over ``axis`` and re-selects the k smallest — every shard returns the
+    identical merged (diams (k,), ids (k, q))."""
+    d_all = jax.lax.all_gather(diams, axis, tiled=True)            # (n*k,)
+    c_all = jax.lax.all_gather(cand_ids, axis, axis=0, tiled=True)  # (n*k, q)
+    neg, sel = jax.lax.top_k(-d_all, k)
+    return -neg, c_all[sel]
+
+
+class DevicePlane:
+    """One mesh + the serving-axis contract, shared by every sharded tier."""
+
+    def __init__(self, mesh: Mesh | None = None, *, axis: str = "data"):
+        if mesh is None:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh()
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = axis
+        self._join_fns: dict[tuple, object] = {}
+        self._nks_fns: dict[tuple, object] = {}
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def shard_pad(self, n: int) -> int:
+        """Round ``n`` up to a multiple of the shard count (shard_map needs
+        the sharded axis evenly divisible)."""
+        s = self.n_shards
+        return ((n + s - 1) // s) * s
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------------ sharded join
+    def _join_fn(self, bm: int, bn: int, impl: str | None,
+                 interpret: bool | None):
+        key = (bm, bn, impl, interpret)
+        fn = self._join_fns.get(key)
+        if fn is None:
+            from repro.kernels import ops
+            ax = self.axis
+
+            def body(x_loc, len_loc, r_loc):
+                return ops.join_batched_masked_local(
+                    x_loc, len_loc, r_loc, bm=bm, bn=bn,
+                    impl=impl, interpret=interpret)
+
+            sharded = shard_map(body, mesh=self.mesh,
+                                in_specs=(P(ax), P(ax), P(ax)),
+                                out_specs=(P(ax), P(ax)),
+                                check_rep=False)
+            fn = jax.jit(sharded,
+                         in_shardings=(self.sharding(P(ax)),
+                                       self.sharding(P(ax)),
+                                       self.sharding(P(ax))))
+            self._join_fns[key] = fn
+        return fn
+
+    def join_batched_masked(self, x, lengths, r, *, bm: int = 128,
+                            bn: int = 128, impl: str | None = None,
+                            interpret: bool | None = None):
+        """Sharded masked batched self-join: (S, P, d) sharded on S over the
+        ``data`` axis, one local join per shard, no cross-shard collectives.
+
+        Returns (mask (S, P, ceil(P/32)) uint32, counts (S,) int32) with the
+        same contract as ``ops.pairwise_l2_join_batched_masked``. S must be a
+        multiple of :attr:`n_shards` (callers pad with zero-length subsets,
+        which produce all-zero mask rows and zero counts)."""
+        s = x.shape[0]
+        if s % self.n_shards:
+            raise ValueError(
+                f"sharded join needs S % n_shards == 0, got S={s} over "
+                f"{self.n_shards} shards (pad with zero-length subsets)")
+        return self._join_fn(bm, bn, impl, interpret)(x, lengths, r)
+
+    def put_sharded(self, *arrays):
+        """Commit host arrays to the mesh, sharded on dim 0 over ``data``."""
+        sh = self.sharding(P(self.axis))
+        return tuple(jax.device_put(a, sh) for a in arrays)
+
+    def shard_cells(self, lengths: np.ndarray, p_pad: int
+                    ) -> tuple[list[int], list[int]]:
+        """Per-shard (valid, total) join-block cell counts for one dispatch.
+
+        ``lengths`` is the padded (S,) valid-point vector the dispatch
+        shipped; shard i owns the contiguous slab [i*S/n, (i+1)*S/n). Valid
+        cells are sum(len^2) over the slab, total is slab * P^2 — the
+        utilisation ratio the stats report per shard."""
+        n = self.n_shards
+        per = len(lengths) // n
+        lens = np.asarray(lengths, np.int64)
+        valid = [int((lens[i * per:(i + 1) * per] ** 2).sum())
+                 for i in range(n)]
+        total = [per * p_pad * p_pad] * n
+        return valid, total
+
+    # --------------------------------------------------------- anchor-star tier
+    def _nks_fn(self, k: int):
+        fn = self._nks_fns.get(k)
+        if fn is None:
+            from repro.core.distributed import nks_anchor_topk
+            ax = self.axis
+
+            def body(g_loc, m_loc, i_loc):
+                # phase A: gather the full relevant set (small by eq. 4
+                # selectivity); phase B: anchors stay partitioned — each
+                # shard scores its local slice of group 0.
+                g_all = jax.lax.all_gather(g_loc, ax, axis=1, tiled=True)
+                m_all = jax.lax.all_gather(m_loc, ax, axis=1, tiled=True)
+                i_all = jax.lax.all_gather(i_loc, ax, axis=1, tiled=True)
+                diams, cids = nks_anchor_topk(
+                    g_all, m_all, i_all, k,
+                    anchors=g_loc[0], anchor_mask=m_loc[0],
+                    anchor_ids=i_loc[0])
+                # phase C: replicated global top-k
+                return replicated_topk_merge(ax, diams, cids, k)
+
+            spec_in = P(None, self.axis, None)
+            fn = jax.jit(shard_map(body, mesh=self.mesh,
+                                   in_specs=(spec_in, P(None, self.axis),
+                                             P(None, self.axis)),
+                                   out_specs=(P(), P()),
+                                   check_rep=False))
+            self._nks_fns[k] = fn
+        return fn
+
+    def nks_topk(self, groups, mask, ids, k: int):
+        """Anchor-star NKS top-k over the plane: ``groups`` (q, R, d) sharded
+        on R over ``data``; returns (diams (k,), ids (k, q)) replicated."""
+        if groups.shape[1] % self.n_shards:
+            raise ValueError(
+                f"nks_topk needs R % n_shards == 0, got R={groups.shape[1]} "
+                f"over {self.n_shards} shards (pack with a shard-aligned r_max)")
+        return self._nks_fn(k)(groups, mask, ids)
+
+    def pack_groups(self, dataset, query, r_max: int | None = None, *,
+                    strict: bool = False) -> PackedGroups:
+        """:func:`pack_groups` with R rounded up to a shard multiple so the
+        result feeds :meth:`nks_topk` directly."""
+        pg = pack_groups(dataset, query, r_max, strict=strict)
+        r_pad = self.shard_pad(pg.groups.shape[1])
+        if r_pad != pg.groups.shape[1]:
+            extra = r_pad - pg.groups.shape[1]
+            pg = PackedGroups(
+                np.pad(pg.groups, ((0, 0), (0, extra), (0, 0))),
+                np.pad(pg.mask, ((0, 0), (0, extra))),
+                np.pad(pg.ids, ((0, 0), (0, extra))),
+                pg.truncated, pg.group_sizes)
+        return pg
+
+
+def get_plane(mesh=None, *, axis: str = "data") -> DevicePlane:
+    """Resolve a plane spec: an existing plane, a jax Mesh, or None/"auto"
+    (acquire the serving mesh from the environment)."""
+    if isinstance(mesh, DevicePlane):
+        return mesh
+    if mesh is None or mesh == "auto":
+        return DevicePlane(axis=axis)
+    return DevicePlane(mesh, axis=axis)

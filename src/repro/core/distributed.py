@@ -14,25 +14,27 @@ Two layers:
    utilisation. The exact ProMiSH-E path (host-orchestrated, repro.core)
    re-scores the returned candidates when exactness is required.
 
-2. ``distributed_nks_topk`` — shard_map over the ``data`` axis:
-   * each shard holds a slice of every keyword group (relevant points only —
-     the paper's selectivity argument, eq. 4, keeps this small);
-   * phase A: all_gather the (q, R, d) groups (the collective the roofline
-     measures);
-   * phase B: anchors stay partitioned — each device scores its local anchor
-     slice against the gathered groups (bucket-range partition analogue);
-   * phase C: all_gather per-shard top-k (k·q ids + k diameters) and reduce
-     to a global top-k, replicated on every shard.
+2. ``distributed_nks_topk`` — the same tier on the device plane
+   (``core.device_plane``): each shard holds a slice of every keyword group,
+   phase A all_gathers the (q, R, d) groups, phase B keeps anchors
+   partitioned (each device scores its local anchor slice), phase C merges
+   per-shard top-k through ``device_plane.replicated_topk_merge``. The mesh/
+   placement logic lives in :class:`~repro.core.device_plane.DevicePlane`,
+   shared with the sharded batched-join dispatch — this module keeps only
+   the single-shard kernel and thin compatibility wrappers.
+
+``pack_groups`` moved to ``core.device_plane`` (it is placement logic: the
+plane rounds R up to shard multiples); re-exported here unchanged.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from repro.core.device_plane import (DevicePlane, PackedGroups,  # noqa: F401
+                                     pack_groups)
 
 BIG = jnp.float32(3.4e38)
 
@@ -96,58 +98,24 @@ def nks_anchor_topk(groups, mask, ids, k: int, *, anchors=None,
     return -neg, cand_ids[idx]
 
 
+_PLANES: dict[tuple, DevicePlane] = {}
+
+
 def distributed_nks_topk(mesh: Mesh, groups, mask, ids, k: int,
                          axis: str = "data"):
-    """Sharded NKS top-k. ``groups`` (q, R_total, d) is sharded on R over
-    ``axis``; returns (diams (k,), ids (k, q)) fully replicated."""
-    q, r_total, d = groups.shape
-
-    def body(g_loc, m_loc, i_loc):
-        # phase A: gather the full relevant set (small by eq. 4 selectivity)
-        g_all = jax.lax.all_gather(g_loc, axis, axis=1, tiled=True)
-        m_all = jax.lax.all_gather(m_loc, axis, axis=1, tiled=True)
-        i_all = jax.lax.all_gather(i_loc, axis, axis=1, tiled=True)
-        # phase B: local anchors (this shard's slice of group 0)
-        diams, cids = nks_anchor_topk(
-            g_all, m_all, i_all, k,
-            anchors=g_loc[0], anchor_mask=m_loc[0], anchor_ids=i_loc[0])
-        # phase C: global top-k merge
-        d_all = jax.lax.all_gather(diams, axis, tiled=True)        # (P*k,)
-        c_all = jax.lax.all_gather(cids, axis, axis=0, tiled=True)  # (P*k, q)
-        neg, sel = jax.lax.top_k(-d_all, k)
-        return -neg, c_all[sel]
-
-    spec_in = P(None, axis, None)
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(spec_in, P(None, axis), P(None, axis)),
-                   out_specs=(P(), P()),
-                   check_rep=False)
-    return fn(groups, mask, ids)
-
-
-def pack_groups(dataset, query, r_max: int | None = None):
-    """Host packing: (q, R, d) padded group tensor + mask + ids for a query.
-    R defaults to the largest group size rounded up to 128 (MXU alignment)."""
-    import numpy as np
-    groups = [dataset.points_with(v) for v in query]
-    sizes = [len(g) for g in groups]
-    if r_max is None:
-        r_max = max(128, int(np.ceil(max(sizes) / 128.0)) * 128)
-    q = len(query)
-    out = np.zeros((q, r_max, dataset.dim), np.float32)
-    mask = np.zeros((q, r_max), bool)
-    ids = np.zeros((q, r_max), np.int32)
-    for j, g in enumerate(groups):
-        g = g[:r_max]
-        out[j, :len(g)] = dataset.points[g]
-        mask[j, :len(g)] = True
-        ids[j, :len(g)] = g
-    return out, mask, ids
+    """Sharded NKS top-k on the device plane. ``groups`` (q, R_total, d) is
+    sharded on R over ``axis``; returns (diams (k,), ids (k, q)) fully
+    replicated. Compatibility wrapper over ``DevicePlane.nks_topk``; planes
+    are memoised per (mesh, axis) so repeat calls reuse the compiled
+    shard_map program instead of retracing."""
+    plane = _PLANES.get((mesh, axis))
+    if plane is None:
+        plane = _PLANES[(mesh, axis)] = DevicePlane(mesh, axis=axis)
+    return plane.nks_topk(groups, mask, ids, k)
 
 
 def search_step_specs(q: int, r_total: int, d: int, k: int):
     """ShapeDtypeStructs + PartitionSpecs for dry-running the serve step."""
-    import jax.numpy as jnp
     structs = (jax.ShapeDtypeStruct((q, r_total, d), jnp.float32),
                jax.ShapeDtypeStruct((q, r_total), jnp.bool_),
                jax.ShapeDtypeStruct((q, r_total), jnp.int32))

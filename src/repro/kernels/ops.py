@@ -92,9 +92,20 @@ def _xla_join_batched_masked(x, lengths, r, with_sq):
     return mask, cnt
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "with_sq", "impl",
-                                             "interpret"))
-def _join_batched_masked(x, lengths, r, *, bm, bn, with_sq, impl, interpret):
+def join_batched_masked_local(x, lengths, r, *, bm: int = 128, bn: int = 128,
+                              with_sq: bool = False, impl: str | None = None,
+                              interpret: bool | None = None):
+    """Un-jit'd masked batched self-join, safe to call under an outer trace.
+
+    Same contract as :func:`pairwise_l2_join_batched_masked` but composable:
+    ``core.device_plane`` calls this inside a ``shard_map`` body so each mesh
+    shard runs the join on its local (S/n, P, d) slab. ``impl`` routing is
+    resolved at trace time (Mosaic on TPU, the XLA lowering elsewhere)."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    interpret = _default_interpret() if interpret is None else interpret
     if impl == "xla":
         return _xla_join_batched_masked(x, lengths, r, with_sq)
     out = _pairwise.pairwise_l2_join_batched_masked(
@@ -104,6 +115,14 @@ def _join_batched_masked(x, lengths, r, *, bm, bn, with_sq, impl, interpret):
         return mask, cnt.sum(axis=(1, 2)), sq
     mask, cnt = out
     return mask, cnt.sum(axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "with_sq", "impl",
+                                             "interpret"))
+def _join_batched_masked(x, lengths, r, *, bm, bn, with_sq, impl, interpret):
+    return join_batched_masked_local(x, lengths, r, bm=bm, bn=bn,
+                                     with_sq=with_sq, impl=impl,
+                                     interpret=interpret)
 
 
 def pairwise_l2_join_batched_masked(x: jax.Array, lengths: jax.Array,

@@ -9,6 +9,14 @@ Axes:
                 gradient all-reduce) or pipeline stages;
   * ``data``  — intra-pod DP/FSDP axis (batch + parameter/optimizer shards);
   * ``model`` — TP/EP axis (heads, FFN hidden, vocab, experts, SSM heads).
+
+Serving contract (``core.device_plane``): the NKS serving plane shards work
+(packed join subsets, relevant-point groups) over ``data`` only — ``model``
+is unused by serving and stays size 1 on serving meshes.
+``REPRO_MESH_OVERRIDE`` (comma-separated axis sizes, e.g. ``8,1``) is the
+debug override read by :func:`make_production_mesh` (full shape) and by
+:func:`make_serving_mesh` when no explicit ``data`` size is passed (first
+value); :func:`make_local_mesh` always uses its explicit arguments.
 """
 from __future__ import annotations
 
@@ -26,6 +34,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(data: int | None = None):
+    """(data, model=1) mesh for the NKS serving plane.
+
+    ``data`` defaults to ``REPRO_MESH_OVERRIDE``'s first axis size when set,
+    else every local device. Serving shards subsets over ``data``; ``model``
+    exists only so the mesh satisfies the production axis contract."""
+    import os
+    if data is None:
+        override = os.environ.get("REPRO_MESH_OVERRIDE")
+        data = int(override.split(",")[0]) if override \
+            else jax.local_device_count()
+    return jax.make_mesh((data, 1), ("data", "model"))
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int | None = None):

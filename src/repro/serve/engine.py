@@ -9,6 +9,14 @@ from a ProMiSH index over an embedding corpus. Three quality/latency tiers:
                   batched and shardable over the mesh; used when the corpus
                   is sharded across chips.
 
+All three tiers flow through one device plane (``core.device_plane``) when
+the engine is built with ``mesh=...``: the exact/approx pipeline routes its
+size-binned join dispatches through the plane's shard_map (subsets sharded
+on S over the ``data`` axis), and the device tier dispatches the anchor-star
+shard_map program on the same mesh. Without a mesh everything runs
+single-device — multi-device execution is a property of the backend, not a
+separate code path.
+
 ``query_batch`` runs the exact/approx tiers as a **staged batched pipeline**
 on the plan/backend layers: per scale, bucket selection for the whole batch
 is amortised through ``core.plan.plan_scale`` (shared per-query Algorithm-2
@@ -35,10 +43,13 @@ import numpy as np
 
 from repro.core import plan, promish_a, promish_e
 from repro.core.backend import DistanceBackend, get_backend
-from repro.core.distributed import nks_anchor_topk, pack_groups
 from repro.core.index import PromishIndex, build_index
 from repro.core.subset_search import enumerate_with_block, local_groups
 from repro.core.types import Candidate, KeywordDataset, TopK, make_dataset
+
+# repro.core.distributed / device_plane import the jax device stack; they are
+# loaded lazily so the numpy control plane stays importable everywhere and
+# XLA_FLAGS can still be set after importing this module.
 
 
 @dataclasses.dataclass
@@ -88,6 +99,17 @@ class PipelineStats:
     t_enumerate_s: float = 0.0
     cache_hits: int = 0
     cache_misses: int = 0
+    # Device-plane accounting (empty / zero when no mesh is attached):
+    # ``shard_dispatches[i]`` counts dispatches device i participated in
+    # (single-device dispatches land on shard 0), the cell counters measure
+    # per-shard join-block utilisation (valid vs padded cells on each
+    # shard's slab), and ``t_collective_s`` is the wall time spent inside
+    # shard_map dispatches (device compute + cross-device gather-back).
+    sharded_dispatches: int = 0
+    t_collective_s: float = 0.0
+    shard_dispatches: list[int] = dataclasses.field(default_factory=list)
+    shard_valid_cells: list[int] = dataclasses.field(default_factory=list)
+    shard_total_cells: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def dispatches_per_scale(self) -> list[int]:
@@ -98,6 +120,13 @@ class PipelineStats:
         return sum(s.dispatches for s in self.scales) + self.fallback_dispatches
 
     @property
+    def shard_utilisation(self) -> list[float]:
+        """Valid-cell fraction of each shard's packed join blocks (the
+        complement is pad waste shipped to that device)."""
+        return [round(v / t, 4) if t else 0.0
+                for v, t in zip(self.shard_valid_cells, self.shard_total_cells)]
+
+    @property
     def phases(self) -> dict:
         """JSON-ready phase breakdown for the benchmark trajectory."""
         probed = self.cache_hits + self.cache_misses
@@ -106,17 +135,40 @@ class PipelineStats:
             "pack_s": round(self.t_pack_s, 6),
             "dispatch_s": round(self.t_dispatch_s, 6),
             "enumerate_s": round(self.t_enumerate_s, 6),
+            "collective_s": round(self.t_collective_s, 6),
             "cache_hit_rate": round(self.cache_hits / probed, 4) if probed else None,
+        }
+
+    @property
+    def sharding(self) -> dict:
+        """JSON-ready device-plane summary for the benchmark trajectory."""
+        return {
+            "sharded_dispatches": self.sharded_dispatches,
+            "shard_dispatches": list(self.shard_dispatches),
+            "shard_utilisation": self.shard_utilisation,
+            "collective_s": round(self.t_collective_s, 6),
         }
 
 
 class NKSEngine:
     def __init__(self, dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
-                 seed: int = 0, build_exact: bool = True, build_approx: bool = True):
+                 seed: int = 0, build_exact: bool = True, build_approx: bool = True,
+                 mesh=None):
+        """``mesh`` attaches a device plane: a jax Mesh (with a ``data``
+        axis), an existing :class:`~repro.core.device_plane.DevicePlane`, or
+        ``"auto"`` to acquire the serving mesh from the environment
+        (``REPRO_MESH_OVERRIDE`` / all local devices). With a plane attached,
+        ``backend="pallas"`` dispatches shard over the mesh and the device
+        tier runs the sharded anchor-star program; ``mesh=None`` (default)
+        keeps every tier single-device."""
         self.dataset = dataset
         self.index_e: PromishIndex | None = None
         self.index_a: PromishIndex | None = None
         self.last_batch_stats: PipelineStats | None = None
+        self.plane = None
+        if mesh is not None:
+            from repro.core.device_plane import get_plane
+            self.plane = get_plane(mesh)
         if build_exact:
             self.index_e = build_index(dataset, m=m, n_scales=n_scales,
                                        exact=True, seed=seed)
@@ -133,6 +185,46 @@ class NKSEngine:
         points = np.concatenate(embs, axis=0)
         return cls(make_dataset(points, keywords), **kw)
 
+    def _device_topk(self, keywords: Sequence[int], k: int,
+                     stats: PipelineStats | None = None) -> list[Candidate]:
+        """One anchor-star dispatch through the plane (sharded) or the
+        single-device kernel — the device tier's unit of work."""
+        import jax.numpy as jnp
+        from repro.core.distributed import nks_anchor_topk
+        t0 = time.perf_counter()
+        if self.plane is not None:
+            pg = self.plane.pack_groups(self.dataset, list(keywords))
+            t1 = time.perf_counter()
+            diams, cids = self.plane.nks_topk(jnp.asarray(pg.groups),
+                                              jnp.asarray(pg.mask),
+                                              jnp.asarray(pg.ids), k)
+            diams = np.asarray(diams)
+            if stats is not None:
+                stats.sharded_dispatches += 1
+                stats.t_collective_s += time.perf_counter() - t1
+                for i in range(self.plane.n_shards):
+                    stats.shard_dispatches[i] += 1
+        else:
+            from repro.core.device_plane import pack_groups
+            groups, mask, ids = pack_groups(self.dataset, list(keywords))
+            t1 = time.perf_counter()
+            diams, cids = nks_anchor_topk(jnp.asarray(groups),
+                                          jnp.asarray(mask),
+                                          jnp.asarray(ids), k)
+            diams = np.asarray(diams)
+            if stats is not None:
+                stats.shard_dispatches[0] += 1
+        if stats is not None:
+            stats.t_pack_s += t1 - t0
+            stats.t_dispatch_s += time.perf_counter() - t1
+        cands = []
+        for i in range(k):
+            if not np.isfinite(float(diams[i])):
+                continue
+            ids_i = tuple(sorted(set(int(x) for x in cids[i])))
+            cands.append(Candidate(ids=ids_i, diameter=float(diams[i])))
+        return cands
+
     def query(self, keywords: Sequence[int], k: int = 1,
               tier: str = "approx") -> QueryResult:
         t0 = time.perf_counter()
@@ -141,17 +233,7 @@ class NKSEngine:
         elif tier == "approx":
             pq = promish_a.search(self.dataset, self.index_a, keywords, k=k)
         elif tier == "device":
-            import jax.numpy as jnp
-            groups, mask, ids = pack_groups(self.dataset, list(keywords))
-            diams, cids = nks_anchor_topk(jnp.asarray(groups),
-                                          jnp.asarray(mask),
-                                          jnp.asarray(ids), k)
-            cands = []
-            for i in range(k):
-                if not np.isfinite(float(diams[i])):
-                    continue
-                ids_i = tuple(sorted(set(int(x) for x in cids[i])))
-                cands.append(Candidate(ids=ids_i, diameter=float(diams[i])))
+            cands = self._device_topk(keywords, k)
             return QueryResult(list(keywords), cands,
                                time.perf_counter() - t0, tier)
         else:
@@ -209,6 +291,11 @@ class NKSEngine:
         stats = PipelineStats(batch_size=len(queries), tier=tier,
                               backend=backend.name)
         b0 = dataclasses.replace(backend.stats)
+        # dataclasses.replace shares the list fields — snapshot them by value
+        # so the end-of-batch delta below is meaningful.
+        b0_shards = (list(backend.stats.shard_dispatches),
+                     list(backend.stats.shard_valid_cells),
+                     list(backend.stats.shard_total_cells))
         pqs = [TopK(k, init_full=exact) for _ in queries]
         t0 = time.perf_counter()
         bitsets = [plan.query_bitset(self.dataset, q) for q in queries]
@@ -257,6 +344,16 @@ class NKSEngine:
         stats.t_dispatch_s = backend.stats.t_dispatch_s - b0.t_dispatch_s
         stats.cache_hits = backend.stats.cache_hits - b0.cache_hits
         stats.cache_misses = backend.stats.cache_misses - b0.cache_misses
+        stats.sharded_dispatches = (backend.stats.sharded_dispatches
+                                    - b0.sharded_dispatches)
+        stats.t_collective_s = backend.stats.t_collective_s - b0.t_collective_s
+        for dst, now, before in zip(
+                (stats.shard_dispatches, stats.shard_valid_cells,
+                 stats.shard_total_cells),
+                (backend.stats.shard_dispatches, backend.stats.shard_valid_cells,
+                 backend.stats.shard_total_cells), b0_shards):
+            dst.extend(v - (before[i] if i < len(before) else 0)
+                       for i, v in enumerate(now))
         return pqs, stats
 
     def query_batch(self, queries: Sequence[Sequence[int]], k: int = 1,
@@ -269,20 +366,45 @@ class NKSEngine:
         across the batch: with ``backend="pallas"`` each scale issues a few
         size-binned fused threshold-join dispatches covering all live subsets
         (subsets at an infinite pruning radius skip the device — their join
-        mask is all-ones by construction). The ``device`` tier keeps its
-        per-query kernel loop. Per-result latency is the batch wall time
-        divided by the batch size (attribution inside a fused dispatch is
-        meaningless). Pipeline accounting lands in ``self.last_batch_stats``.
+        mask is all-ones by construction); on a mesh-attached engine those
+        dispatches shard over the device plane. The ``device`` tier issues
+        one anchor-star dispatch per query — through the plane's shard_map
+        program when a mesh is attached, the single-device kernel otherwise —
+        and records the same PipelineStats. Per-result latency is the batch
+        wall time divided by the batch size (attribution inside a fused
+        dispatch is meaningless). Pipeline accounting lands in
+        ``self.last_batch_stats``.
         """
         if tier == "device":
-            self.last_batch_stats = None    # no pipeline ran; don't leave stale stats
-            return [self.query(q, k=k, tier=tier) for q in queries]
+            t0 = time.perf_counter()
+            stats = PipelineStats(
+                batch_size=len(queries), tier=tier,
+                backend="device-plane" if self.plane is not None else "anchor")
+            stats.shard_dispatches = [0] * (
+                self.plane.n_shards if self.plane is not None else 1)
+            out = []
+            for q in queries:
+                cands = self._device_topk(q, k, stats)
+                out.append(QueryResult(list(q), cands, 0.0, tier))
+            per_q = (time.perf_counter() - t0) / max(len(queries), 1)
+            out = [dataclasses.replace(r, latency_s=per_q) for r in out]
+            self.last_batch_stats = stats
+            return out
         if tier not in ("exact", "approx"):
             raise ValueError(tier)
         t0 = time.perf_counter()
         qlists = self._validate_queries(queries)
-        pqs, stats = self._batch_search(qlists, k, tier, get_backend(backend))
+        pqs, stats = self._batch_search(qlists, k, tier,
+                                        self._resolve_backend(backend))
         self.last_batch_stats = stats
         per_q = (time.perf_counter() - t0) / max(len(qlists), 1)
         return [QueryResult(list(q), pq.items, per_q, tier)
                 for q, pq in zip(queries, pqs)]
+
+    def _resolve_backend(self, backend: str | DistanceBackend) -> DistanceBackend:
+        """Backend resolution is where the plane plugs in: a string
+        ``"pallas"`` on a mesh-attached engine gets the sharded dispatch
+        route; instances pass through untouched (caller's placement wins)."""
+        if backend == "pallas" and self.plane is not None:
+            return get_backend(backend, plane=self.plane)
+        return get_backend(backend)

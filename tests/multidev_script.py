@@ -28,20 +28,32 @@ from repro.train.pipeline_parallel import pipeline_forward
 
 
 def test_distributed_nks():
+    """Parity on a forced 8-device CPU mesh: distributed_nks_topk (now
+    rebuilt on core.device_plane) == the single-device anchor-star kernel,
+    and == DevicePlane.nks_topk (the wrapper and the plane share one
+    program)."""
+    from repro.core.device_plane import DevicePlane
     mesh = make_local_mesh(data=8, model=1)
+    plane = DevicePlane(mesh)
     ds = synthetic_dataset(n=2000, d=12, u=20, t=2, seed=1)
     for query in random_queries(ds, 3, 3, seed=5):
         groups, mask, ids = pack_groups(ds, query, r_max=256)
         # single device
         d1, c1 = nks_anchor_topk(jnp.asarray(groups), jnp.asarray(mask),
                                  jnp.asarray(ids), k=3)
-        # sharded
+        # sharded, via the compatibility wrapper and via the plane directly
         with mesh:
             d8, c8 = distributed_nks_topk(mesh, jnp.asarray(groups),
                                           jnp.asarray(mask), jnp.asarray(ids),
                                           k=3)
+        dp, cp = plane.nks_topk(jnp.asarray(groups), jnp.asarray(mask),
+                                jnp.asarray(ids), k=3)
         np.testing.assert_allclose(np.asarray(d8), np.asarray(d1), rtol=1e-5,
                                    err_msg=f"query={query}")
+        np.testing.assert_array_equal(np.asarray(dp), np.asarray(d8),
+                                      err_msg=f"query={query}")
+        np.testing.assert_array_equal(np.asarray(cp), np.asarray(c8),
+                                      err_msg=f"query={query}")
     print("distributed_nks ok")
 
 

@@ -1,0 +1,173 @@
+"""Sharded serving-plane correctness script, run in a subprocess with 8
+forced host devices (tests/test_sharded_plane.py drives it; same pattern as
+tests/multidev_script.py). Asserts:
+
+  1. the plane's shard_map batched masked join is BIT-EXACT against the
+     single-device dispatch (packed bitmasks and join counts), including
+     zero-length subsets (empty shard slabs);
+  2. PallasBackend(plane=...) produces bit-exact DistanceBlocks across
+     uneven size bins — classes thinner than the mesh fall back to the
+     single-device route, r=inf subsets skip the device entirely;
+  3. NKSEngine(mesh=...) answers exact and approx query batches identically
+     to the single-device engine, and records per-device dispatch counts +
+     shard utilisation in PipelineStats;
+  4. the device tier through the plane matches the single-device anchor-star
+     kernel (the distributed parity contract, rebuilt on the plane);
+  5. pack_groups truncation accounting survives the plane's shard-aligned
+     repacking.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import PallasBackend
+from repro.core.device_plane import DevicePlane, pack_groups
+from repro.core.distributed import nks_anchor_topk
+from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.kernels import ops
+from repro.launch.mesh import make_serving_mesh
+from repro.serve.engine import NKSEngine
+
+PLANE = DevicePlane(make_serving_mesh(data=8))
+
+
+def test_sharded_join_bit_exact():
+    rng = np.random.default_rng(0)
+    s, p, d = 16, 64, 8
+    x = rng.standard_normal((s, p, d)).astype(np.float32)
+    lengths = rng.integers(1, p + 1, s).astype(np.int32)
+    lengths[3] = 0          # a fully padded subset
+    lengths[8:10] = 0       # an all-empty shard slab (shard 4)
+    r = rng.uniform(0.5, 4.0, s).astype(np.float32)
+    r[5] = 0.0
+    m1, c1 = ops.pairwise_l2_join_batched_masked(x, lengths, r)
+    m8, c8 = PLANE.join_batched_masked(x, lengths, r)
+    np.testing.assert_array_equal(np.asarray(m8), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(c8), np.asarray(c1))
+    print("sharded join bit-exact ok")
+
+
+def test_backend_sharded_parity():
+    rng = np.random.default_rng(1)
+    points = rng.standard_normal((600, 10))
+    # Uneven bins: one pow2 class with >= 8 subsets (sharded route), one
+    # thin class (< 8, single-device remainder fallback), plus r=inf
+    # subsets that never reach a device.
+    sizes = [40, 44, 37, 41, 39, 45, 42, 38, 40, 43,    # class 64, sharded
+             9, 11, 10]                                 # class 16, remainder
+    id_lists = [np.sort(rng.choice(600, n, replace=False)).astype(np.int64)
+                for n in sizes]
+    radii = [2.5] * 10 + [3.0, float("inf"), 2.0]
+    keys = [ids.tobytes() for ids in id_lists]
+
+    single = PallasBackend()
+    shard = PallasBackend(plane=PLANE)
+    b1 = single.self_join_blocks(points, id_lists, radii, keys=keys)
+    b8 = shard.self_join_blocks(points, id_lists, radii, keys=keys)
+    for i, (x, y) in enumerate(zip(b1, b8)):
+        assert x.n == y.n and x.join_count == y.join_count, f"subset {i}"
+        assert x.slack == y.slack, f"subset {i}"
+        if x.mask is None:
+            assert y.mask is None, f"subset {i}"       # r=inf skip on both
+        else:
+            np.testing.assert_array_equal(y.mask, x.mask,
+                                          err_msg=f"subset {i}")
+    assert shard.stats.sharded_dispatches >= 1
+    assert shard.stats.dispatches > shard.stats.sharded_dispatches, \
+        "remainder bin should have dispatched single-device"
+    assert len(shard.stats.shard_dispatches) == 8
+    assert sum(shard.stats.shard_dispatches[1:]) > 0
+    assert shard.stats.t_collective_s > 0.0
+    # cached-tile path stays sharded and bit-exact
+    b8b = shard.self_join_blocks(points, id_lists, radii, keys=keys)
+    for x, y in zip(b8, b8b):
+        if x.mask is not None:
+            np.testing.assert_array_equal(y.mask, x.mask)
+    assert shard.stats.cache_hits > 0
+    # a tight memory budget (chunking + shard rounding vs the clamp) keeps
+    # bit-exact parity too
+    tight = PallasBackend(plane=PLANE, max_block_bytes=256 << 10)
+    bt = tight.self_join_blocks(points, id_lists, radii, keys=keys)
+    for i, (x, y) in enumerate(zip(b1, bt)):
+        assert x.join_count == y.join_count, f"subset {i}"
+        if x.mask is not None:
+            np.testing.assert_array_equal(y.mask, x.mask, err_msg=f"subset {i}")
+    print("backend sharded parity ok")
+
+
+def test_engine_batch_parity():
+    ds = synthetic_dataset(n=500, d=8, u=20, t=2, seed=3)
+    eng1 = NKSEngine(ds, m=2, n_scales=5, seed=0)
+    eng8 = NKSEngine(ds, m=2, n_scales=5, seed=0, mesh=PLANE.mesh)
+    queries = random_queries(ds, 2, 24, seed=5) + \
+        random_queries(ds, 3, 24, seed=6)
+    for tier in ("exact", "approx"):
+        r1 = eng1.query_batch(queries, k=2, tier=tier, backend="pallas")
+        r8 = eng8.query_batch(queries, k=2, tier=tier, backend="pallas")
+        for q, a, b in zip(queries, r1, r8):
+            assert [(c.ids, c.diameter) for c in a.candidates] == \
+                   [(c.ids, c.diameter) for c in b.candidates], \
+                   f"tier={tier} query={q}"
+        st = eng8.last_batch_stats
+        assert st.backend == "pallas" and st.batch_size == len(queries)
+        if st.sharded_dispatches:
+            assert len(st.shard_dispatches) == 8
+            util = st.shard_utilisation
+            assert len(util) == 8 and all(0.0 <= u <= 1.0 for u in util)
+            assert st.t_collective_s > 0.0
+            assert st.t_collective_s <= st.t_dispatch_s + 1e-9
+    assert eng8.last_batch_stats is not None
+    print("engine batch parity ok (exact+approx)")
+
+
+def test_device_tier_parity():
+    ds = synthetic_dataset(n=800, d=10, u=24, t=2, seed=4)
+    eng8 = NKSEngine(ds, m=2, n_scales=3, seed=0, build_exact=False,
+                     build_approx=False, mesh=PLANE.mesh)
+    for query in random_queries(ds, 3, 3, seed=7):
+        pg = PLANE.pack_groups(ds, query)
+        d1, _ = nks_anchor_topk(jnp.asarray(pg.groups), jnp.asarray(pg.mask),
+                                jnp.asarray(pg.ids), k=3)
+        res = eng8.query(query, k=3, tier="device")
+        got = [c.diameter for c in res.candidates]
+        want = [float(v) for v in np.asarray(d1) if np.isfinite(v)]
+        np.testing.assert_allclose(got, want, rtol=1e-5,
+                                   err_msg=f"query={query}")
+    out = eng8.query_batch(random_queries(ds, 3, 2, seed=8), k=2,
+                           tier="device")
+    st = eng8.last_batch_stats
+    assert st is not None and st.tier == "device"
+    assert st.backend == "device-plane"
+    assert st.shard_dispatches == [2] * 8
+    assert st.sharded_dispatches == 2 and st.t_collective_s > 0.0
+    assert all(r.candidates for r in out)
+    print("device tier parity ok")
+
+
+def test_pack_groups_on_plane():
+    ds = synthetic_dataset(n=300, d=8, u=12, t=2, seed=7)
+    query = random_queries(ds, 2, 1, seed=1)[0]
+    pg = PLANE.pack_groups(ds, query, r_max=10)
+    assert pg.groups.shape[1] % 8 == 0
+    assert pg.truncated == sum(max(s - 10, 0) for s in pg.group_sizes)
+    try:
+        PLANE.pack_groups(ds, query, r_max=1, strict=True)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("strict pack_groups did not raise")
+    print("plane pack_groups ok")
+
+
+if __name__ == "__main__":
+    import jax
+    assert jax.local_device_count() == 8, jax.local_device_count()
+    test_sharded_join_bit_exact()
+    test_backend_sharded_parity()
+    test_engine_batch_parity()
+    test_device_tier_parity()
+    test_pack_groups_on_plane()
+    print("ALL SHARDED OK")

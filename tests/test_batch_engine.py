@@ -155,8 +155,16 @@ def test_pallas_memory_budget_chunks_dispatches(ds, engine, batch32):
                                    rtol=1e-9)
 
 
-def test_device_tier_clears_batch_stats(engine, batch32):
+def test_device_tier_records_batch_stats(engine, batch32):
+    """The device tier flows through the same dispatch layer as exact/approx
+    now: query_batch records fresh PipelineStats (one anchor-star dispatch
+    per query, on the default device when no mesh is attached) instead of
+    clearing them."""
     engine.query_batch(batch32[:2], k=1, tier="exact", backend="numpy")
-    assert engine.last_batch_stats is not None
+    assert engine.last_batch_stats.tier == "exact"
     engine.query_batch(batch32[:1], k=1, tier="device")
-    assert engine.last_batch_stats is None
+    stats = engine.last_batch_stats
+    assert stats is not None and stats.tier == "device"
+    assert stats.backend == "anchor" and stats.batch_size == 1
+    assert stats.shard_dispatches == [1]
+    assert stats.sharded_dispatches == 0

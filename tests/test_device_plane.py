@@ -1,0 +1,177 @@
+"""Device-plane unit tests that run on the default single CPU device: the
+plane's shard_map machinery works on a 1-shard mesh (identical math, no
+forced device count), pack_groups truncation accounting, and backend/engine
+plane wiring. The real 8-device parity lives in tests/sharded_script.py."""
+import numpy as np
+import pytest
+
+from repro.core.backend import PallasBackend, get_backend
+from repro.core.device_plane import (DevicePlane, PackedGroups, get_plane,
+                                     pack_groups)
+from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.serve.engine import NKSEngine
+
+
+@pytest.fixture(scope="module")
+def plane():
+    from repro.launch.mesh import make_local_mesh
+    return DevicePlane(make_local_mesh(data=1, model=1))
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return synthetic_dataset(n=260, d=6, u=16, t=2, seed=7)
+
+
+def test_pack_groups_counts_truncation(ds):
+    query = random_queries(ds, 2, 1, seed=1)[0]
+    full = pack_groups(ds, query)
+    assert isinstance(full, PackedGroups) and full.truncated == 0
+    groups, mask, ids = full        # legacy 3-tuple unpacking still works
+    assert groups.shape[0] == len(query) and groups.shape[1] % 128 == 0
+    assert mask.shape == ids.shape == groups.shape[:2]
+
+    tight = pack_groups(ds, query, r_max=4)
+    assert tight.truncated == sum(max(s - 4, 0) for s in tight.group_sizes)
+    assert tight.truncated > 0
+    with pytest.raises(ValueError, match="truncated"):
+        pack_groups(ds, query, r_max=4, strict=True)
+
+
+def test_plane_pack_groups_shard_aligned(ds, plane):
+    query = random_queries(ds, 2, 1, seed=2)[0]
+    pg = plane.pack_groups(ds, query, r_max=7)
+    assert pg.groups.shape[1] % plane.n_shards == 0
+    assert pg.truncated == sum(max(s - 7, 0) for s in pg.group_sizes)
+
+
+def test_shard_pad_and_axis_validation(plane):
+    assert plane.n_shards == 1
+    assert plane.shard_pad(5) == 5
+    from repro.launch.mesh import make_local_mesh
+    with pytest.raises(ValueError, match="no 'nope' axis"):
+        DevicePlane(make_local_mesh(data=1, model=1), axis="nope")
+
+
+def test_sharded_join_matches_single_device(plane):
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    s, p, d = 4, 32, 5
+    x = rng.standard_normal((s, p, d)).astype(np.float32)
+    lengths = np.array([32, 17, 0, 9], np.int32)
+    r = np.array([1.5, 2.0, 1.0, 0.0], np.float32)
+    m1, c1 = ops.pairwise_l2_join_batched_masked(x, lengths, r)
+    mp, cp = plane.join_batched_masked(x, lengths, r)
+    np.testing.assert_array_equal(np.asarray(mp), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(cp), np.asarray(c1))
+    with pytest.raises(ValueError, match="S % n_shards"):
+        DevicePlane.join_batched_masked(
+            _FakeTwoShardPlane(plane), x[:3], lengths[:3], r[:3])
+
+
+class _FakeTwoShardPlane:
+    """Duck-typed plane with n_shards=2 for the divisibility check."""
+
+    def __init__(self, plane):
+        self.mesh, self.axis, self._join_fns = plane.mesh, plane.axis, {}
+
+    n_shards = 2
+
+
+def test_backend_plane_route_parity(ds, plane):
+    rng = np.random.default_rng(3)
+    id_lists = [np.sort(rng.choice(ds.n, n, replace=False)).astype(np.int64)
+                for n in (30, 12, 25)]
+    radii = [2.0, float("inf"), 1.5]
+    keys = [i.tobytes() for i in id_lists]
+    single = PallasBackend(interpret=True)
+    routed = PallasBackend(interpret=True, plane=plane)
+    b1 = single.self_join_blocks(ds.points, id_lists, radii, keys=keys)
+    b2 = routed.self_join_blocks(ds.points, id_lists, radii, keys=keys)
+    for x, y in zip(b1, b2):
+        assert x.n == y.n and x.join_count == y.join_count
+        if x.mask is None:
+            assert y.mask is None
+        else:
+            np.testing.assert_array_equal(y.mask, x.mask)
+    assert routed.stats.sharded_dispatches > 0
+    assert routed.stats.shard_dispatches and routed.stats.t_collective_s > 0
+    assert routed.stats.shard_total_cells[0] > routed.stats.shard_valid_cells[0]
+
+
+def test_budget_demotes_sharded_bin_to_single_device(ds):
+    """A bin whose minimal shard-rounded block exceeds max_block_bytes drops
+    to the single-device route instead of blowing the budget (the clamp runs
+    after shard rounding)."""
+
+    class TwoShards:
+        n_shards = 2
+
+        @staticmethod
+        def shard_pad(n):
+            return ((n + 1) // 2) * 2
+
+        def join_batched_masked(self, *a, **kw):   # pragma: no cover
+            raise AssertionError("sharded route must have been demoted")
+
+        put_sharded = join_batched_masked
+
+    rng = np.random.default_rng(4)
+    id_lists = [np.sort(rng.choice(ds.n, n, replace=False)).astype(np.int64)
+                for n in (20, 22, 21)]
+    radii = [2.0, 2.0, 2.0]
+    be = PallasBackend(interpret=True, plane=TwoShards(),
+                       max_block_bytes=4 << 10)
+    ref = PallasBackend(interpret=True)
+    got = be.self_join_blocks(ds.points, id_lists, radii)
+    want = ref.self_join_blocks(ds.points, id_lists, radii)
+    for x, y in zip(want, got):
+        assert x.join_count == y.join_count
+        np.testing.assert_array_equal(y.mask, x.mask)
+    assert be.stats.sharded_dispatches == 0
+
+
+def test_get_backend_accepts_plane(plane):
+    be = get_backend("pallas", plane=plane)
+    assert isinstance(be, PallasBackend) and be.plane is plane
+    assert get_backend("pallas").plane is None
+
+
+def test_get_plane_resolution(plane):
+    assert get_plane(plane) is plane
+    assert get_plane(plane.mesh).mesh is plane.mesh
+
+
+def test_engine_mesh_plumbs_plane_and_stats(ds, plane):
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=0)
+    eng_p = NKSEngine(ds, m=2, n_scales=4, seed=0, mesh=plane)
+    assert eng.plane is None and eng_p.plane is plane
+    queries = random_queries(ds, 2, 6, seed=5)
+    r1 = eng.query_batch(queries, k=2, tier="exact", backend="pallas")
+    r2 = eng_p.query_batch(queries, k=2, tier="exact", backend="pallas")
+    for a, b in zip(r1, r2):
+        assert [(c.ids, c.diameter) for c in a.candidates] == \
+               [(c.ids, c.diameter) for c in b.candidates]
+    st = eng_p.last_batch_stats
+    assert st.sharded_dispatches > 0
+    assert len(st.shard_dispatches) == 1
+    assert st.shard_utilisation and 0.0 < st.shard_utilisation[0] <= 1.0
+    assert st.phases["collective_s"] >= 0.0
+    assert st.sharding["sharded_dispatches"] == st.sharded_dispatches
+    # an explicit backend instance wins over the engine's plane
+    own = PallasBackend(interpret=True)
+    eng_p.query_batch(queries[:2], k=1, tier="exact", backend=own)
+    assert eng_p.last_batch_stats.sharded_dispatches == 0
+
+
+def test_device_tier_records_plane_stats(ds, plane):
+    eng_p = NKSEngine(ds, m=2, n_scales=4, seed=0, build_exact=False,
+                      build_approx=False, mesh=plane)
+    queries = random_queries(ds, 2, 2, seed=6)
+    out = eng_p.query_batch(queries, k=1, tier="device")
+    st = eng_p.last_batch_stats
+    assert st is not None and st.tier == "device"
+    assert st.backend == "device-plane"
+    assert st.shard_dispatches == [2]
+    assert st.sharded_dispatches == 2
+    assert all(r.tier == "device" for r in out)

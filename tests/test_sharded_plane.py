@@ -1,0 +1,20 @@
+"""Drives tests/sharded_script.py in a subprocess with 8 forced host devices
+(same pattern as test_multidevice.py: the device count is locked at first jax
+init, so in-process forcing is unsafe). The script asserts bit-exact parity
+between the shard_map'd serving plane and single-device execution."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_sharded_plane_suite():
+    script = os.path.join(os.path.dirname(__file__), "sharded_script.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True, timeout=580)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL SHARDED OK" in proc.stdout
