@@ -1,0 +1,172 @@
+"""Streaming-ingest throughput — sustained QPS under a live insert:query mix.
+
+The serving question behind the ISSUE-4 scenario axis: when the corpus is
+mutating (inserts land in the delta, deletes tombstone, compaction rebuilds
+on a cadence), how much query throughput survives, and what do the
+generation-tagged caches retain across absorbs? Per tier, the workload
+interleaves one insert batch with ``--mix`` query batches (the 1:10
+insert:query op mix), sprinkles deletes (~10% of each absorbed batch a round
+later), and lets auto-compaction fire at the configured cadence:
+
+    PYTHONPATH=src python -m benchmarks.bench_ingest [--fast] [--mesh N]
+
+Writes ``BENCH_ingest.json``. Numbers of note: ``qps_sustained`` vs
+``qps_static`` (the ingest tax on query throughput), ``compactions`` /
+``generation`` (the cadence actually exercised), and the exact tier's
+``cache_hit_rate`` under churn — the retention fix means absorbs must NOT
+flush the packed-subset LRU (``generation_purges`` counts only compactions).
+The approx tier mostly terminates at scale 0 where infinite pruning radii
+skip the device, so its cache counters are legitimately near-zero.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT = "BENCH_ingest.json"
+
+
+def main(fast: bool = False, mesh: int = 0, mix: int = 10,
+         insert_batch: int | None = None, query_batch: int | None = None,
+         rounds: int | None = None) -> dict:
+    if mesh > 1 and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={mesh}").strip()
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.core.backend import PallasBackend
+    from repro.core.types import make_dataset
+    from repro.data.flickr_like import flickr_like_dataset
+    from repro.data.synthetic import random_queries
+    from repro.serve.engine import NKSEngine
+
+    plane = None
+    if mesh > 1:
+        import jax
+        if jax.local_device_count() < mesh:
+            raise RuntimeError(
+                f"--mesh {mesh} needs {mesh} devices but jax sees "
+                f"{jax.local_device_count()}")
+        from repro.core.device_plane import DevicePlane
+        from repro.launch.mesh import make_serving_mesh
+        plane = DevicePlane(make_serving_mesh(data=mesh))
+
+    n0 = 1_500 if fast else 5_000
+    rounds = rounds or (8 if fast else 20)
+    ib = insert_batch or (40 if fast else 100)
+    qb = query_batch or (8 if fast else 16)
+    stream_total = rounds * ib
+    k = 2
+
+    # One generator run for bulk + stream keeps the keyword statistics of the
+    # stream identical to the resident corpus (same Zipf tails, same cluster
+    # affinity) — the stream is the tail of the same "upload" process.
+    full = flickr_like_dataset(n=n0 + stream_total, d=16, u=30, t=3,
+                               n_clusters=12, seed=4)
+    ds0 = make_dataset(full.points[:n0],
+                       [full.kw.row(i).tolist() for i in range(n0)],
+                       n_keywords=full.n_keywords)
+    queries = random_queries(ds0, 3, qb, seed=9)
+
+    def run_tier(tier: str) -> dict:
+        # Compaction cadence sized so every run exercises a few rebuilds.
+        engine = NKSEngine(ds0, m=2, n_scales=5, seed=0,
+                           compact_min=max(64, stream_total // 3),
+                           compact_ratio=0.05, mesh=plane)
+        backend = PallasBackend(plane=plane)   # persistent: LRU must survive
+
+        # Static reference rate: warmed engine, no churn.
+        engine.query_batch(queries, k=k, tier=tier, backend=backend)
+        t0 = time.perf_counter()
+        static_reps = 3
+        for _ in range(static_reps):
+            engine.query_batch(queries, k=k, tier=tier, backend=backend)
+        qps_static = qb * static_reps / (time.perf_counter() - t0)
+
+        n_queries = 0
+        t_insert = t_delete = t_query = 0.0
+        deleted = 0
+        t_run0 = time.perf_counter()
+        for r in range(rounds):
+            lo = n0 + r * ib
+            pts = full.points[lo:lo + ib]
+            kws = [full.kw.row(i).tolist() for i in range(lo, lo + ib)]
+            t1 = time.perf_counter()
+            engine.insert(pts, kws)
+            t_insert += time.perf_counter() - t1
+            # delete ~10% of each absorbed batch a round later (mixed churn);
+            # timed separately so inserted_points_per_s stays a pure absorb
+            # rate (a delete/retire regression must not read as one).
+            if r:
+                prev = np.arange(lo - ib, lo - ib + max(1, ib // 10))
+                t1 = time.perf_counter()
+                engine.delete(prev)
+                t_delete += time.perf_counter() - t1
+                deleted += len(prev)
+            t1 = time.perf_counter()
+            for _ in range(mix):
+                engine.query_batch(queries, k=k, tier=tier, backend=backend)
+                n_queries += qb
+            t_query += time.perf_counter() - t1
+        t_total = time.perf_counter() - t_run0
+
+        st = engine.last_batch_stats
+        bs = backend.stats
+        probed = bs.cache_hits + bs.cache_misses
+        out = {
+            "qps_static": qps_static,
+            "qps_sustained": n_queries / t_total,
+            "qps_query_phase": n_queries / t_query if t_query else 0.0,
+            "inserted_points_per_s": stream_total / t_insert if t_insert else 0.0,
+            "deleted_points_per_s": deleted / t_delete if t_delete else 0.0,
+            "ingest_wall_fraction": (t_insert + t_delete) / t_total,
+            "deleted_points": deleted,
+            "compactions": engine.ingest.compactions,
+            "generation": engine.corpus_generation,
+            "delta_points_final": engine.delta_points,
+            "tombstones_final": engine.tombstone_count,
+            "cache_hit_rate": round(bs.cache_hits / probed, 4) if probed else None,
+            "generation_purges": bs.generation_purges,
+            "last_batch_phases": st.phases,
+            "last_batch_ingest": st.ingest,
+        }
+        if mesh > 1:
+            out["sharding"] = st.sharding
+        emit(f"ingest.static.{tier}", 1e6 / qps_static, f"B={qb}")
+        emit(f"ingest.sustained.{tier}", 1e6 * t_total / max(n_queries, 1),
+             f"mix=1:{mix} compactions={engine.ingest.compactions}")
+        return out
+
+    results: dict = {
+        "n0": n0, "d": ds0.dim, "fast": fast, "mesh": mesh if mesh > 1 else 1,
+        "k": k, "rounds": rounds, "insert_batch": ib, "query_batch": qb,
+        "mix": mix, "inserted_points": stream_total,
+        "tiers": {tier: run_tier(tier) for tier in ("approx", "exact")},
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {os.path.abspath(OUT)}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("BENCH_FAST", "") == "1")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="force N host devices; ingest under the sharded "
+                         "serving plane")
+    ap.add_argument("--mix", type=int, default=10,
+                    help="query batches per insert batch (1:N op mix)")
+    ap.add_argument("--insert-batch", type=int, default=None)
+    ap.add_argument("--query-batch", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+    main(fast=args.fast, mesh=args.mesh, mix=args.mix,
+         insert_batch=args.insert_batch, query_batch=args.query_batch,
+         rounds=args.rounds)

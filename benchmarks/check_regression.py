@@ -1,0 +1,101 @@
+"""CI bench-regression gate: fail the job when fast-tier QPS regresses.
+
+Compares the freshly written ``BENCH_batch.json`` against the committed
+``BENCH_baseline.json`` and exits non-zero when any gated metric dropped by
+more than ``--threshold`` (default 40% — generous, because CI runs on shared
+runners whose absolute throughput wobbles; the gate is meant to catch real
+regressions like the pre-PR-2 41x exact-tier cliff, not scheduler noise):
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--fresh BENCH_batch.json] [--baseline BENCH_baseline.json]
+
+Gated metrics: per tier (exact/approx), the batched-pipeline QPS for both
+backends plus the per-query loop rate. The sharded (``--mesh N``) extras are
+deliberately NOT gated: the forced-8-device run's top-level tier metrics
+still measure single-device dispatch math (host-platform devices share one
+CPU), so they remain comparable to the single-device baseline, while the
+``sharded.*`` numbers would not be. A missing fresh file is a *warning*
+(the bench step is non-blocking in CI; the gate must not mask the bench's
+own failure mode) unless ``--require-fresh`` is set; a missing baseline is
+an error — regenerate it with ``bench_batch_engine --fast`` and commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GATED = ("batch_pallas_qps", "batch_numpy_qps", "loop_qps")
+
+
+def compare(fresh: dict, baseline: dict, threshold: float
+            ) -> tuple[list[tuple], list[tuple]]:
+    """Returns (rows, regressions); each row is
+    (tier, metric, base, fresh, ratio, regressed)."""
+    rows, regressions = [], []
+    for tier, base_metrics in baseline.get("tiers", {}).items():
+        fresh_metrics = fresh.get("tiers", {}).get(tier, {})
+        for metric in GATED:
+            if metric not in base_metrics or metric not in fresh_metrics:
+                continue
+            b, f = float(base_metrics[metric]), float(fresh_metrics[metric])
+            ratio = f / b if b else float("inf")
+            regressed = ratio < 1.0 - threshold
+            row = (tier, metric, b, f, ratio, regressed)
+            rows.append(row)
+            if regressed:
+                regressions.append(row)
+    return rows, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_batch.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.40,
+                    help="maximum tolerated fractional QPS drop")
+    ap.add_argument("--require-fresh", action="store_true",
+                    help="fail (instead of warn) when the fresh benchmark "
+                         "file is missing")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"ERROR: baseline {args.baseline} missing — run "
+              f"`python -m benchmarks.bench_batch_engine --fast` and commit "
+              f"the result as the baseline", file=sys.stderr)
+        return 2
+    if not os.path.exists(args.fresh):
+        msg = (f"fresh benchmark {args.fresh} missing (did the bench step "
+               f"fail?)")
+        if args.require_fresh:
+            print("ERROR: " + msg, file=sys.stderr)
+            return 2
+        print("WARNING: " + msg + " — skipping the regression gate",
+              file=sys.stderr)
+        return 0
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    rows, regressions = compare(fresh, baseline, args.threshold)
+    if not rows:
+        print("ERROR: no comparable metrics between fresh and baseline",
+              file=sys.stderr)
+        return 2
+
+    print(f"{'tier':<8}{'metric':<22}{'baseline':>12}{'fresh':>12}{'ratio':>8}")
+    for tier, metric, b, f, ratio, regressed in rows:
+        flag = "  << REGRESSION" if regressed else ""
+        print(f"{tier:<8}{metric:<22}{b:>12.1f}{f:>12.1f}{ratio:>8.2f}{flag}")
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} metric(s) regressed more than "
+              f"{args.threshold:.0%} vs {args.baseline}", file=sys.stderr)
+        return 1
+    print(f"\nOK: all gated metrics within {args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,12 +10,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import brute_force, promish_a, promish_e
+from repro.core import promish_a, promish_e
 from repro.core.baseline_tree import VirtualBRTree
 from repro.core.index import build_index
-from repro.data.synthetic import random_queries, synthetic_dataset
 
 HEADER = "name,us_per_call,derived"
 

@@ -25,7 +25,7 @@ def main(fast: bool = False):
     # numpy control plane
     t0 = time.perf_counter()
     p = proj.project(ds.points, z)
-    keys = proj.bin_keys_overlapping(p, 100.0)
+    proj.bin_keys_overlapping(p, 100.0)
     t_np = time.perf_counter() - t0
     emit("build.project_bin.numpy", t_np * 1e6, f"N={n}")
 

@@ -17,9 +17,8 @@ import json
 import os
 import sys
 
-from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, model_flops_global,
-                                 roofline_row)
-from repro.launch.hlo_census import census, dot_flops, parse_hlo
+from benchmarks.roofline import HBM_BW, roofline_row
+from repro.launch.hlo_census import census, parse_hlo
 
 
 def attention_loop_bytes(hlo_text: str, n_layer_scan: int) -> float:

@@ -2,9 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import brute_force, build_index, make_dataset, promish_a, promish_e
+from repro.core import brute_force, build_index, promish_a, promish_e
 from repro.data.synthetic import random_queries, synthetic_dataset
 
 

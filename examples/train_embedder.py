@@ -8,7 +8,6 @@ This is the framework's full stack in one script: config -> model -> WSD
 optimizer -> fault-tolerant loop -> ProMiSH ingestion -> NKS serving.
 """
 import argparse
-import dataclasses
 import tempfile
 
 import jax

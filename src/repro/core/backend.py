@@ -63,6 +63,7 @@ class BackendStats:
     cache_hits: int = 0        # packed-subset/tile LRU hits
     cache_misses: int = 0
     cache_evictions: int = 0
+    generation_purges: int = 0  # cache invalidations on corpus-generation bump
     # Sharded-dispatch accounting (populated when a DevicePlane routes the
     # dispatch over the mesh; lists are indexed by shard/device position on
     # the plane's data axis and sized lazily on first device dispatch).
@@ -124,14 +125,19 @@ class DistanceBackend(abc.ABC):
     def self_join_blocks(self, points: np.ndarray,
                          id_lists: Sequence[np.ndarray],
                          radii: Sequence[float],
-                         keys: Sequence[bytes] | None = None
+                         keys: Sequence[bytes] | None = None,
+                         generation: int | None = None
                          ) -> list[DistanceBlock]:
         """Self-join blocks for a batch of subsets at per-subset radii.
 
         ``points`` is the full corpus; each ``id_lists[i]`` selects one
         subset's rows (sorted unique ids). ``keys`` are the Algorithm-2
         subset hashes (sorted-id bytes) used as cache keys; pass None to
-        bypass caching."""
+        bypass caching. ``generation`` is the caller's corpus-generation
+        token: calls under the same token may share cache entries even if
+        the ``points`` array object changed (streaming absorbs are
+        append-only, so existing rows are immutable within a generation);
+        a token change invalidates everything (compaction remapped ids)."""
 
 
 class NumpyBackend(DistanceBackend):
@@ -146,7 +152,8 @@ class NumpyBackend(DistanceBackend):
     def self_join_blocks(self, points: np.ndarray,
                          id_lists: Sequence[np.ndarray],
                          radii: Sequence[float],
-                         keys: Sequence[bytes] | None = None
+                         keys: Sequence[bytes] | None = None,
+                         generation: int | None = None
                          ) -> list[DistanceBlock]:
         t0 = time.perf_counter()
         out = []
@@ -205,12 +212,16 @@ class PallasBackend(DistanceBackend):
         self.plane = plane
         # LRU over both per-subset packed rows and whole device-committed
         # dispatch tiles; values are (nbytes, payload). Entries are only
-        # valid for one corpus: subset keys are id bytes, so a backend
-        # re-used against different points must drop the cache (see
-        # ``self_join_blocks``).
+        # valid for one corpus *generation*: subset keys are id bytes, so a
+        # backend re-used against a remapped id space must drop the cache
+        # (see ``self_join_blocks``). Within a generation the id space is
+        # append-only (streaming absorbs/tombstones), so entries survive
+        # corpus growth — a tombstoned id never recurs in a subset key, and
+        # existing rows are immutable.
         self._cache: OrderedDict[tuple, tuple[int, tuple]] = OrderedDict()
         self._cache_nbytes = 0
         self._corpus: np.ndarray | None = None
+        self._generation: int | None = None
         self._min_class: int | None = None
 
     # ------------------------------------------------------------------ cache
@@ -294,21 +305,36 @@ class PallasBackend(DistanceBackend):
             p <<= 1
         return p
 
+    def _purge_cache(self, generation_bump: bool) -> None:
+        if self._cache:
+            self.stats.generation_purges += int(generation_bump)
+        self._cache.clear()
+        self._cache_nbytes = 0
+
     def self_join_blocks(self, points: np.ndarray,
                          id_lists: Sequence[np.ndarray],
                          radii: Sequence[float],
-                         keys: Sequence[bytes] | None = None
+                         keys: Sequence[bytes] | None = None,
+                         generation: int | None = None
                          ) -> list[DistanceBlock]:
         if not len(id_lists):
             return []
         if keys is None:
             keys = [None] * len(id_lists)
         # Cache entries are keyed on subset-id bytes, which only identify
-        # points *within one corpus*: a backend reused against a different
-        # points array must start cold or it would serve stale rows.
-        if self._corpus is not points:
-            self._cache.clear()
-            self._cache_nbytes = 0
+        # points *within one corpus generation*. A generation-aware caller
+        # (the streaming engine) keeps entries live across absorbs — the
+        # merged points array is re-realized per batch, but ids are
+        # append-only and rows immutable until a compaction bumps the token.
+        # Legacy callers (no token) fall back to array-identity invalidation.
+        if generation is not None:
+            if generation != self._generation:
+                self._purge_cache(generation_bump=self._generation is not None)
+                self._generation = generation
+            self._corpus = points
+        elif self._corpus is not points:
+            self._purge_cache(generation_bump=False)
+            self._generation = None
             self._corpus = points
         # Size-binned dispatch: padding every subset of a scale to the batch
         # max wastes quadratically (a single near-corpus subset makes every

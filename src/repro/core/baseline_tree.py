@@ -166,7 +166,6 @@ class VirtualBRTree:
     def search(self, query: Sequence[int], k: int = 1, budget: int = 2_000_000):
         """Best-first exact top-k NKS search. Returns (TopK, timed_out, pops)."""
         query = sorted(set(int(v) for v in query))
-        q = len(query)
         pq = TopK(k, init_full=True)
         est = self.initial_estimate(query)
 

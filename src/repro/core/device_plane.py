@@ -29,13 +29,21 @@ makes multi-device execution a property of the backend instead:
 packs at least one subset per shard; remainder bins (S < mesh size) fall
 back to its single-device dispatch. ``serve.engine.NKSEngine(mesh=...)``
 builds the plane once and threads it through all three tiers.
+
+Corpus generations (streaming ingest): the plane's jit program caches
+(``_join_fns``/``_nks_fns``) are keyed on *shapes and tile params only* —
+they hold compiled programs, never corpus data, so they survive delta
+absorbs and compactions untouched. Corpus-dependent state (packed subset
+rows, device-committed tiles) lives in the backend's LRU, which the engine
+scopes to its ``corpus_generation`` token: absorbs retain entries, a
+compaction (id remap) purges them. Nothing on the plane needs invalidation
+when the corpus changes.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core import projection as proj
 from repro.core import signatures as sig
 from repro.core.types import KeywordDataset
-from repro.utils.csr import CSR, csr_from_pairs
+from repro.utils.csr import CSR, csr_from_pairs, ragged_arange, sorted_member
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,27 +97,23 @@ def _build_scale(dataset: KeywordDataset, projected: np.ndarray, scale: int,
     return HIStructure(scale=scale, width=width, n_buckets=n_buckets, table=table, khb=khb)
 
 
-def _ragged_arange(counts: np.ndarray, total: int | None = None) -> np.ndarray:
-    """[0..c0), [0..c1), ... concatenated."""
-    if total is None:
-        total = int(counts.sum())
-    if total == 0:
-        return np.zeros(0, dtype=np.int64)
-    ends = np.cumsum(counts)
-    starts = ends - counts
-    out = np.arange(total, dtype=np.int64)
-    out -= np.repeat(starts, counts)
-    return out
+# Shared CSR row-slicing gather index; now lives in ``repro.utils.csr``.
+_ragged_arange = ragged_arange
 
 
 def build_index(dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
                 w0: float | None = None, exact: bool = True,
                 buckets_per_point: float = 1.0,
+                n_buckets: int | None = None,
                 seed: int = 0) -> PromishIndex:
     """Build a ProMiSH index (paper defaults: m=2, L=5, w0=pMax/2^L).
 
     ``buckets_per_point`` sizes the hashtable: n_buckets ~= N * factor
     (the paper uses a fixed table size; we scale with N, power-of-two).
+    An explicit ``n_buckets`` (and ``w0``) pins the hash geometry
+    independently of N — a streaming engine passes both so the bucket ids
+    of points absorbed later, and of every rebuild at compaction, stay
+    comparable with a fresh build over the same corpus.
     """
     rng = np.random.default_rng(seed)
     z = proj.sample_unit_vectors(rng, m, dataset.dim)
@@ -125,7 +121,8 @@ def build_index(dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
     p_max = proj.projection_span(projected)
     if w0 is None:
         w0 = p_max / (2.0 ** n_scales)
-    n_buckets = max(64, 1 << int(np.ceil(np.log2(max(dataset.n * buckets_per_point, 1)))))
+    if n_buckets is None:
+        n_buckets = max(64, 1 << int(np.ceil(np.log2(max(dataset.n * buckets_per_point, 1)))))
     structures = []
     for s in range(n_scales):
         width = w0 * (2.0 ** s)
@@ -134,3 +131,179 @@ def build_index(dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
         structures.append(_build_scale(dataset, projected, s, width, nb, exact))
     return PromishIndex(z=z, w0=float(w0), n_scales=n_scales, exact=exact,
                         structures=tuple(structures), p_max=p_max)
+
+
+# ------------------------------------------------------------ streaming delta
+class IndexDelta:
+    """Incremental companion of one frozen :class:`PromishIndex`.
+
+    The bulk index is built once and never mutated; this buffer absorbs the
+    stream on top of it:
+
+      * **inserts** — each absorbed point is projected with the bulk's ``z``
+        and binned with the bulk's per-scale ``(width, n_buckets)`` (the same
+        eq. 1-2 / signature-hash path the build uses), so the bucket id a
+        delta point lands in is exactly the bucket a full rebuild would put
+        it in. Assignments are stored per scale as (n_delta, n_sig) bucket
+        matrices (2^m signatures for ProMiSH-E, one for ProMiSH-A).
+      * **bulk deletes** — tombstones live on the corpus; here we only track
+        which (keyword, bucket) coverage entries became *suspect* (the
+        deleted point may have been the bucket's last live holder of that
+        keyword), so query-time coverage can re-verify just those buckets
+        instead of scanning the bulk index.
+
+    Query-time, :meth:`covering_buckets` and :meth:`scale_pairs` give the
+    plan layer the bulk ∪ delta view of one scale: identical coverage and
+    bucket contents to a fresh index over the live corpus (given the same
+    ``z``/``w0``/``n_buckets``), which is what the streaming parity
+    guarantee rests on.
+    """
+
+    def __init__(self, index: PromishIndex, corpus):
+        self.index = index
+        self.corpus = corpus            # StreamingCorpus (bulk + delta view)
+        self.n_bulk = corpus.bulk.n
+        L = index.n_scales
+        self._chunks: list[list[np.ndarray]] = [[] for _ in range(L)]
+        self._mat: list[np.ndarray | None] = [None] * L
+        # scale -> keyword -> set of suspect bucket ids (bulk deletes only):
+        # buckets whose (keyword, bucket) coverage must be re-verified at
+        # query time. Verdicts are monotone under a grow-only tombstone set,
+        # so verified buckets leave the suspect set — dead ones permanently
+        # into ``_dead`` (a bucket cannot come back to life), live ones
+        # dropped until a later retire() touches them again.
+        self._suspect: list[dict[int, set[int]]] = [{} for _ in range(L)]
+        self._dead: list[dict[int, set[int]]] = [{} for _ in range(L)]
+
+    # ------------------------------------------------------------- absorb
+    def _bucket_ids(self, projected: np.ndarray, hi: HIStructure) -> np.ndarray:
+        """(B, n_sig) bucket ids of projected rows at one scale — the same
+        binning the bulk build ran (``_build_scale``)."""
+        if self.index.exact:
+            keys2 = proj.bin_keys_overlapping(projected, hi.width)
+            return sig.bucket_ids_overlapping(keys2, hi.n_buckets)
+        keys = proj.bin_keys_disjoint(projected, hi.width)
+        return sig.bucket_ids_disjoint(keys, hi.n_buckets)[:, None]
+
+    def absorb(self, points: np.ndarray,
+               projected: np.ndarray | None = None) -> None:
+        """Bin a batch of new points at every scale (append-only).
+
+        ``projected`` short-circuits the projection matmul when the caller
+        already projected the batch with this index's ``z`` (see
+        :func:`absorb_into` — an engine's E and A indices draw identical
+        ``z`` from the same seed, so the stream pays one matmul, not two)."""
+        if projected is None:
+            projected = proj.project(np.ascontiguousarray(points, np.float32),
+                                     self.index.z)
+        for s, hi in enumerate(self.index.structures):
+            self._chunks[s].append(self._bucket_ids(projected, hi))
+            self._mat[s] = None
+
+    def retire(self, bulk_ids: np.ndarray) -> None:
+        """Record bulk deletions: mark every (keyword, bucket) pair the
+        deleted points contributed to as suspect for coverage."""
+        bulk_ids = np.asarray(bulk_ids, dtype=np.int64)
+        bulk_ids = bulk_ids[bulk_ids < self.n_bulk]
+        if not len(bulk_ids):
+            return      # delta deletions are handled by the corpus tombstones
+        rows = self.corpus.bulk.points[bulk_ids]
+        projected = proj.project(rows, self.index.z)
+        for s, hi in enumerate(self.index.structures):
+            buckets = self._bucket_ids(projected, hi)
+            suspect = self._suspect[s]
+            for i, pid in enumerate(bulk_ids):
+                bset = set(int(b) for b in buckets[i])
+                for v in self.corpus.bulk.kw.row(int(pid)):
+                    suspect.setdefault(int(v), set()).update(bset)
+
+    def bucket_matrix(self, scale: int) -> np.ndarray:
+        """(n_delta, n_sig) bucket assignments at ``scale``."""
+        mat = self._mat[scale]
+        if mat is None or len(mat) != self.corpus.n_delta:
+            chunks = self._chunks[scale]
+            n_sig = (1 << self.index.m) if self.index.exact else 1
+            mat = np.concatenate(chunks, axis=0) if chunks else \
+                np.empty((0, n_sig), dtype=np.int64)
+            self._mat[scale] = mat
+        return mat
+
+    # ------------------------------------------------------------ query side
+    def _bucket_has_live_kw(self, scale: int, bucket: int, v_kw: int) -> bool:
+        """Does bulk bucket ``bucket`` still hold a live point tagged v_kw?"""
+        hi = self.index.structures[scale]
+        pts = hi.table.row(int(bucket))
+        vpts = self.corpus.bulk.ikp.row(int(v_kw))
+        inter = pts[sorted_member(pts, vpts)]
+        if not len(inter):
+            return False
+        return bool((~self.corpus.tombstoned(inter)).any())
+
+    def _delta_buckets_with(self, scale: int, v_kw: int) -> np.ndarray:
+        """Buckets at ``scale`` holding >=1 live delta point tagged v_kw."""
+        ids = self.corpus.delta_ids_with(v_kw)
+        if not len(ids):
+            return np.empty(0, dtype=np.int64)
+        mat = self.bucket_matrix(scale)
+        return np.unique(mat[ids - self.n_bulk])
+
+    def covering_buckets(self, scale: int, query) -> np.ndarray:
+        """Buckets containing all query keywords across bulk ∪ delta, live
+        points only — the streaming replacement for
+        :func:`repro.core.plan.covering_buckets` (same ascending order)."""
+        per_kw = []
+        hi = self.index.structures[scale]
+        for v in query:
+            kb = hi.khb.row(int(v)).astype(np.int64)
+            suspects = self._suspect[scale].get(int(v))
+            if suspects:
+                newly_dead = {b for b in suspects
+                              if not self._bucket_has_live_kw(scale, b, int(v))}
+                suspects.clear()           # live-verified; retire() re-adds
+                if newly_dead:
+                    self._dead[scale].setdefault(int(v), set()) \
+                        .update(newly_dead)
+            dead = self._dead[scale].get(int(v))
+            if dead:
+                kb = kb[~sorted_member(
+                    kb, np.asarray(sorted(dead), dtype=np.int64))]
+            dv = self._delta_buckets_with(scale, int(v))
+            per_kw.append(np.union1d(kb, dv) if len(dv) else kb)
+        stacked = np.concatenate(per_kw) if per_kw else np.empty(0, np.int64)
+        u, counts = np.unique(stacked, return_counts=True)
+        return u[counts == len(per_kw)]
+
+    def scale_pairs(self, scale: int,
+                    bitset: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Relevant live delta membership at one scale, as parallel
+        ``(buckets, ids)`` arrays sorted by (bucket, id) and deduped (a
+        ProMiSH-E point may draw the same bucket from distinct signatures).
+        The plan layer slices per covering bucket with searchsorted."""
+        rel = np.flatnonzero(bitset[self.n_bulk:])
+        if not len(rel):
+            empty = np.empty(0, dtype=np.int64)
+            return empty, empty
+        mat = self.bucket_matrix(scale)[rel]                    # (R, n_sig)
+        ids = np.repeat(rel.astype(np.int64) + self.n_bulk, mat.shape[1])
+        buckets = mat.reshape(-1).astype(np.int64)
+        order = np.lexsort((ids, buckets))
+        buckets, ids = buckets[order], ids[order]
+        keep = np.ones(len(buckets), dtype=bool)
+        keep[1:] = (buckets[1:] != buckets[:-1]) | (ids[1:] != ids[:-1])
+        return buckets[keep], ids[keep]
+
+
+def absorb_into(deltas, points: np.ndarray) -> None:
+    """Absorb one insert batch into several :class:`IndexDelta` buffers,
+    sharing the projection matmul between deltas whose indices drew the same
+    ``z`` (an engine's exact and approx indices both sample it first from
+    ``default_rng(seed)``, so the common case projects once)."""
+    points = np.ascontiguousarray(points, np.float32)
+    z_ref: np.ndarray | None = None
+    projected: np.ndarray | None = None
+    for d in deltas:
+        if z_ref is None or d.index.z is not z_ref \
+                and not np.array_equal(d.index.z, z_ref):
+            z_ref = d.index.z
+            projected = proj.project(points, z_ref)
+        d.absorb(points, projected=projected)

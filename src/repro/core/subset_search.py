@@ -39,6 +39,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core.types import Candidate, KeywordDataset, TopK
+from repro.utils.csr import sorted_member
 
 # distance backend fn: (A:(n,d), B:(m,d)) -> (n,m) float L2 distances
 DistanceFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
@@ -67,14 +68,9 @@ def pairwise_l2_numpy(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.sqrt(sq, out=sq)
 
 
-def _sorted_member(values: np.ndarray, sorted_ref: np.ndarray) -> np.ndarray:
-    """Boolean membership of ``values`` in sorted ``sorted_ref`` (both int),
-    via searchsorted — no hashing, no np.unique."""
-    if len(sorted_ref) == 0:
-        return np.zeros(len(values), dtype=bool)
-    idx = np.searchsorted(sorted_ref, values)
-    idx[idx == len(sorted_ref)] = 0
-    return sorted_ref[idx] == values
+# Shared with the index layer (tombstone masks, coverage re-verification):
+# the searchsorted membership primitive now lives in ``repro.utils.csr``.
+_sorted_member = sorted_member
 
 
 def group_by_keyword(f_ids: np.ndarray, query: Sequence[int],

@@ -88,9 +88,6 @@ def expected_explored(dataset: KeywordDataset, query, m: int, width: float,
     (the histogram of eq. 5 taken at its finest granularity).
     """
     rng = np.random.default_rng(seed)
-    groups = [dataset.ikp.row(v) for v in query]
-    sizes = np.array([len(g) for g in groups], dtype=np.float64)
-    total = float(np.prod(sizes))
     cands = list(brute_force.enumerate_candidates(dataset, query))
     if len(cands) > max_candidates:
         sel = rng.choice(len(cands), size=max_candidates, replace=False)

@@ -23,7 +23,6 @@ import jax.numpy as jnp
 from repro.kernels import diameter as _diameter
 from repro.kernels import pairwise_l2 as _pairwise
 from repro.kernels import project_bin as _project
-from repro.kernels import ref as _ref
 
 
 def _default_interpret() -> bool:

@@ -26,7 +26,6 @@ Usage:
 import argparse
 import gzip
 import json
-import re
 import time
 import traceback
 
@@ -48,14 +47,14 @@ from repro.models.hints import enable_hints  # noqa: E402
 
 def _bf16(tree):
     return jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
-        if l.dtype == jnp.float32 else l, tree)
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        if x.dtype == jnp.float32 else x, tree)
 
 
 def _with_sharding(struct_tree, spec_tree, mesh):
     named = sh.named(spec_tree, mesh)
     return jax.tree.map(
-        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
         struct_tree, named)
 
 

@@ -92,9 +92,7 @@ def parse_hlo(hlo_text: str) -> dict[str, Computation]:
         if not m:
             continue
         iname, rhs = m.groups()
-        # result type = everything before the op name
-        type_part = rhs.split(" ", 1)[0] if "[" in rhs.split(" ", 1)[0] else None
-        # more robust: type is the prefix up to the op token
+        # result type is the prefix up to the op token
         om = re.match(r"^((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)+)\s+"
                       r"([\w\-]+)\(", rhs)
         if not om:

@@ -3,6 +3,21 @@ engine, answer queries from a JSONL request stream (or a built-in demo).
 
     PYTHONPATH=src python -m repro.launch.serve --n 20000 --d 32 \
         --tier approx --queries 10
+
+The request stream is one JSON object per line. ``op`` selects the action
+(default ``query``), so a single stream can interleave serving and ingest —
+the streaming consistency model (README "Streaming ingest") applies: each
+response reflects every earlier op in the stream, never a partial batch.
+
+    {"keywords": [3, 7], "k": 2}                          # query (default op)
+    {"op": "insert", "points": [[...]], "keywords": [[...]]}
+    {"op": "delete", "ids": [12, 904]}
+    {"op": "compact"}
+
+Insert responses carry the assigned stable external ids; every ingest
+response reports the engine's generation/delta/tombstone state. Compaction
+also runs automatically at the ``--compact-ratio`` / ``--compact-min``
+cadence.
 """
 from __future__ import annotations
 
@@ -10,9 +25,46 @@ import argparse
 import json
 import sys
 
+import numpy as np
+
 from repro.data.flickr_like import flickr_like_dataset
 from repro.data.synthetic import random_queries, synthetic_dataset
 from repro.serve.engine import NKSEngine
+
+
+def _ingest_state(engine: NKSEngine) -> dict:
+    return {
+        "generation": engine.corpus_generation,
+        "delta_points": engine.delta_points,
+        "tombstones": engine.tombstone_count,
+        "compactions": engine.ingest.compactions,
+    }
+
+
+def handle_request(engine: NKSEngine, req: dict, *, tier: str, k: int) -> dict:
+    """Execute one JSONL op against the engine; returns the JSON response."""
+    op = req.get("op", "query")
+    if op == "query":
+        res = engine.query(req["keywords"], k=req.get("k", k), tier=tier)
+        return {
+            "op": "query",
+            "keywords": list(map(int, req["keywords"])),
+            "latency_ms": round(res.latency_s * 1e3, 2),
+            "results": [{"ids": list(c.ids), "diameter": round(c.diameter, 4)}
+                        for c in res.candidates],
+        }
+    if op == "insert":
+        pts = np.asarray(req["points"], dtype=np.float32)
+        ids = engine.insert(pts, req["keywords"])
+        return {"op": "insert", "ids": [int(i) for i in ids],
+                **_ingest_state(engine)}
+    if op == "delete":
+        n = engine.delete(req["ids"])
+        return {"op": "delete", "deleted": n, **_ingest_state(engine)}
+    if op == "compact":
+        ran = engine.compact()
+        return {"op": "compact", "compacted": ran, **_ingest_state(engine)}
+    raise ValueError(f"unknown op: {op!r}")
 
 
 def main():
@@ -28,7 +80,12 @@ def main():
     ap.add_argument("--queries", type=int, default=10,
                     help="demo random queries (ignored with --requests)")
     ap.add_argument("--requests", default=None,
-                    help="JSONL file: {\"keywords\": [..], \"k\": 1}")
+                    help="JSONL file: {\"op\": ..., \"keywords\": [..], ...}")
+    ap.add_argument("--compact-ratio", type=float, default=0.25,
+                    help="auto-compact once delta+tombstones exceed this "
+                         "fraction of the bulk corpus")
+    ap.add_argument("--compact-min", type=int, default=4096,
+                    help="minimum churn before auto-compaction triggers")
     args = ap.parse_args()
 
     if args.corpus == "flickr":
@@ -36,25 +93,20 @@ def main():
     else:
         ds = synthetic_dataset(n=args.n, d=args.d, u=args.u, t=args.t, seed=0)
     engine = NKSEngine(ds, build_exact=(args.tier == "exact"),
-                       build_approx=(args.tier != "exact"))
+                       build_approx=(args.tier != "exact"),
+                       compact_ratio=args.compact_ratio,
+                       compact_min=args.compact_min)
     print(f"serving: corpus N={ds.n} d={ds.dim} U={ds.n_keywords} "
           f"tier={args.tier}", file=sys.stderr)
 
     if args.requests:
-        reqs = [json.loads(l) for l in open(args.requests) if l.strip()]
-        queries = [(r["keywords"], r.get("k", args.k)) for r in reqs]
+        reqs = [json.loads(line) for line in open(args.requests) if line.strip()]
     else:
-        queries = [(q, args.k) for q in
-                   random_queries(ds, 3, args.queries, seed=1)]
+        reqs = [{"keywords": q, "k": args.k} for q in
+                random_queries(ds, 3, args.queries, seed=1)]
 
-    for kw, k in queries:
-        res = engine.query(kw, k=k, tier=args.tier)
-        print(json.dumps({
-            "keywords": list(map(int, kw)),
-            "latency_ms": round(res.latency_s * 1e3, 2),
-            "results": [{"ids": list(c.ids), "diameter": round(c.diameter, 4)}
-                        for c in res.candidates],
-        }))
+    for req in reqs:
+        print(json.dumps(handle_request(engine, req, tier=args.tier, k=args.k)))
 
 
 if __name__ == "__main__":

@@ -180,7 +180,7 @@ def cache_specs_tree(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh, cache_shape):
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
     return jax.tree_util.tree_unflatten(
-        treedef, [rule(p, l) for p, l in flat])
+        treedef, [rule(path, leaf) for path, leaf in flat])
 
 
 def named(tree_specs, mesh: Mesh):

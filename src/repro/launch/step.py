@@ -3,7 +3,6 @@ launcher and the dry-run."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models.api import model_api

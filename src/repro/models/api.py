@@ -134,8 +134,8 @@ def params_specs(cfg: ArchConfig) -> Params:
 def count_params(cfg: ArchConfig) -> int:
     import math
     specs = params_specs(cfg)
-    return sum(math.prod(l.shape) if l.shape else 1
-               for l in jax.tree.leaves(specs))
+    return sum(math.prod(leaf.shape) if leaf.shape else 1
+               for leaf in jax.tree.leaves(specs))
 
 
 def active_params(cfg: ArchConfig) -> int:

@@ -174,7 +174,8 @@ def apply_ssm(p: Params, x, cfg: SSMConfig, *, state: Params | None = None):
         c_in = cs.reshape(bsz, s, g, n)
         y, fin = ssd_chunked(xs, dt, b_in, c_in, a, chunk=cfg.chunk)
         k = cfg.d_conv
-        tail = lambda u: jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):, :]
+        def tail(u):
+            return jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):, :]
         new_state = {"cx": tail(xr), "cb": tail(br), "cc": tail(cr), "ssm": fin}
     else:
         xs_t, ncx = _conv_step(xr[:, 0], state["cx"], p["conv_x"], p["conv_bias_x"])

@@ -32,10 +32,25 @@ phase timings, and packed-subset cache hits are recorded in
 The corpus can be ingested directly (points + keywords) or produced by any
 assigned architecture through ``ingest_embeddings`` (models.api.embed ->
 ProMiSH points — the paper's Flickr use case with learned features).
+
+**Streaming ingest** (``insert`` / ``delete`` / ``compact``): the engine
+serves while the corpus changes. Inserts land in an append-only delta
+(:class:`~repro.core.types.StreamingCorpus` +
+:class:`~repro.core.index.IndexDelta` per index flavour) binned with the
+bulk index's hash geometry; deletes are tombstones; a size/ratio-triggered
+compaction (``compact_ratio``/``compact_min``) folds everything into a fresh
+immutable index, swapped atomically, bumping ``corpus_generation`` — the
+token the backend LRU caches are scoped to (absorbs keep caches warm, only
+compaction invalidates). Consistency model: a query issued after an ingest
+call returns sees all of that call's batch and every earlier one — never a
+partial batch; results carry *external* ids that stay stable across
+compactions. ``PipelineStats`` records generation/delta/tombstone state per
+batch, ``engine.ingest`` the lifetime counters.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Sequence
 
@@ -43,9 +58,16 @@ import numpy as np
 
 from repro.core import plan, promish_a, promish_e
 from repro.core.backend import DistanceBackend, get_backend
-from repro.core.index import PromishIndex, build_index
+from repro.core.index import IndexDelta, PromishIndex, absorb_into, build_index
 from repro.core.subset_search import enumerate_with_block, local_groups
-from repro.core.types import Candidate, KeywordDataset, TopK, make_dataset
+from repro.core.types import (Candidate, KeywordDataset, StreamingCorpus,
+                              TopK, make_dataset)
+
+# Process-global corpus-generation tokens: every (engine, compaction) pair
+# gets a unique token, so a DistanceBackend shared across engines can never
+# serve one engine's packed rows to another (generation numbers restart at 0
+# per engine; tokens do not).
+_CORPUS_TOKENS = itertools.count(1)
 
 # repro.core.distributed / device_plane import the jax device stack; they are
 # loaded lazily so the numpy control plane stays importable everywhere and
@@ -110,6 +132,13 @@ class PipelineStats:
     shard_dispatches: list[int] = dataclasses.field(default_factory=list)
     shard_valid_cells: list[int] = dataclasses.field(default_factory=list)
     shard_total_cells: list[int] = dataclasses.field(default_factory=list)
+    # Streaming-ingest accounting: the corpus generation the batch ran
+    # against (bumped by compaction only), the delta/tombstone sizes at
+    # dispatch time, and the engine's lifetime compaction count.
+    corpus_generation: int = 0
+    delta_points: int = 0
+    tombstones: int = 0
+    compactions: int = 0
 
     @property
     def dispatches_per_scale(self) -> list[int]:
@@ -149,19 +178,54 @@ class PipelineStats:
             "collective_s": round(self.t_collective_s, 6),
         }
 
+    @property
+    def ingest(self) -> dict:
+        """JSON-ready streaming-ingest summary for the benchmark trajectory."""
+        return {
+            "generation": self.corpus_generation,
+            "delta_points": self.delta_points,
+            "tombstones": self.tombstones,
+            "compactions": self.compactions,
+        }
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Lifetime streaming counters for one engine (``engine.ingest``)."""
+
+    inserts: int = 0            # insert calls absorbed
+    points_inserted: int = 0
+    deletes: int = 0            # delete calls absorbed
+    points_deleted: int = 0
+    compactions: int = 0
+    generation: int = 0         # == engine.corpus_generation
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
 
 class NKSEngine:
     def __init__(self, dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
                  seed: int = 0, build_exact: bool = True, build_approx: bool = True,
-                 mesh=None):
+                 mesh=None, w0: float | None = None, n_buckets: int | None = None,
+                 compact_ratio: float = 0.25, compact_min: int = 4096,
+                 auto_compact: bool = True):
         """``mesh`` attaches a device plane: a jax Mesh (with a ``data``
         axis), an existing :class:`~repro.core.device_plane.DevicePlane`, or
         ``"auto"`` to acquire the serving mesh from the environment
         (``REPRO_MESH_OVERRIDE`` / all local devices). With a plane attached,
         ``backend="pallas"`` dispatches shard over the mesh and the device
         tier runs the sharded anchor-star program; ``mesh=None`` (default)
-        keeps every tier single-device."""
-        self.dataset = dataset
+        keeps every tier single-device.
+
+        Streaming knobs: ``w0``/``n_buckets`` pin the hash geometry across
+        compactions (None derives both from the corpus, per the paper);
+        ``compact_ratio``/``compact_min`` set the rebuild cadence — after an
+        insert or delete, the delta is folded into a fresh bulk index once
+        ``delta_points + tombstones >= max(compact_min, compact_ratio * N)``
+        (``auto_compact=False`` leaves compaction to explicit
+        :meth:`compact` calls)."""
+        self._bulk = dataset
         self.index_e: PromishIndex | None = None
         self.index_a: PromishIndex | None = None
         self.last_batch_stats: PipelineStats | None = None
@@ -169,12 +233,196 @@ class NKSEngine:
         if mesh is not None:
             from repro.core.device_plane import get_plane
             self.plane = get_plane(mesh)
+        self._build_params = dict(m=m, n_scales=n_scales, seed=seed,
+                                  w0=w0, n_buckets=n_buckets)
         if build_exact:
-            self.index_e = build_index(dataset, m=m, n_scales=n_scales,
-                                       exact=True, seed=seed)
+            self.index_e = build_index(dataset, exact=True, **self._build_params)
         if build_approx:
-            self.index_a = build_index(dataset, m=m, n_scales=n_scales,
-                                       exact=False, seed=seed)
+            self.index_a = build_index(dataset, exact=False, **self._build_params)
+        # Streaming-ingest state: lazy — a never-mutated engine keeps the
+        # frozen KeywordDataset and the classic single-corpus code paths.
+        self._view: StreamingCorpus | None = None
+        self._deltas: dict[str, IndexDelta] = {}
+        # internal -> external id map, stored in a capacity-doubled buffer so
+        # absorbing a batch appends in O(batch), not O(corpus).
+        self._ext_buf = np.arange(dataset.n, dtype=np.int64)
+        self._ext_len = dataset.n
+        self._next_ext = dataset.n
+        self._identity_ids = True
+        self.corpus_generation = 0
+        self._corpus_token = next(_CORPUS_TOKENS)
+        self.compact_ratio = float(compact_ratio)
+        self.compact_min = int(compact_min)
+        self.auto_compact = bool(auto_compact)
+        self.ingest = IngestStats()
+
+    # ------------------------------------------------------------- streaming
+    @property
+    def dataset(self):
+        """The corpus the engine currently serves: the merged streaming view
+        while a delta/tombstone set is live, the frozen bulk otherwise."""
+        return self._view if self._view is not None else self._bulk
+
+    @property
+    def delta_points(self) -> int:
+        return self._view.n_delta if self._view is not None else 0
+
+    @property
+    def tombstone_count(self) -> int:
+        return self._view.n_tombstones if self._view is not None else 0
+
+    def _streaming_dirty(self) -> bool:
+        return self._view is not None and self._view.dirty
+
+    @property
+    def _ext_of(self) -> np.ndarray:
+        return self._ext_buf[: self._ext_len]
+
+    def _ext_append(self, ext: np.ndarray) -> None:
+        need = self._ext_len + len(ext)
+        if len(self._ext_buf) < need:
+            grown = np.empty(max(2 * len(self._ext_buf), need), dtype=np.int64)
+            grown[: self._ext_len] = self._ext_buf[: self._ext_len]
+            self._ext_buf = grown
+        self._ext_buf[self._ext_len:need] = ext
+        self._ext_len = need
+
+    def _streaming_state(self) -> tuple[StreamingCorpus, dict[str, IndexDelta]]:
+        """The live streaming state, or a freshly built (uncommitted) one —
+        callers assign it back via ``_commit_streaming`` only after the
+        mutation succeeded, so a rejected op leaves the engine on the frozen
+        bulk path."""
+        if self._view is not None:
+            return self._view, self._deltas
+        view = StreamingCorpus(self._bulk)
+        deltas = {}
+        if self.index_e is not None:
+            deltas["e"] = IndexDelta(self.index_e, view)
+        if self.index_a is not None:
+            deltas["a"] = IndexDelta(self.index_a, view)
+        return view, deltas
+
+    def _commit_streaming(self, view: StreamingCorpus,
+                          deltas: dict[str, IndexDelta]) -> None:
+        self._view = view
+        self._deltas = deltas
+
+    def insert(self, points: np.ndarray,
+               keywords: Sequence[Sequence[int]]) -> np.ndarray:
+        """Absorb a batch of tagged points; returns their external ids.
+
+        The batch is visible to every query issued after this call returns
+        (absorbed atomically: queries see all of it or none of it — there is
+        no partial-batch state, and a rejected batch changes nothing). Cost
+        is O(batch * scales), never O(corpus); the bulk index is untouched
+        until compaction folds the delta in.
+        """
+        view, deltas = self._streaming_state()
+        ids = view.absorb(points, keywords)   # validates before any mutation
+        absorb_into(deltas.values(), view.points[ids])
+        self._commit_streaming(view, deltas)
+        ext = np.arange(self._next_ext, self._next_ext + len(ids),
+                        dtype=np.int64)
+        self._next_ext += len(ids)
+        self._ext_append(ext)
+        self.ingest.inserts += 1
+        self.ingest.points_inserted += len(ids)
+        self._maybe_compact()
+        return ext
+
+    def delete(self, external_ids: Sequence[int]) -> int:
+        """Tombstone points by external id; returns the number deleted.
+        Unknown, duplicate, or already-deleted ids raise without applying
+        anything (the caller's view of the corpus is stale — a serving
+        frontend should surface that, not mask it)."""
+        ext = np.asarray(list(external_ids), dtype=np.int64)
+        if not len(ext):
+            return 0
+        if len(np.unique(ext)) != len(ext):
+            raise KeyError(f"duplicate ids in delete batch: {ext.tolist()}")
+        internal = np.searchsorted(self._ext_of, ext)
+        bad = (internal >= len(self._ext_of)) | (self._ext_of[np.minimum(
+            internal, len(self._ext_of) - 1)] != ext)
+        if bad.any():
+            raise KeyError(f"unknown external ids: {ext[bad].tolist()}")
+        view, deltas = self._streaming_state()
+        dead = view.tombstoned(internal)
+        if dead.any():
+            raise KeyError(f"already deleted: {ext[dead].tolist()}")
+        for d in deltas.values():
+            d.retire(internal)
+        view.delete(internal)
+        self._commit_streaming(view, deltas)
+        self.ingest.deletes += 1
+        self.ingest.points_deleted += len(ext)
+        self._maybe_compact()
+        return len(ext)
+
+    def compact(self) -> bool:
+        """Fold the delta into a fresh immutable bulk index (atomic swap).
+
+        Rebuilds with the constructor's build params over the live points in
+        external-id order, remaps internal ids, bumps ``corpus_generation``
+        (invalidating backend packed-subset/tile caches), and resets the
+        delta. No-op (returns False) when nothing is dirty."""
+        if not self._streaming_dirty():
+            return False
+        view = self._view
+        live = view.live_internal_ids()
+        if not len(live):
+            # An all-deleted corpus has no projection span to rebuild from;
+            # keep serving from tombstones until something is inserted.
+            raise ValueError("compact: corpus would be empty — insert points "
+                             "before compacting away the last live one")
+        self._bulk = view.compacted_dataset()
+        if self.index_e is not None:
+            self.index_e = build_index(self._bulk, exact=True,
+                                       **self._build_params)
+        if self.index_a is not None:
+            self.index_a = build_index(self._bulk, exact=False,
+                                       **self._build_params)
+        self._ext_buf = np.ascontiguousarray(self._ext_of[live])
+        self._ext_len = len(live)
+        # The map is identity iff no id was ever retired: ext values are
+        # strictly increasing in [0, _next_ext), so full size == identity.
+        # (_next_ext must participate: a compaction that trimmed only
+        # *trailing* ids leaves ext_buf == arange, yet the next insert gets
+        # external id _next_ext != its internal row.)
+        self._identity_ids = self._ext_len == self._next_ext
+        self._view = None
+        self._deltas = {}
+        self.corpus_generation += 1
+        self._corpus_token = next(_CORPUS_TOKENS)
+        self.ingest.compactions += 1
+        self.ingest.generation = self.corpus_generation
+        return True
+
+    def _maybe_compact(self) -> None:
+        if not self.auto_compact or self._view is None:
+            return
+        if self._view.n_tombstones >= self._view.n:
+            # Everything is dead: nothing to rebuild from. The delete that
+            # got us here already succeeded — stay on tombstones until an
+            # insert brings the corpus back (explicit compact() still raises).
+            return
+        churn = self._view.n_delta + self._view.n_tombstones
+        if churn >= max(self.compact_min, self.compact_ratio * self._bulk.n):
+            self.compact()
+
+    def _externalize(self, cands: list[Candidate]) -> list[Candidate]:
+        """Map internal candidate ids to stable external ids (identity until
+        a compaction leaves holes in the id space)."""
+        if self._identity_ids:
+            return cands
+        return [dataclasses.replace(
+                    c, ids=tuple(int(self._ext_of[i]) for i in c.ids))
+                for c in cands]
+
+    def _record_ingest(self, stats: PipelineStats) -> None:
+        stats.corpus_generation = self.corpus_generation
+        stats.delta_points = self.delta_points
+        stats.tombstones = self.tombstone_count
+        stats.compactions = self.ingest.compactions
 
     @classmethod
     def ingest_embeddings(cls, api, params, batches: Sequence[dict],
@@ -228,17 +476,24 @@ class NKSEngine:
     def query(self, keywords: Sequence[int], k: int = 1,
               tier: str = "approx") -> QueryResult:
         t0 = time.perf_counter()
+        if tier in ("exact", "approx") and self._streaming_dirty():
+            # The per-query searches walk a frozen index; with a live delta
+            # the batched pipeline (a batch of one reproduces them exactly,
+            # per the PR-1 parity suite) is the delta-aware path.
+            res = self.query_batch([keywords], k=k, tier=tier,
+                                   backend="numpy")[0]
+            return dataclasses.replace(res, latency_s=time.perf_counter() - t0)
         if tier == "exact":
             pq = promish_e.search(self.dataset, self.index_e, keywords, k=k)
         elif tier == "approx":
             pq = promish_a.search(self.dataset, self.index_a, keywords, k=k)
         elif tier == "device":
-            cands = self._device_topk(keywords, k)
+            cands = self._externalize(self._device_topk(keywords, k))
             return QueryResult(list(keywords), cands,
                                time.perf_counter() - t0, tier)
         else:
             raise ValueError(tier)
-        return QueryResult(list(keywords), pq.items,
+        return QueryResult(list(keywords), self._externalize(pq.items),
                            time.perf_counter() - t0, tier)
 
     # ------------------------------------------------------------- batched path
@@ -272,7 +527,8 @@ class NKSEngine:
             self.dataset.points,
             [t.f_ids for t, _ in prepared],
             [pqs[t.qidx].kth_diameter() for t, _ in prepared],
-            keys=[t.f_ids.tobytes() for t, _ in prepared])
+            keys=[t.f_ids.tobytes() for t, _ in prepared],
+            generation=self._corpus_token)
         t1 = time.perf_counter()
         join_pairs = 0
         for (t, gl), db in zip(prepared, blocks):
@@ -297,8 +553,17 @@ class NKSEngine:
                      list(backend.stats.shard_valid_cells),
                      list(backend.stats.shard_total_cells))
         pqs = [TopK(k, init_full=exact) for _ in queries]
+        # Streaming: plan over bulk ∪ delta, tombstones cleared from every
+        # bitset (the subsets the backend packs and the enumeration walks
+        # then contain live points only).
+        delta = None
+        if self._streaming_dirty():
+            delta = self._deltas["e" if exact else "a"]
         t0 = time.perf_counter()
         bitsets = [plan.query_bitset(self.dataset, q) for q in queries]
+        if delta is not None:
+            for bs in bitsets:
+                self._view.mask_tombstones(bs)
         stats.t_plan_s += time.perf_counter() - t0
         explored = {i: set() for i in range(len(queries))} if exact else None
         active = list(range(len(queries)))
@@ -310,7 +575,7 @@ class NKSEngine:
             pstats = plan.PlanStats()
             t0 = time.perf_counter()
             tasks = plan.plan_scale(index, s, queries, bitsets, active,
-                                    explored, pstats)
+                                    explored, pstats, delta=delta)
             stats.t_plan_s += time.perf_counter() - t0
             sstats.buckets_selected = pstats.buckets_selected
             sstats.duplicate_subsets = pstats.duplicate_subsets
@@ -384,10 +649,11 @@ class NKSEngine:
                 self.plane.n_shards if self.plane is not None else 1)
             out = []
             for q in queries:
-                cands = self._device_topk(q, k, stats)
+                cands = self._externalize(self._device_topk(q, k, stats))
                 out.append(QueryResult(list(q), cands, 0.0, tier))
             per_q = (time.perf_counter() - t0) / max(len(queries), 1)
             out = [dataclasses.replace(r, latency_s=per_q) for r in out]
+            self._record_ingest(stats)
             self.last_batch_stats = stats
             return out
         if tier not in ("exact", "approx"):
@@ -396,9 +662,10 @@ class NKSEngine:
         qlists = self._validate_queries(queries)
         pqs, stats = self._batch_search(qlists, k, tier,
                                         self._resolve_backend(backend))
+        self._record_ingest(stats)
         self.last_batch_stats = stats
         per_q = (time.perf_counter() - t0) / max(len(qlists), 1)
-        return [QueryResult(list(q), pq.items, per_q, tier)
+        return [QueryResult(list(q), self._externalize(pq.items), per_q, tier)
                 for q, pq in zip(queries, pqs)]
 
     def _resolve_backend(self, backend: str | DistanceBackend) -> DistanceBackend:

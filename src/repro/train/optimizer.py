@@ -52,15 +52,16 @@ def lr_at(cfg: OptimizerConfig, step):
 
 def init_opt_state(params, cfg: OptimizerConfig):
     dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}
 
 
 def global_norm(tree) -> jax.Array:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in jax.tree.leaves(tree)))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in jax.tree.leaves(tree)))
 
 
 def adamw_update(params, grads, opt_state, cfg: OptimizerConfig):

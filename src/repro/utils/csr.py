@@ -42,12 +42,12 @@ class CSR:
 
 def csr_from_lists(lists: Sequence[Sequence[int]], dtype=np.int32) -> CSR:
     """Build a CSR from a python list-of-lists."""
-    lens = np.fromiter((len(l) for l in lists), dtype=np.int64, count=len(lists))
+    lens = np.fromiter((len(row) for row in lists), dtype=np.int64, count=len(lists))
     offsets = np.zeros(len(lists) + 1, dtype=np.int64)
     np.cumsum(lens, out=offsets[1:])
     values = np.empty(offsets[-1], dtype=dtype)
-    for i, l in enumerate(lists):
-        values[offsets[i] : offsets[i + 1]] = np.asarray(l, dtype=dtype)
+    for i, row in enumerate(lists):
+        values[offsets[i] : offsets[i + 1]] = np.asarray(row, dtype=dtype)
     return CSR(offsets=offsets, values=values)
 
 
@@ -76,3 +76,30 @@ def invert_csr(csr: CSR, n_values: int) -> CSR:
     keyword->points, the paper's I_kp)."""
     rows = np.repeat(np.arange(csr.n_rows, dtype=np.int64), np.diff(csr.offsets))
     return csr_from_pairs(csr.values.astype(np.int64), rows.astype(np.int32), n_values)
+
+
+def ragged_arange(counts: np.ndarray, total: int | None = None) -> np.ndarray:
+    """[0..c0), [0..c1), ... concatenated — the gather index for slicing many
+    CSR rows at once."""
+    counts = np.asarray(counts, dtype=np.int64)
+    if total is None:
+        total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    ends = np.cumsum(counts)
+    starts = ends - counts
+    out = np.arange(total, dtype=np.int64)
+    out -= np.repeat(starts, counts)
+    return out
+
+
+def sorted_member(values: np.ndarray, sorted_ref: np.ndarray) -> np.ndarray:
+    """Boolean membership of ``values`` in sorted ``sorted_ref`` (both int),
+    via searchsorted — no hashing, no np.unique. The membership primitive of
+    every flat-array index structure here (subset grouping, tombstone masks,
+    coverage re-verification)."""
+    if len(sorted_ref) == 0 or len(values) == 0:
+        return np.zeros(len(values), dtype=bool)
+    idx = np.searchsorted(sorted_ref, values)
+    idx[idx == len(sorted_ref)] = 0
+    return sorted_ref[idx] == values

@@ -1,7 +1,6 @@
 """Shared fixtures. NOTE: XLA_FLAGS device-count forcing is deliberately NOT
 set here — smoke tests and benchmarks must see the real single CPU device;
 only launch/dryrun.py forces 512 placeholder devices (in its own process)."""
-import numpy as np
 import pytest
 
 from repro.data.synthetic import synthetic_dataset

@@ -11,7 +11,6 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,7 @@ from repro.core.distributed import (distributed_nks_topk, nks_anchor_topk,
                                     pack_groups)
 from repro.data.synthetic import random_queries, synthetic_dataset
 from repro.launch.mesh import make_local_mesh
-from repro.train.grad_compress import compressed_psum, init_error_buf
+from repro.train.grad_compress import compressed_psum
 from repro.train.pipeline_parallel import pipeline_forward
 
 
@@ -119,7 +118,8 @@ def test_search_step_lowering():
     from repro.core.distributed import search_step_specs
     structs, specs = search_step_specs(q=4, r_total=1024, d=64, k=5)
     with mesh:
-        fn = lambda g, m_, i: distributed_nks_topk(mesh, g, m_, i, k=5)
+        def fn(g, m_, i):
+            return distributed_nks_topk(mesh, g, m_, i, k=5)
         from jax.sharding import NamedSharding
         shardings = tuple(NamedSharding(mesh, s) for s in specs)
         lowered = jax.jit(fn, in_shardings=shardings).lower(*structs)

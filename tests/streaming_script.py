@@ -1,0 +1,116 @@
+"""Streaming-ingest parity on a forced 8-device mesh, run in a subprocess
+(tests/test_streaming.py drives it; same pattern as sharded_script.py).
+Asserts the acceptance criterion's multi-device half:
+
+  1. a streaming engine whose pallas dispatches shard over the plane answers
+     every interleaving of inserts/deletes/compactions bit-identically to a
+     fresh mesh-attached engine on the equivalent static corpus (exact and
+     approx tiers);
+  2. the sharded streaming engine matches the single-device streaming engine
+     bit-exactly (delta points ride the same size-binned dispatches);
+  3. generation-tagged caches behave identically under sharding: absorbs
+     retain the packed-tile LRU, compaction purges it once.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+
+from repro.core.backend import PallasBackend
+from repro.core.device_plane import DevicePlane
+from repro.core.index import build_index
+from repro.core.types import make_dataset
+from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.launch.mesh import make_serving_mesh
+from repro.serve.engine import NKSEngine
+
+PLANE = DevicePlane(make_serving_mesh(data=8))
+U = 18
+
+
+def cands(results):
+    return [[(c.ids, c.diameter) for c in r.candidates] for r in results]
+
+
+def main():
+    base = synthetic_dataset(n=320, d=6, u=U, t=2, seed=7)
+    pool = synthetic_dataset(n=120, d=6, u=U, t=2, seed=8)
+    probe = build_index(base, m=2, n_scales=5, exact=True, seed=0)
+    pinned = dict(m=2, n_scales=5, seed=0, w0=probe.w0,
+                  n_buckets=probe.structures[0].n_buckets)
+    queries = random_queries(base, 2, 8, seed=3) + \
+        random_queries(base, 3, 8, seed=4)
+
+    eng_mesh = NKSEngine(base, mesh=PLANE, auto_compact=False, **pinned)
+    eng_one = NKSEngine(base, auto_compact=False, **pinned)
+    pts = [base.points[i] for i in range(base.n)]
+    kws = [base.kw.row(i).tolist() for i in range(base.n)]
+    alive = dict.fromkeys(range(base.n), True)
+
+    be_mesh = PallasBackend(interpret=True, plane=PLANE)
+    be_one = PallasBackend(interpret=True)
+
+    def check(tag):
+        ids = np.asarray(sorted(i for i, a in alive.items() if a))
+        ds = make_dataset(np.stack([pts[i] for i in ids]),
+                          [kws[i] for i in ids], n_keywords=U)
+        fresh = NKSEngine(ds, mesh=PLANE, **pinned)
+        for tier in ("exact", "approx"):
+            got = eng_mesh.query_batch(queries, k=2, tier=tier, backend=be_mesh)
+            one = eng_one.query_batch(queries, k=2, tier=tier, backend=be_one)
+            want = fresh.query_batch(queries, k=2, tier=tier,
+                                     backend=PallasBackend(interpret=True,
+                                                           plane=PLANE))
+            want_ext = [[(tuple(int(ids[i]) for i in c.ids), c.diameter)
+                         for c in r.candidates] for r in want]
+            assert cands(got) == want_ext, f"{tag}/{tier}: sharded != fresh"
+            assert cands(got) == cands(one), f"{tag}/{tier}: sharded != 1-dev"
+        print(f"  {tag}: parity ok (cumulative sharded dispatches="
+              f"{be_mesh.stats.sharded_dispatches})")
+
+    def ingest(lo, hi):
+        chunk = pool.points[lo:hi]
+        ck = [pool.kw.row(i).tolist() for i in range(lo, hi)]
+        eng_mesh.insert(chunk, ck)
+        eng_one.insert(chunk, ck)
+        for j in range(lo, hi):
+            alive[len(pts)] = True
+            pts.append(pool.points[j])
+            kws.append(pool.kw.row(j).tolist())
+
+    def delete(doomed):
+        eng_mesh.delete(doomed)
+        eng_one.delete(doomed)
+        for i in doomed:
+            alive[int(i)] = False
+
+    check("static")
+    ingest(0, 50)
+    check("insert")
+    delete([4, 17, 325, 350])
+    check("delete")
+
+    # generation-tagged caches under sharding: absorb retains, compact purges
+    h0 = be_mesh.stats.cache_hits
+    eng_mesh.query_batch(queries, k=2, tier="exact", backend=be_mesh)
+    assert be_mesh.stats.cache_hits > h0, "warm LRU expected after absorb"
+    assert be_mesh.stats.generation_purges == 0
+
+    assert eng_mesh.compact() and eng_one.compact()
+    assert eng_mesh.corpus_generation == 1
+    check("compact")
+    assert be_mesh.stats.generation_purges == 1, "compaction must purge once"
+
+    ingest(50, 90)
+    delete([2, 9, 380])
+    check("post-compact churn")
+    assert eng_mesh.compact() and eng_one.compact()
+    check("final")
+    assert be_mesh.stats.sharded_dispatches > 0, \
+        "streaming batches never took the sharded route"
+    print("ALL STREAMING SHARDED OK")
+
+
+if __name__ == "__main__":
+    main()

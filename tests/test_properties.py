@@ -71,7 +71,7 @@ def test_topk_invariants(items, k):
 @given(lists=st.lists(st.lists(st.integers(0, 9), max_size=5), min_size=1,
                       max_size=20))
 def test_csr_invert_roundtrip(lists):
-    csr = csr_from_lists([sorted(set(l)) for l in lists])
+    csr = csr_from_lists([sorted(set(row)) for row in lists])
     inv = invert_csr(csr, 10)
     # membership is preserved both ways
     for row_id in range(csr.n_rows):

@@ -6,7 +6,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
-from repro.configs.base import DECODE_32K, TRAIN_4K
+from repro.configs.base import DECODE_32K
 from repro.launch import shardings as sh
 from repro.models.api import model_api, params_specs
 

@@ -1,0 +1,373 @@
+"""Streaming ingest: incremental index maintenance must be invisible to
+search. For any interleaving of inserts/deletes/compactions, ``query_batch``
+results are bit-identical (exact tier) / candidate-set identical (approx
+tier) to a fresh engine built on the equivalent static corpus — asserted
+here on one device and, via ``tests/streaming_script.py``, on a forced
+8-device mesh. Also covers the generation-tagged backend caches: delta
+absorbs keep the packed-subset/tile LRU warm, compaction purges it, and a
+pre-generation entry is never served."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.backend import PallasBackend
+from repro.core.index import build_index
+from repro.core.types import make_dataset
+from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.serve.engine import NKSEngine
+
+U = 18
+
+
+class Tracked:
+    """Ground-truth mirror of the streaming engine: the live corpus in
+    external-id order, for building equivalent static engines."""
+
+    def __init__(self, ds, pinned):
+        self.pts = [ds.points[i] for i in range(ds.n)]
+        self.kws = [ds.kw.row(i).tolist() for i in range(ds.n)]
+        self.alive = dict.fromkeys(range(ds.n), True)
+        self.pinned = pinned
+
+    def insert(self, pts, kws):
+        for p, k in zip(pts, kws):
+            self.alive[len(self.pts)] = True
+            self.pts.append(p)
+            self.kws.append(list(k))
+
+    def delete(self, ext_ids):
+        for i in ext_ids:
+            self.alive[int(i)] = False
+
+    def fresh(self) -> tuple[NKSEngine, np.ndarray]:
+        """Equivalent static engine + its row -> external-id map."""
+        ids = np.asarray(sorted(i for i, a in self.alive.items() if a))
+        ds = make_dataset(np.stack([self.pts[i] for i in ids]),
+                          [self.kws[i] for i in ids], n_keywords=U)
+        return NKSEngine(ds, **self.pinned), ids
+
+
+def assert_parity(engine, tracked, queries, k=2, backend="numpy",
+                  tiers=("exact", "approx")):
+    fresh, ext = tracked.fresh()
+    for tier in tiers:
+        got = engine.query_batch(queries, k=k, tier=tier, backend=backend)
+        want = fresh.query_batch(queries, k=k, tier=tier, backend=backend)
+        for q, rg, rw in zip(queries, got, want):
+            cg = [(c.ids, c.diameter) for c in rg.candidates]
+            cw = [(tuple(int(ext[i]) for i in c.ids), c.diameter)
+                  for c in rw.candidates]
+            assert cg == cw, f"tier={tier} query={q}: {cg} != {cw}"
+
+
+@pytest.fixture(scope="module")
+def base():
+    return synthetic_dataset(n=260, d=6, u=U, t=2, seed=7)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return synthetic_dataset(n=160, d=6, u=U, t=2, seed=8)
+
+
+@pytest.fixture(scope="module")
+def pinned(base):
+    """Hash geometry pinned across engine rebuilds: same w0/n_buckets for the
+    streaming engine, its compactions, and every fresh comparison engine —
+    the precondition for approx-tier (plan-level) parity."""
+    probe = build_index(base, m=2, n_scales=5, exact=True, seed=0)
+    return dict(m=2, n_scales=5, seed=0, w0=probe.w0,
+                n_buckets=probe.structures[0].n_buckets)
+
+
+@pytest.fixture
+def rig(base, pool, pinned):
+    eng = NKSEngine(base, auto_compact=False, **pinned)
+    return eng, Tracked(base, pinned), pool
+
+
+def _chunk(pool, lo, hi):
+    return pool.points[lo:hi], [pool.kw.row(i).tolist() for i in range(lo, hi)]
+
+
+def test_insert_parity(rig, base):
+    eng, tracked, pool = rig
+    queries = random_queries(base, 2, 4, seed=3) + random_queries(base, 3, 4, seed=4)
+    pts, kws = _chunk(pool, 0, 60)
+    ext = eng.insert(pts, kws)
+    assert ext.tolist() == list(range(260, 320))
+    tracked.insert(pts, kws)
+    assert eng.delta_points == 60 and eng.corpus_generation == 0
+    assert_parity(eng, tracked, queries)
+
+
+def test_delete_parity_bulk_and_delta(rig, base):
+    """Deletes tombstone both bulk and delta points; coverage drops buckets
+    whose last live holder of a keyword died (the phantom/suspect path)."""
+    eng, tracked, pool = rig
+    queries = random_queries(base, 3, 6, seed=5)
+    pts, kws = _chunk(pool, 0, 40)
+    eng.insert(pts, kws)
+    tracked.insert(pts, kws)
+    # bulk deletes (5 incl. points that appear in results) + delta deletes
+    first = eng.query_batch(queries, k=1, tier="exact", backend="numpy")
+    victim = first[0].candidates[0].ids[0]
+    doomed = [victim, 7, 33, 120, 261, 285]
+    eng.delete(doomed)
+    tracked.delete(doomed)
+    assert eng.tombstone_count == 6
+    assert_parity(eng, tracked, queries)
+    # the deleted point never reappears in any tier's results
+    for tier in ("exact", "approx"):
+        for r in eng.query_batch(queries, k=2, tier=tier, backend="numpy"):
+            assert all(victim not in c.ids for c in r.candidates)
+
+
+def test_interleaved_ops_parity(rig, base):
+    """A scripted insert/delete/compact interleaving, parity after every op
+    — the acceptance-criterion scenario."""
+    eng, tracked, pool = rig
+    queries = random_queries(base, 2, 3, seed=6) + random_queries(base, 3, 3, seed=7)
+    rng = np.random.default_rng(11)
+    cursor = 0
+    for step, op in enumerate(
+            ["insert", "delete", "insert", "compact", "delete",
+             "insert", "compact", "insert", "delete"]):
+        if op == "insert":
+            pts, kws = _chunk(pool, cursor, cursor + 25)
+            cursor += 25
+            eng.insert(pts, kws)
+            tracked.insert(pts, kws)
+        elif op == "delete":
+            live = sorted(i for i, a in tracked.alive.items() if a)
+            doomed = rng.choice(live, size=6, replace=False).tolist()
+            eng.delete(doomed)
+            tracked.delete(doomed)
+        else:
+            assert eng.compact()
+            assert eng.delta_points == 0 and eng.tombstone_count == 0
+        assert_parity(eng, tracked, queries, k=2)
+    assert eng.corpus_generation == 2
+    assert eng.ingest.compactions == 2
+
+
+def test_parity_with_pallas_backend(rig, base):
+    """Bit-exact streaming-vs-fresh parity holds on the device path too
+    (same subset stream -> same packed dispatches -> same masks)."""
+    eng, tracked, pool = rig
+    queries = random_queries(base, 3, 4, seed=8)
+    pts, kws = _chunk(pool, 0, 50)
+    eng.insert(pts, kws)
+    tracked.insert(pts, kws)
+    doomed = [3, 262, 290]
+    eng.delete(doomed)
+    tracked.delete(doomed)
+    assert_parity(eng, tracked, queries,
+                  backend=PallasBackend(interpret=True))
+
+
+def test_external_ids_stable_across_compaction(rig, base):
+    """Compaction remaps internal rows but results keep external ids: the
+    same query answers identically (ids and diameters) before and after."""
+    eng, tracked, pool = rig
+    queries = random_queries(base, 2, 4, seed=9)
+    pts, kws = _chunk(pool, 0, 30)
+    eng.insert(pts, kws)
+    eng.delete([1, 2, 263])
+    before = eng.query_batch(queries, k=2, tier="exact", backend="numpy")
+    assert eng.compact()
+    after = eng.query_batch(queries, k=2, tier="exact", backend="numpy")
+    for rb, ra in zip(before, after):
+        assert [(c.ids, c.diameter) for c in rb.candidates] == \
+               [(c.ids, c.diameter) for c in ra.candidates]
+
+
+def test_trailing_trim_compaction_keeps_external_ids(base, pool, pinned):
+    """A compaction that only removed *trailing* ids leaves the map looking
+    like identity, but later inserts still need externalization: the row a
+    query reports must be the external id insert() returned."""
+    eng = NKSEngine(base, auto_compact=False, **pinned)
+    eng.delete([base.n - 1])               # trailing id only
+    assert eng.compact()
+    ext = eng.insert(pool.points[:1], [pool.kw.row(0).tolist()])
+    assert ext.tolist() == [base.n]        # external id keeps counting
+    kws = pool.kw.row(0).tolist()
+    # k covers every diameter-0 singleton (points tagged with all of kws), so
+    # the inserted point must appear — under its external id, not its
+    # internal row (which collides with the deleted trailing point).
+    singles = sum(1 for i in range(base.n - 1)
+                  if set(kws) <= set(base.kw.row(i).tolist()))
+    res = eng.query_batch([kws], k=singles + 2, tier="exact",
+                          backend="numpy")[0]
+    all_ids = {i for c in res.candidates for i in c.ids}
+    assert int(ext[0]) in all_ids, \
+        f"inserted point not reported under its external id: {res.candidates}"
+    assert base.n - 1 not in all_ids       # the deleted id never resurfaces
+    eng.delete([int(ext[0])])              # the returned id must round-trip
+    assert eng.tombstone_count == 1
+
+
+def test_cache_correctness_across_generations(rig, base):
+    """Satellite: after insert -> query -> compact -> query, the backend LRU
+    must never serve a pre-generation packed subset or device tile. Absorbs
+    retain entries (hit rate survives ingest); compaction purges; the first
+    post-compaction batch is parity-checked against a cold engine."""
+    eng, tracked, pool = rig
+    queries = random_queries(base, 3, 6, seed=10)
+    be = PallasBackend(interpret=True)
+    eng.query_batch(queries, k=2, tier="exact", backend=be)
+    h0, m0 = be.stats.cache_hits, be.stats.cache_misses
+    eng.query_batch(queries, k=2, tier="exact", backend=be)
+    assert be.stats.cache_hits > h0          # steady state: warm
+    assert be.stats.cache_misses == m0
+
+    pts, kws = _chunk(pool, 0, 40)
+    eng.insert(pts, kws)
+    tracked.insert(pts, kws)
+    h1 = be.stats.cache_hits
+    eng.query_batch(queries, k=2, tier="exact", backend=be)
+    # delta absorb must NOT clear the cache: unchanged subsets still hit
+    assert be.stats.cache_hits > h1
+    assert be.stats.generation_purges == 0
+
+    assert eng.compact()
+    h2, m2 = be.stats.cache_hits, be.stats.cache_misses
+    got = eng.query_batch(queries, k=2, tier="exact", backend=be)
+    # generation bump: every entry purged, nothing pre-generation served
+    assert be.stats.generation_purges == 1
+    assert be.stats.cache_hits == h2 and be.stats.cache_misses > m2
+    cold, ext = tracked.fresh()
+    want = cold.query_batch(queries, k=2, tier="exact",
+                            backend=PallasBackend(interpret=True))
+    for rg, rw in zip(got, want):
+        assert [(c.ids, c.diameter) for c in rg.candidates] == \
+               [(tuple(int(ext[i]) for i in c.ids), c.diameter)
+                for c in rw.candidates]
+
+
+def test_auto_compaction_cadence(base, pool, pinned):
+    eng = NKSEngine(base, compact_min=50, compact_ratio=0.1, **pinned)
+    pts, kws = _chunk(pool, 0, 30)
+    eng.insert(pts, kws)
+    assert eng.corpus_generation == 0 and eng.delta_points == 30
+    pts, kws = _chunk(pool, 30, 60)
+    eng.insert(pts, kws)        # churn 60 >= max(50, 26) -> compacts
+    assert eng.corpus_generation == 1
+    assert eng.delta_points == 0 and eng.tombstone_count == 0
+    assert eng.ingest.compactions == 1 and eng.ingest.generation == 1
+    # ingest counters flow into PipelineStats
+    eng.query_batch(random_queries(base, 2, 2, seed=1), tier="approx",
+                    backend="numpy")
+    st = eng.last_batch_stats
+    assert st.corpus_generation == 1 and st.compactions == 1
+    assert st.delta_points == 0 and st.tombstones == 0
+    assert st.ingest == {"generation": 1, "delta_points": 0,
+                         "tombstones": 0, "compactions": 1}
+
+
+def test_single_query_path_and_device_tier(rig, base):
+    """engine.query() routes through the delta-aware pipeline while dirty,
+    and the device tier packs live points only."""
+    eng, tracked, pool = rig
+    pts, kws = _chunk(pool, 0, 20)
+    eng.insert(pts, kws)
+    tracked.insert(pts, kws)
+    eng.delete([0, 261])
+    tracked.delete([0, 261])
+    q = random_queries(base, 2, 1, seed=12)[0]
+    single = eng.query(q, k=2, tier="exact")
+    batch = eng.query_batch([q], k=2, tier="exact", backend="numpy")[0]
+    assert [(c.ids, c.diameter) for c in single.candidates] == \
+           [(c.ids, c.diameter) for c in batch.candidates]
+    res = eng.query(q, k=1, tier="device")
+    assert res.candidates
+    assert all(0 not in c.ids and 261 not in c.ids for c in res.candidates)
+
+
+def test_ingest_validation(rig):
+    eng, _, pool = rig
+    with pytest.raises(ValueError):
+        eng.insert(np.zeros((2, 3), np.float32), [[1], [2]])   # wrong dim
+    with pytest.raises(ValueError):
+        eng.insert(np.zeros((1, 6), np.float32), [[U + 5]])    # unknown kw
+    with pytest.raises(ValueError):
+        eng.insert(np.zeros((2, 6), np.float32), [[1]])        # length mismatch
+    with pytest.raises(KeyError):
+        eng.delete([10_000])                                   # unknown id
+    eng.delete([5])
+    with pytest.raises(KeyError):
+        eng.delete([5])                                        # double delete
+    with pytest.raises(KeyError):
+        eng.delete([6, 6])                                     # in-batch dup
+    assert eng.tombstone_count == 1                            # 6 not applied
+    assert eng.delete([]) == 0
+
+
+def test_delete_everything_does_not_autocompact(base, pinned):
+    """Deleting the last live point must succeed (tombstones apply) without
+    the auto-compaction cadence trying to rebuild an empty index; an
+    explicit compact on the empty corpus still refuses."""
+    small = make_dataset(base.points[:8],
+                         [base.kw.row(i).tolist() for i in range(8)],
+                         n_keywords=U)
+    eng = NKSEngine(small, compact_min=2, compact_ratio=0.1, **pinned)
+    with pytest.raises(ValueError):    # failed insert mutates nothing
+        eng.insert(np.zeros((1, 5), np.float32), [[0]])
+    eng.delete(list(range(8)))
+    assert eng.tombstone_count == 8
+    for tier in ("exact", "approx"):
+        assert eng.query_batch([[0, 1]], k=1, tier=tier,
+                               backend="numpy")[0].candidates == []
+    with pytest.raises(ValueError):
+        eng.compact()
+    ids = eng.insert(base.points[8:10],
+                     [base.kw.row(i).tolist() for i in range(8, 10)])
+    assert ids.tolist() == [8, 9]
+    assert eng.compact() or eng.corpus_generation >= 1
+
+
+def test_serve_launcher_ingest_ops(tmp_path):
+    """The JSONL request stream interleaves queries with ingest ops."""
+    reqs = [
+        {"keywords": [0, 1], "k": 1},
+        {"op": "insert", "points": [[5.0] * 8, [6.0] * 8],
+         "keywords": [[0, 1], [1, 2]]},
+        {"keywords": [0, 1], "k": 1},
+        {"op": "delete", "ids": [0]},
+        {"op": "compact"},
+        {"keywords": [0, 1], "k": 1},
+    ]
+    f = tmp_path / "reqs.jsonl"
+    f.write_text("".join(__import__("json").dumps(r) + "\n" for r in reqs))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--n", "300", "--d", "8",
+         "--u", "30", "--t", "3", "--tier", "approx", "--requests", str(f)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    lines = [__import__("json").loads(line) for line in
+             proc.stdout.strip().splitlines()]
+    assert len(lines) == len(reqs)
+    assert lines[1]["op"] == "insert" and lines[1]["ids"] == [300, 301]
+    assert lines[1]["delta_points"] == 2
+    assert lines[3]["op"] == "delete" and lines[3]["deleted"] == 1
+    assert lines[4]["op"] == "compact" and lines[4]["compacted"] is True
+    assert lines[4]["generation"] == 1 and lines[4]["delta_points"] == 0
+    assert all(line["results"] for line in (lines[0], lines[2], lines[5]))
+
+
+@pytest.mark.timeout(600)
+def test_streaming_sharded_suite():
+    """Acceptance: the same interleaving parity on a forced 8-device mesh
+    (subprocess — the device count locks at first jax init)."""
+    script = os.path.join(os.path.dirname(__file__), "streaming_script.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True, timeout=580)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL STREAMING SHARDED OK" in proc.stdout

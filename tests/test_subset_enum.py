@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import subset_search as ss
 from repro.core.backend import DistanceBlock, NumpyBackend, PallasBackend
-from repro.core.types import TopK, make_dataset
+from repro.core.types import TopK
 from repro.data.synthetic import random_queries, synthetic_dataset
 
 
