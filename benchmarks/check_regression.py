@@ -1,23 +1,34 @@
 """CI bench-regression gate: fail the job when fast-tier QPS regresses.
 
-Compares the freshly written ``BENCH_batch.json`` against the committed
-``BENCH_baseline.json`` and exits non-zero when any gated metric dropped by
-more than ``--threshold`` (default 40% — generous, because CI runs on shared
-runners whose absolute throughput wobbles; the gate is meant to catch real
+Compares the freshly written benchmark trajectories against their committed
+baselines and exits non-zero when any gated metric dropped by more than
+``--threshold`` (default 40% — generous, because CI runs on shared runners
+whose absolute throughput wobbles; the gate is meant to catch real
 regressions like the pre-PR-2 41x exact-tier cliff, not scheduler noise):
 
     PYTHONPATH=src python -m benchmarks.check_regression \
-        [--fresh BENCH_batch.json] [--baseline BENCH_baseline.json]
+        [--fresh BENCH_batch.json] [--baseline BENCH_baseline.json] \
+        [--filtered-fresh BENCH_filtered.json] \
+        [--filtered-baseline BENCH_filtered_baseline.json]
 
-Gated metrics: per tier (exact/approx), the batched-pipeline QPS for both
-backends plus the per-query loop rate. The sharded (``--mesh N``) extras are
-deliberately NOT gated: the forced-8-device run's top-level tier metrics
-still measure single-device dispatch math (host-platform devices share one
-CPU), so they remain comparable to the single-device baseline, while the
-``sharded.*`` numbers would not be. A missing fresh file is a *warning*
-(the bench step is non-blocking in CI; the gate must not mask the bench's
-own failure mode) unless ``--require-fresh`` is set; a missing baseline is
-an error — regenerate it with ``bench_batch_engine --fast`` and commit.
+Gated metrics, batch bench: per tier — **both exact and approx** — the
+batched-pipeline QPS for both backends plus the per-query loop rate.
+Filtered bench (ISSUE 5): per tier, the unfiltered reference QPS and the
+geometric-mean QPS over the selectivity sweep (per-point ``qps@<sel>``
+values are recorded but too noisy to gate at fast-profile batch sizes),
+plus a hard failure when the bench recorded
+``d2h_match_at_full_selectivity: false`` — the eligibility fold must never
+add readback traffic, regardless of throughput.
+
+The sharded (``--mesh N``) extras are deliberately NOT gated: the
+forced-8-device run's top-level tier metrics still measure single-device
+dispatch math (host-platform devices share one CPU), so they remain
+comparable to the single-device baseline, while the ``sharded.*`` numbers
+would not be. A missing fresh file is a *warning* (the bench steps are
+non-blocking in CI; the gate must not mask a bench's own failure mode)
+unless ``--require-fresh`` is set; a missing batch baseline is an error —
+regenerate with ``bench_batch_engine --fast`` / ``bench_filtered --fast``
+and commit.
 """
 from __future__ import annotations
 
@@ -27,16 +38,22 @@ import os
 import sys
 
 GATED = ("batch_pallas_qps", "batch_numpy_qps", "loop_qps")
+# Filtered sweep: gate the unfiltered reference and the sweep geomean. The
+# individual ``qps@<sel>`` points are recorded in the trajectory for
+# inspection but not gated — at fast-profile batch sizes they wobble
+# several-x run to run on shared runners, far beyond the 40% threshold's
+# intent.
+GATED_FILTERED = ("unfiltered_qps", "sweep_geomean_qps")
 
 
-def compare(fresh: dict, baseline: dict, threshold: float
-            ) -> tuple[list[tuple], list[tuple]]:
+def compare(fresh: dict, baseline: dict, threshold: float,
+            metrics=GATED) -> tuple[list[tuple], list[tuple]]:
     """Returns (rows, regressions); each row is
     (tier, metric, base, fresh, ratio, regressed)."""
     rows, regressions = [], []
     for tier, base_metrics in baseline.get("tiers", {}).items():
         fresh_metrics = fresh.get("tiers", {}).get(tier, {})
-        for metric in GATED:
+        for metric in metrics:
             if metric not in base_metrics or metric not in fresh_metrics:
                 continue
             b, f = float(base_metrics[metric]), float(fresh_metrics[metric])
@@ -49,49 +66,104 @@ def compare(fresh: dict, baseline: dict, threshold: float
     return rows, regressions
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", default="BENCH_batch.json")
-    ap.add_argument("--baseline", default="BENCH_baseline.json")
-    ap.add_argument("--threshold", type=float, default=0.40,
-                    help="maximum tolerated fractional QPS drop")
-    ap.add_argument("--require-fresh", action="store_true",
-                    help="fail (instead of warn) when the fresh benchmark "
-                         "file is missing")
-    args = ap.parse_args(argv)
-
-    if not os.path.exists(args.baseline):
-        print(f"ERROR: baseline {args.baseline} missing — run "
-              f"`python -m benchmarks.bench_batch_engine --fast` and commit "
-              f"the result as the baseline", file=sys.stderr)
-        return 2
-    if not os.path.exists(args.fresh):
-        msg = (f"fresh benchmark {args.fresh} missing (did the bench step "
-               f"fail?)")
-        if args.require_fresh:
-            print("ERROR: " + msg, file=sys.stderr)
-            return 2
-        print("WARNING: " + msg + " — skipping the regression gate",
-              file=sys.stderr)
-        return 0
-
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    rows, regressions = compare(fresh, baseline, args.threshold)
-    if not rows:
-        print("ERROR: no comparable metrics between fresh and baseline",
-              file=sys.stderr)
-        return 2
-
+def _print_rows(rows: list[tuple]) -> None:
     print(f"{'tier':<8}{'metric':<22}{'baseline':>12}{'fresh':>12}{'ratio':>8}")
     for tier, metric, b, f, ratio, regressed in rows:
         flag = "  << REGRESSION" if regressed else ""
         print(f"{tier:<8}{metric:<22}{b:>12.1f}{f:>12.1f}{ratio:>8.2f}{flag}")
-    if regressions:
-        print(f"\nFAIL: {len(regressions)} metric(s) regressed more than "
-              f"{args.threshold:.0%} vs {args.baseline}", file=sys.stderr)
+
+
+def _load_pair(fresh_path: str, baseline_path: str, require_fresh: bool,
+               baseline_required: bool, regen_hint: str):
+    """Returns (fresh, baseline) dicts, or an int exit code to propagate, or
+    None to skip this comparison."""
+    if not os.path.exists(baseline_path):
+        if baseline_required:
+            print(f"ERROR: baseline {baseline_path} missing — run "
+                  f"`{regen_hint}` and commit the result as the baseline",
+                  file=sys.stderr)
+            return 2
+        print(f"WARNING: baseline {baseline_path} not committed yet — "
+              f"skipping this gate", file=sys.stderr)
+        return None
+    if not os.path.exists(fresh_path):
+        msg = f"fresh benchmark {fresh_path} missing (did the bench step fail?)"
+        if require_fresh:
+            print("ERROR: " + msg, file=sys.stderr)
+            return 2
+        print("WARNING: " + msg + " — skipping this gate", file=sys.stderr)
+        return None
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    return fresh, baseline
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_batch.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--filtered-fresh", default="BENCH_filtered.json")
+    ap.add_argument("--filtered-baseline",
+                    default="BENCH_filtered_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.40,
+                    help="maximum tolerated fractional QPS drop")
+    ap.add_argument("--require-fresh", action="store_true",
+                    help="fail (instead of warn) when a fresh benchmark "
+                         "file is missing")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    compared = 0
+
+    pair = _load_pair(args.fresh, args.baseline, args.require_fresh,
+                      baseline_required=True,
+                      regen_hint="python -m benchmarks.bench_batch_engine --fast")
+    if isinstance(pair, int):
+        return pair
+    if pair is not None:
+        rows, regressions = compare(*pair, args.threshold)
+        if not rows:
+            print("ERROR: no comparable metrics between fresh and baseline",
+                  file=sys.stderr)
+            return 2
+        compared += 1
+        print(f"== batch pipeline ({args.fresh} vs {args.baseline})")
+        _print_rows(rows)
+        failures += len(regressions)
+
+    pair = _load_pair(args.filtered_fresh, args.filtered_baseline,
+                      args.require_fresh, baseline_required=False,
+                      regen_hint="python -m benchmarks.bench_filtered --fast")
+    if isinstance(pair, int):
+        return pair
+    if pair is not None:
+        fresh_f, base_f = pair
+        rows, regressions = compare(fresh_f, base_f, args.threshold,
+                                    metrics=GATED_FILTERED)
+        compared += 1
+        print(f"\n== filtered sweep ({args.filtered_fresh} vs "
+              f"{args.filtered_baseline})")
+        _print_rows(rows)
+        failures += len(regressions)
+        for tier, m in fresh_f.get("tiers", {}).items():
+            if m.get("d2h_match_at_full_selectivity") is False:
+                print(f"FAIL: {tier}: eligibility fold added D2H traffic "
+                      f"(d2h_match_at_full_selectivity=false)",
+                      file=sys.stderr)
+                failures += 1
+
+    if not compared:
+        # Matches the historical missing-fresh semantics: the bench steps
+        # are non-blocking in CI, so an absent trajectory warns rather than
+        # masking the bench's own failure behind a gate error.
+        print("WARNING: nothing compared (all fresh files missing)",
+              file=sys.stderr)
+        return 0
+    if failures:
+        print(f"\nFAIL: {failures} gated metric(s)/contract(s) regressed "
+              f"more than {args.threshold:.0%} vs baseline", file=sys.stderr)
         return 1
     print(f"\nOK: all gated metrics within {args.threshold:.0%} of baseline")
     return 0

@@ -2,12 +2,16 @@
 
 Public API:
     make_dataset, KeywordDataset, Candidate, TopK
+    merge_tenants, TenantNamespace (multi-tenant corpora)
+    Filter, Clause, where (attribute predicates / filtered NKS)
     build_index, PromishIndex
     promish_e.search / promish_a.search / brute_force.search
     plan (batched bucket planning) / backend (distance backends)
     VirtualBRTree (reference baseline)
 """
-from repro.core.types import Candidate, KeywordDataset, TopK, make_dataset  # noqa: F401
+from repro.core.types import (Candidate, KeywordDataset, TenantNamespace,  # noqa: F401
+                              TopK, make_dataset, merge_tenants)
+from repro.core.filters import Clause, Filter, where  # noqa: F401
 from repro.core.index import HIStructure, PromishIndex, build_index  # noqa: F401
 from repro.core import backend, plan, promish_e, promish_a, brute_force, theory  # noqa: F401
 from repro.core.baseline_tree import VirtualBRTree  # noqa: F401

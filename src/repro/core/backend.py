@@ -43,7 +43,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.subset_search import pairwise_l2_numpy
+from repro.core.subset_search import pack_join_mask, pairwise_l2_numpy
 
 _EPS32 = float(np.finfo(np.float32).eps)
 _F32_MAX = float(np.finfo(np.float32).max)
@@ -64,6 +64,13 @@ class BackendStats:
     cache_misses: int = 0
     cache_evictions: int = 0
     generation_purges: int = 0  # cache invalidations on corpus-generation bump
+    # Transfer accounting (device backends): host->device bytes shipped
+    # (tiles + lengths + radii + packed eligibility words) and device->host
+    # bytes read back (packed masks + join counts). The filtered-NKS
+    # contract — eligibility folds into the existing packed mask, adding no
+    # new D2H — is asserted on these counters.
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
     # Sharded-dispatch accounting (populated when a DevicePlane routes the
     # dispatch over the mesh; lists are indexed by shard/device position on
     # the plane's data axis and sized lazily on first device dispatch).
@@ -99,6 +106,11 @@ class DistanceBlock:
     join_count : #{pairs joining at the pruning radius}, diagonal included —
                  ``join_count <= n`` proves the inner join empty, letting the
                  enumeration stage skip the subset (adaptive radii).
+    n_eligible : number of subset points satisfying the query's predicate
+                 mask, or None on an unfiltered call. When set, ``mask`` and
+                 ``join_count`` cover eligible pairs only (the eligibility
+                 fold), so the empty-join test becomes
+                 ``join_count <= n_eligible``.
     """
 
     n: int
@@ -107,6 +119,7 @@ class DistanceBlock:
     join_count: int
     dist: np.ndarray | None = None
     mask: np.ndarray | None = None
+    n_eligible: int | None = None
 
 
 class DistanceBackend(abc.ABC):
@@ -126,7 +139,8 @@ class DistanceBackend(abc.ABC):
                          id_lists: Sequence[np.ndarray],
                          radii: Sequence[float],
                          keys: Sequence[bytes] | None = None,
-                         generation: int | None = None
+                         generation: int | None = None,
+                         eligible: np.ndarray | None = None
                          ) -> list[DistanceBlock]:
         """Self-join blocks for a batch of subsets at per-subset radii.
 
@@ -137,7 +151,13 @@ class DistanceBackend(abc.ABC):
         token: calls under the same token may share cache entries even if
         the ``points`` array object changed (streaming absorbs are
         append-only, so existing rows are immutable within a generation);
-        a token change invalidates everything (compaction remapped ids)."""
+        a token change invalidates everything (compaction remapped ids).
+
+        ``eligible`` is a filtered query's (N,) bool point mask: the emitted
+        blocks scope their mask/counts to eligible pairs (``n_eligible``
+        set), while subsets, cache keys, and packed tiles stay
+        filter-independent — the same dispatch under a different filter
+        reuses every cache entry and ships only fresh eligibility words."""
 
 
 class NumpyBackend(DistanceBackend):
@@ -153,19 +173,31 @@ class NumpyBackend(DistanceBackend):
                          id_lists: Sequence[np.ndarray],
                          radii: Sequence[float],
                          keys: Sequence[bytes] | None = None,
-                         generation: int | None = None
+                         generation: int | None = None,
+                         eligible: np.ndarray | None = None
                          ) -> list[DistanceBlock]:
         t0 = time.perf_counter()
         out = []
         for ids, r in zip(id_lists, radii):
             pts = points[ids]
             dist = self.pairwise(pts, pts)
-            count = int((dist <= r).sum()) if np.isfinite(r) else dist.size
+            n_elig = None
+            if eligible is None:
+                count = int((dist <= r).sum()) if np.isfinite(r) else dist.size
+            else:
+                # Mirror the device fold: counts cover eligible pairs only,
+                # so the empty-join signal fires at the filtered selectivity.
+                el = eligible[ids]
+                n_elig = int(el.sum())
+                pair_ok = el[:, None] & el[None, :]
+                count = int(((dist <= r) & pair_ok).sum()) \
+                    if np.isfinite(r) else int(pair_ok.sum())
             self.stats.subsets += 1
             self.stats.points_packed += len(pts)
             self.stats.join_pairs += count
             out.append(DistanceBlock(n=len(pts), dist=dist, slack=0.0,
-                                     rescore=False, join_count=count))
+                                     rescore=False, join_count=count,
+                                     n_eligible=n_elig))
         self.stats.t_dispatch_s += time.perf_counter() - t0
         return out
 
@@ -315,7 +347,8 @@ class PallasBackend(DistanceBackend):
                          id_lists: Sequence[np.ndarray],
                          radii: Sequence[float],
                          keys: Sequence[bytes] | None = None,
-                         generation: int | None = None
+                         generation: int | None = None,
+                         eligible: np.ndarray | None = None
                          ) -> list[DistanceBlock]:
         if not len(id_lists):
             return []
@@ -349,13 +382,17 @@ class PallasBackend(DistanceBackend):
                 # An infinite pruning radius joins every pair by construction
                 # (fresh queues at scale 0): the mask is all-ones, so skip the
                 # device round-trip and synthesize the trivial block. The
-                # enumeration stage prunes with its live r_k instead.
+                # enumeration stage prunes with its live r_k instead. Under a
+                # filter the all-ones adjacency covers eligible pairs only —
+                # same contract as the device fold.
                 n = len(ids)
+                n_elig = None if eligible is None else int(eligible[ids].sum())
+                pairs = n * n if n_elig is None else n_elig * n_elig
                 self.stats.subsets += 1
                 self.stats.points_packed += n
-                self.stats.join_pairs += n * n
+                self.stats.join_pairs += pairs
                 blocks[i] = DistanceBlock(n=n, slack=0.0, rescore=True,
-                                          join_count=n * n)
+                                          join_count=pairs, n_eligible=n_elig)
                 continue
             classes.setdefault(self._class_pad(len(ids)), []).append(i)
         budget = max(1, self.max_block_bytes // 4)
@@ -372,14 +409,16 @@ class PallasBackend(DistanceBackend):
                 chunk = idxs[c0:c0 + max_s]
                 out = self._dispatch(points, [id_lists[i] for i in chunk],
                                      [radii[i] for i in chunk],
-                                     [keys[i] for i in chunk], p_pad)
+                                     [keys[i] for i in chunk], p_pad,
+                                     eligible)
                 for i, b in zip(chunk, out):
                     blocks[i] = b
         return blocks
 
     def _dispatch(self, points: np.ndarray, id_lists: Sequence[np.ndarray],
                   radii: Sequence[float], keys: Sequence[bytes | None],
-                  p_pad: int) -> list[DistanceBlock]:
+                  p_pad: int,
+                  eligible: np.ndarray | None = None) -> list[DistanceBlock]:
         from repro.kernels import ops
         import jax.numpy as jnp
 
@@ -454,21 +493,37 @@ class PallasBackend(DistanceBackend):
             r[:n_subsets] = np.nextafter(r_mask.astype(np.float32),
                                          np.float32(np.inf))
         r[:n_subsets][~np.isfinite(r_mask)] = np.float32(np.inf)
+        # Filtered dispatch: pack each subset's eligibility bits into the
+        # mask word layout. These words are the *only* extra traffic a filter
+        # adds — the tile (cached or not) is filter-independent, and the
+        # readback stays the same packed mask.
+        elig_words = el_counts = None
+        if eligible is not None:
+            el = np.zeros((s_pad, p_pad), dtype=bool)
+            for i, ids in enumerate(id_lists):
+                el[i, : len(ids)] = eligible[ids]
+            el_counts = el.sum(axis=1).astype(np.int64)
+            elig_words = pack_join_mask(el)        # (s_pad, ceil(p_pad/32))
         self.stats.t_pack_s += time.perf_counter() - t0
+        self.stats.h2d_bytes += r.nbytes + \
+            (elig_words.nbytes if elig_words is not None else 0) + \
+            (0 if cached_tile is not None
+             else x.nbytes + lens_pad.nbytes)
 
         t1 = time.perf_counter()
         if sharded:
             mask, cnt = plane.join_batched_masked(
-                x_dev, lens_dev, r, bm=self.bm, bn=self.bn,
+                x_dev, lens_dev, r, elig_words, bm=self.bm, bn=self.bn,
                 interpret=self.interpret)
         else:
             mask, cnt = ops.pairwise_l2_join_batched_masked(
-                x_dev, lens_dev, r, bm=self.bm, bn=self.bn,
+                x_dev, lens_dev, r, elig_words, bm=self.bm, bn=self.bn,
                 interpret=self.interpret)
         mask = np.asarray(mask)
         counts = np.asarray(cnt)
         dt = time.perf_counter() - t1
         self.stats.t_dispatch_s += dt
+        self.stats.d2h_bytes += mask.nbytes + counts.nbytes
 
         self.stats.dispatches += 1
         self.stats.subsets += n_subsets
@@ -502,7 +557,8 @@ class PallasBackend(DistanceBackend):
             words = (n + 31) // 32
             out.append(DistanceBlock(
                 n=n, mask=mask[i, :n, :words], slack=float(slacks[i]),
-                rescore=True, join_count=int(counts[i])))
+                rescore=True, join_count=int(counts[i]),
+                n_eligible=None if el_counts is None else int(el_counts[i])))
         return out
 
 

@@ -2,6 +2,15 @@
 
 Ground truth for correctness tests and for the paper's quality metrics
 (AAR denominators, Table II's N_n). Exponential in q; use on small data only.
+
+Every entry point takes an optional ``eligible`` (N,) bool mask — the
+filtered-NKS oracle restricts per-keyword groups to eligible points, which is
+*definitionally* the search over the filtered sub-corpus (every candidate is
+a set of eligible points covering Q, minimality judged on keyword sets, which
+filtering does not change). :func:`search_filtered` is the serving-shaped
+wrapper: it evaluates a ``core.filters.Filter`` (predicates + tenant scoping)
+into the mask first, so differential suites can drive the oracle with the
+exact filter object the engine receives.
 """
 from __future__ import annotations
 
@@ -22,10 +31,20 @@ def set_diameter(ids: Sequence[int], dataset: KeywordDataset) -> float:
     return float(pairwise_l2_numpy(pts, pts).max())
 
 
-def enumerate_candidates(dataset: KeywordDataset, query: Sequence[int]):
+def _query_groups(dataset: KeywordDataset, query: Sequence[int],
+                  eligible: np.ndarray | None) -> list[np.ndarray]:
+    """Per-keyword candidate groups, restricted to eligible points."""
+    groups = [dataset.ikp.row(v) for v in query]
+    if eligible is not None:
+        groups = [g[eligible[g]] for g in groups]
+    return groups
+
+
+def enumerate_candidates(dataset: KeywordDataset, query: Sequence[int],
+                         eligible: np.ndarray | None = None):
     """Yield every distinct minimal candidate set (as a sorted id tuple)."""
     query = sorted(set(int(v) for v in query))
-    groups = [dataset.ikp.row(v) for v in query]
+    groups = _query_groups(dataset, query, eligible)
     if any(len(g) == 0 for g in groups):
         return
     seen: set[tuple[int, ...]] = set()
@@ -39,7 +58,8 @@ def enumerate_candidates(dataset: KeywordDataset, query: Sequence[int]):
 
 
 def search(dataset: KeywordDataset, query: Sequence[int], k: int = 1,
-           chunk: int = 250_000, max_tuples: float = 5e7) -> TopK:
+           chunk: int = 250_000, max_tuples: float = 5e7,
+           eligible: np.ndarray | None = None) -> TopK:
     """Exact top-k by full enumeration (vectorised).
 
     Enumerates the full cartesian product of per-keyword groups, computes all
@@ -48,11 +68,13 @@ def search(dataset: KeywordDataset, query: Sequence[int], k: int = 1,
     minimal candidate arises from at least one tuple with equal diameter, so
     the scan is exhaustive.
 
+    ``eligible`` restricts the per-keyword groups before the product — the
+    filtered oracle is the unfiltered oracle over the eligible sub-corpus.
     Refuses instances beyond ``max_tuples`` (the oracle is exponential in q
     by design — use ProMiSH-E as ground truth at scale, as the paper does).
     """
     query = sorted(set(int(v) for v in query))
-    groups = [dataset.ikp.row(v) for v in query]
+    groups = _query_groups(dataset, query, eligible)
     if any(len(g) == 0 for g in groups):
         return TopK(k, init_full=True)
     total_est = 1.0
@@ -85,6 +107,24 @@ def search(dataset: KeywordDataset, query: Sequence[int], k: int = 1,
     return pq
 
 
-def count_candidates(dataset: KeywordDataset, query: Sequence[int]) -> int:
+def search_filtered(dataset: KeywordDataset, query: Sequence[int],
+                    flt, k: int = 1, **kw) -> TopK:
+    """Filtered/tenant-scoped oracle: evaluate a ``core.filters.Filter`` into
+    the eligibility mask, resolve tenant-local keywords through the corpus
+    namespace when the filter is tenant-scoped, and run :func:`search` over
+    the eligible sub-corpus — the differential ground truth for the engine's
+    ``query_batch(..., filter=...)`` path."""
+    from repro.core.filters import Filter
+    flt = Filter.coerce(flt)
+    if flt is None:
+        return search(dataset, query, k=k, **kw)
+    if flt.tenant is not None and dataset.tenants is not None:
+        query = dataset.tenants.resolve(flt.tenant, query)
+    return search(dataset, query, k=k, eligible=flt.evaluate(dataset), **kw)
+
+
+def count_candidates(dataset: KeywordDataset, query: Sequence[int],
+                     eligible: np.ndarray | None = None) -> int:
     """N_n of eq. 4 (measured, not modelled)."""
-    return sum(1 for _ in enumerate_candidates(dataset, query))
+    return sum(1 for _ in enumerate_candidates(dataset, query,
+                                               eligible=eligible))

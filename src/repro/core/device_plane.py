@@ -71,7 +71,8 @@ class PackedGroups:
 
 
 def pack_groups(dataset, query, r_max: int | None = None, *,
-                strict: bool = False, align: int = 128) -> PackedGroups:
+                strict: bool = False, align: int = 128,
+                eligible: np.ndarray | None = None) -> PackedGroups:
     """Host packing of per-keyword relevant groups for the device tiers.
 
     R defaults to the largest group size rounded up to ``align`` (128 = MXU
@@ -80,11 +81,15 @@ def pack_groups(dataset, query, r_max: int | None = None, *,
     points — counted in ``PackedGroups.truncated`` and fatal under
     ``strict=True`` (candidates containing a dropped point are unreachable,
     so a strict caller wants the signal, not a quietly degraded answer).
+    ``eligible`` (a filtered query's (N,) point mask) restricts each group
+    before packing, so the anchor-star tier never ships an ineligible point.
     """
     groups = [dataset.points_with(v) for v in query]
+    if eligible is not None:
+        groups = [g[eligible[g]] for g in groups]
     sizes = [len(g) for g in groups]
     if r_max is None:
-        r_max = max(align, int(np.ceil(max(sizes) / align)) * align)
+        r_max = max(align, int(np.ceil(max(max(sizes), 1) / align)) * align)
     truncated = sum(max(s - r_max, 0) for s in sizes)
     if strict and truncated:
         raise ValueError(
@@ -143,37 +148,46 @@ class DevicePlane:
 
     # ------------------------------------------------------------ sharded join
     def _join_fn(self, bm: int, bn: int, impl: str | None,
-                 interpret: bool | None):
-        key = (bm, bn, impl, interpret)
+                 interpret: bool | None, with_elig: bool):
+        key = (bm, bn, impl, interpret, with_elig)
         fn = self._join_fns.get(key)
         if fn is None:
             from repro.kernels import ops
             ax = self.axis
 
-            def body(x_loc, len_loc, r_loc):
-                return ops.join_batched_masked_local(
-                    x_loc, len_loc, r_loc, bm=bm, bn=bn,
-                    impl=impl, interpret=interpret)
+            if with_elig:
+                def body(x_loc, len_loc, r_loc, e_loc):
+                    return ops.join_batched_masked_local(
+                        x_loc, len_loc, r_loc, e_loc, bm=bm, bn=bn,
+                        impl=impl, interpret=interpret)
+            else:
+                def body(x_loc, len_loc, r_loc):
+                    return ops.join_batched_masked_local(
+                        x_loc, len_loc, r_loc, bm=bm, bn=bn,
+                        impl=impl, interpret=interpret)
 
+            n_in = 4 if with_elig else 3
             sharded = shard_map(body, mesh=self.mesh,
-                                in_specs=(P(ax), P(ax), P(ax)),
+                                in_specs=(P(ax),) * n_in,
                                 out_specs=(P(ax), P(ax)),
                                 check_rep=False)
             fn = jax.jit(sharded,
-                         in_shardings=(self.sharding(P(ax)),
-                                       self.sharding(P(ax)),
-                                       self.sharding(P(ax))))
+                         in_shardings=(self.sharding(P(ax)),) * n_in)
             self._join_fns[key] = fn
         return fn
 
-    def join_batched_masked(self, x, lengths, r, *, bm: int = 128,
+    def join_batched_masked(self, x, lengths, r, elig=None, *, bm: int = 128,
                             bn: int = 128, impl: str | None = None,
                             interpret: bool | None = None):
         """Sharded masked batched self-join: (S, P, d) sharded on S over the
         ``data`` axis, one local join per shard, no cross-shard collectives.
 
         Returns (mask (S, P, ceil(P/32)) uint32, counts (S,) int32) with the
-        same contract as ``ops.pairwise_l2_join_batched_masked``. S must be a
+        same contract as ``ops.pairwise_l2_join_batched_masked`` — including
+        the optional packed per-subset eligibility words ``elig``
+        ((S, ceil(P/32)) uint32), sharded on S like everything else: each
+        shard folds eligibility into its local slab's mask, so filtered
+        dispatches stay bit-exact with the single-device route. S must be a
         multiple of :attr:`n_shards` (callers pad with zero-length subsets,
         which produce all-zero mask rows and zero counts)."""
         s = x.shape[0]
@@ -181,7 +195,10 @@ class DevicePlane:
             raise ValueError(
                 f"sharded join needs S % n_shards == 0, got S={s} over "
                 f"{self.n_shards} shards (pad with zero-length subsets)")
-        return self._join_fn(bm, bn, impl, interpret)(x, lengths, r)
+        fn = self._join_fn(bm, bn, impl, interpret, elig is not None)
+        if elig is None:
+            return fn(x, lengths, r)
+        return fn(x, lengths, r, elig)
 
     def put_sharded(self, *arrays):
         """Commit host arrays to the mesh, sharded on dim 0 over ``data``."""
@@ -244,10 +261,12 @@ class DevicePlane:
         return self._nks_fn(k)(groups, mask, ids)
 
     def pack_groups(self, dataset, query, r_max: int | None = None, *,
-                    strict: bool = False) -> PackedGroups:
+                    strict: bool = False,
+                    eligible: np.ndarray | None = None) -> PackedGroups:
         """:func:`pack_groups` with R rounded up to a shard multiple so the
         result feeds :meth:`nks_topk` directly."""
-        pg = pack_groups(dataset, query, r_max, strict=strict)
+        pg = pack_groups(dataset, query, r_max, strict=strict,
+                         eligible=eligible)
         r_pad = self.shard_pad(pg.groups.shape[1])
         if r_pad != pg.groups.shape[1]:
             extra = r_pad - pg.groups.shape[1]

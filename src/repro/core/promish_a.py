@@ -17,6 +17,8 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import numpy as np
+
 from repro.core import plan
 from repro.core.index import PromishIndex
 from repro.core.promish_e import SearchStats
@@ -26,8 +28,12 @@ from repro.core.types import KeywordDataset, TopK
 
 def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
            k: int = 1, distance_fn: DistanceFn = pairwise_l2_numpy,
-           stats: SearchStats | None = None) -> TopK:
-    """Approximate top-k NKS search."""
+           stats: SearchStats | None = None,
+           eligible: np.ndarray | None = None) -> TopK:
+    """Approximate top-k NKS search. ``eligible`` applies a filtered query's
+    point-eligibility mask: every returned candidate is drawn from eligible
+    points only (the approx tier's feasibility contract), with the same
+    subset-pruning and group-restriction mechanics as ProMiSH-E."""
     if index.exact:
         raise ValueError("ProMiSH-A requires an approximate (disjoint-bin) index")
     query = sorted(set(int(v) for v in query))
@@ -39,17 +45,19 @@ def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
     for s in range(index.n_scales):
         stats.scales_visited += 1
         for task in plan.plan_scale(index, s, [query], bitsets, [0],
-                                    None, stats):
+                                    None, stats, eligible=eligible):
             stats.subsets_searched += 1
             stats.candidates_explored += search_in_subset(
-                task.f_ids, query, dataset, pq, distance_fn=distance_fn)
+                task.f_ids, query, dataset, pq, distance_fn=distance_fn,
+                eligible=eligible)
         if pq.full():
             return pq
 
     # Fallback mirrors ProMiSH-E: guarantees an answer when the hash never
     # co-locates all keywords (rare; more likely for very selective queries).
     stats.fallback = True
-    for task in plan.fallback_tasks(bitsets, [0]):
+    for task in plan.fallback_tasks(bitsets, [0], eligible=eligible):
         stats.candidates_explored += search_in_subset(
-            task.f_ids, query, dataset, pq, distance_fn=distance_fn)
+            task.f_ids, query, dataset, pq, distance_fn=distance_fn,
+            eligible=eligible)
     return pq

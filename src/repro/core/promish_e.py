@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from repro.core import plan
 from repro.core.index import PromishIndex
 from repro.core.subset_search import DistanceFn, pairwise_l2_numpy, search_in_subset
@@ -37,6 +39,7 @@ class SearchStats:
     buckets_selected: int = 0
     subsets_searched: int = 0
     duplicate_subsets: int = 0
+    filtered_subsets: int = 0      # predicate-pruned subsets (filtered NKS)
     candidates_explored: int = 0   # N_p
     scales_visited: int = 0
     fallback: bool = False
@@ -44,8 +47,18 @@ class SearchStats:
 
 def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
            k: int = 1, distance_fn: DistanceFn = pairwise_l2_numpy,
-           stats: SearchStats | None = None) -> TopK:
-    """Exact top-k NKS search. Returns the priority queue PQ."""
+           stats: SearchStats | None = None,
+           eligible: np.ndarray | None = None) -> TopK:
+    """Exact top-k NKS search. Returns the priority queue PQ.
+
+    ``eligible`` is an (N,) bool point-eligibility mask (from
+    ``core.filters.Filter.evaluate``): the search then answers over the
+    filtered sub-corpus exactly — ineligible points are pruned from planning
+    (whole subsets when fully ineligible) and from every keyword group, so
+    they can never enter a candidate, while the Lemma-2 termination bound is
+    unaffected (the filtered corpus is a subset of the indexed one, so every
+    tight candidate still lies in some explored bucket).
+    """
     if not index.exact:
         raise ValueError("ProMiSH-E requires an exact (overlapping-bin) index")
     query = sorted(set(int(v) for v in query))
@@ -60,17 +73,19 @@ def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
     for s in range(index.n_scales):
         stats.scales_visited += 1
         for task in plan.plan_scale(index, s, [query], bitsets, [0],
-                                    explored, stats):
+                                    explored, stats, eligible=eligible):
             stats.subsets_searched += 1
             stats.candidates_explored += search_in_subset(
-                task.f_ids, query, dataset, pq, distance_fn=distance_fn)
+                task.f_ids, query, dataset, pq, distance_fn=distance_fn,
+                eligible=eligible)
         # Termination (steps 29-31): r_k <= w0 * 2^(s-1)
         if pq.kth_diameter() <= index.w0 * (2.0 ** (s - 1)):
             return pq
 
     # Fallback: search all relevant points (steps 33-39).
     stats.fallback = True
-    for task in plan.fallback_tasks(bitsets, [0]):
+    for task in plan.fallback_tasks(bitsets, [0], eligible=eligible):
         stats.candidates_explored += search_in_subset(
-            task.f_ids, query, dataset, pq, distance_fn=distance_fn)
+            task.f_ids, query, dataset, pq, distance_fn=distance_fn,
+            eligible=eligible)
     return pq

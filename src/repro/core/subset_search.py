@@ -82,12 +82,24 @@ def group_by_keyword(f_ids: np.ndarray, query: Sequence[int],
 
 
 def local_groups(f_ids: np.ndarray, query: Sequence[int],
-                 dataset: KeywordDataset) -> list[np.ndarray] | None:
+                 dataset: KeywordDataset,
+                 eligible: np.ndarray | None = None) -> list[np.ndarray] | None:
     """Keyword groups as *row indices into f_ids* (Alg. 3 steps 2-5), or None
     when some query keyword has no representative in the subset (no candidate
     can exist — Alg. 3 bails before any distance work). Row indices come from
-    ``np.searchsorted`` over the already-sorted ``f_ids``."""
+    ``np.searchsorted`` over the already-sorted ``f_ids``.
+
+    ``eligible`` (the (N,) predicate mask of a filtered query) restricts each
+    group to eligible points. Enumeration only ever indexes adjacency rows
+    through the groups, so this single restriction is what makes the whole
+    Alg. 3/4 stage "respect the mask": ineligible points can sit in the
+    subset (keeping pack/cache keys filter-independent) yet never enter a
+    candidate. A group emptied by the filter bails exactly like a missing
+    keyword — no eligible candidate can exist in this subset.
+    """
     groups = group_by_keyword(f_ids, query, dataset)
+    if eligible is not None:
+        groups = [g[eligible[g]] for g in groups]
     if any(len(g) == 0 for g in groups):
         return None
     return [np.searchsorted(f_ids, g) for g in groups]
@@ -385,9 +397,13 @@ def enumerate_with_block(f_ids: np.ndarray, gl: list[np.ndarray],
         return _offer_singletons(gl[0], f_ids, query, dataset, pq,
                                   gate=False)
 
-    if block.join_count <= block.n:
+    n_live = block.n if getattr(block, "n_eligible", None) is None \
+        else block.n_eligible
+    if block.join_count <= n_live:
         # Only diagonal (self) pairs join: the multi-way join can only emit
         # single repeated points, i.e. points present in every keyword group.
+        # With an eligibility mask folded into the block, counts cover only
+        # eligible pairs, so the diagonal bound is the *eligible* point count.
         common = gl[0]
         for g in gl[1:]:
             common = common[_sorted_member(common, g)]
@@ -419,13 +435,16 @@ def enumerate_with_block(f_ids: np.ndarray, gl: list[np.ndarray],
 
 def search_in_subset(f_ids: np.ndarray, query: Sequence[int],
                      dataset: KeywordDataset, pq: TopK,
-                     distance_fn: DistanceFn = pairwise_l2_numpy) -> int:
+                     distance_fn: DistanceFn = pairwise_l2_numpy,
+                     eligible: np.ndarray | None = None) -> int:
     """Algorithms 3+4, both stages fused (the per-query path). Mutates ``pq``;
-    returns the number of candidate tuples fully materialised."""
+    returns the number of candidate tuples fully materialised. ``eligible``
+    applies a filtered query's point-eligibility mask (see
+    :func:`local_groups`)."""
     f_ids = np.unique(np.asarray(f_ids, dtype=np.int64))
     if len(f_ids) == 0:
         return 0
-    gl = local_groups(f_ids, query, dataset)
+    gl = local_groups(f_ids, query, dataset, eligible=eligible)
     if gl is None:
         return 0
     pts = dataset.points[f_ids]

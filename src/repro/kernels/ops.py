@@ -91,41 +91,80 @@ def _xla_join_batched_masked(x, lengths, r, with_sq):
     return mask, cnt
 
 
-def join_batched_masked_local(x, lengths, r, *, bm: int = 128, bn: int = 128,
-                              with_sq: bool = False, impl: str | None = None,
+def _fold_eligibility(mask, cnt, elig):
+    """AND a packed per-subset eligibility vector into the packed join mask.
+
+    ``elig`` is (S, ceil(P/32)) uint32 — bit ``j % 32`` of word ``j // 32``
+    set iff point j of the subset satisfies the query's predicate (same
+    LSB-first layout as the mask words). Folding is two elementwise passes on
+    the packed words (columns: one AND against the broadcast eligibility
+    row; rows: zero every ineligible row, the row bit gathered back out of
+    the packed words), so the output *is* the existing (S, P, ceil(P/32))
+    layout — eligibility adds H2D words but no new device->host transfer,
+    and join counts become eligible-pair counts (popcount of the folded
+    mask), which is what drives the empty-join host-enumeration skip at low
+    selectivity."""
+    s, p, _ = mask.shape
+    col = jnp.arange(p)
+    row_bit = (elig[:, col // 32] >> (col % 32).astype(jnp.uint32)) & jnp.uint32(1)
+    folded = jnp.where((row_bit > 0)[:, :, None],
+                       mask & elig[:, None, :], jnp.uint32(0))
+    cnt = jnp.sum(jax.lax.population_count(folded), axis=(1, 2)) \
+        .astype(jnp.int32)
+    return folded, cnt
+
+
+def join_batched_masked_local(x, lengths, r, elig=None, *, bm: int = 128,
+                              bn: int = 128, with_sq: bool = False,
+                              impl: str | None = None,
                               interpret: bool | None = None):
     """Un-jit'd masked batched self-join, safe to call under an outer trace.
 
     Same contract as :func:`pairwise_l2_join_batched_masked` but composable:
     ``core.device_plane`` calls this inside a ``shard_map`` body so each mesh
     shard runs the join on its local (S/n, P, d) slab. ``impl`` routing is
-    resolved at trace time (Mosaic on TPU, the XLA lowering elsewhere)."""
+    resolved at trace time (Mosaic on TPU, the XLA lowering elsewhere).
+    ``elig`` (packed (S, ceil(P/32)) uint32 eligibility words) ANDs a
+    filtered query's point-eligibility into the mask and counts — a fused
+    epilogue on the packed words, identical math on either lowering."""
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl not in ("pallas", "xla"):
         raise ValueError(f"unknown impl: {impl!r}")
     interpret = _default_interpret() if interpret is None else interpret
     if impl == "xla":
-        return _xla_join_batched_masked(x, lengths, r, with_sq)
-    out = _pairwise.pairwise_l2_join_batched_masked(
-        x, lengths, r, bm=bm, bn=bn, with_sq=with_sq, interpret=interpret)
+        out = _xla_join_batched_masked(x, lengths, r, with_sq)
+        if with_sq:
+            mask, cnt, sq = out
+        else:
+            mask, cnt = out
+    else:
+        out = _pairwise.pairwise_l2_join_batched_masked(
+            x, lengths, r, bm=bm, bn=bn, with_sq=with_sq, interpret=interpret)
+        if with_sq:
+            mask, cnt, sq = out
+        else:
+            mask, cnt = out
+        cnt = cnt.sum(axis=(1, 2))
+    if elig is not None:
+        mask, cnt = _fold_eligibility(mask, cnt, jnp.asarray(elig, jnp.uint32))
     if with_sq:
-        mask, cnt, sq = out
-        return mask, cnt.sum(axis=(1, 2)), sq
-    mask, cnt = out
-    return mask, cnt.sum(axis=(1, 2))
+        return mask, cnt, sq
+    return mask, cnt
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "with_sq", "impl",
                                              "interpret"))
-def _join_batched_masked(x, lengths, r, *, bm, bn, with_sq, impl, interpret):
-    return join_batched_masked_local(x, lengths, r, bm=bm, bn=bn,
+def _join_batched_masked(x, lengths, r, elig, *, bm, bn, with_sq, impl,
+                         interpret):
+    return join_batched_masked_local(x, lengths, r, elig, bm=bm, bn=bn,
                                      with_sq=with_sq, impl=impl,
                                      interpret=interpret)
 
 
 def pairwise_l2_join_batched_masked(x: jax.Array, lengths: jax.Array,
-                                    r: jax.Array | float = float("inf"), *,
+                                    r: jax.Array | float = float("inf"),
+                                    elig: jax.Array | None = None, *,
                                     bm: int = 128, bn: int = 128,
                                     with_sq: bool = False,
                                     impl: str | None = None,
@@ -137,6 +176,12 @@ def pairwise_l2_join_batched_masked(x: jax.Array, lengths: jax.Array,
     join at its radius), counts (S,) int32 per-subset join cardinalities
     (diagonal included), and the dense fp32 block only when ``with_sq``.
 
+    ``elig`` ((S, ceil(P/32)) uint32, same LSB-first packing as the mask)
+    scopes the join to a filtered query's eligible points: ineligible rows
+    and columns are zeroed in the output mask and counts become
+    eligible-pair counts — fused into the same program, so the D2H readback
+    is byte-identical to the unfiltered dispatch.
+
     ``impl`` selects the lowering: "pallas" (the Mosaic kernel; interpreted
     off-TPU), "xla" (the reference formulation compiled by XLA), or None to
     pick "pallas" on TPU and "xla" elsewhere. Both lowerings share the mask
@@ -147,8 +192,9 @@ def pairwise_l2_join_batched_masked(x: jax.Array, lengths: jax.Array,
     if impl not in ("pallas", "xla"):
         raise ValueError(f"unknown impl: {impl!r}")
     interpret = _default_interpret() if interpret is None else interpret
-    return _join_batched_masked(x, lengths, r, bm=bm, bn=bn, with_sq=with_sq,
-                                impl=impl, interpret=interpret)
+    return _join_batched_masked(x, lengths, r, elig, bm=bm, bn=bn,
+                                with_sq=with_sq, impl=impl,
+                                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "c", "bn", "interpret"))

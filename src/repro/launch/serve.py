@@ -10,9 +10,20 @@ the streaming consistency model (README "Streaming ingest") applies: each
 response reflects every earlier op in the stream, never a partial batch.
 
     {"keywords": [3, 7], "k": 2}                          # query (default op)
-    {"op": "insert", "points": [[...]], "keywords": [[...]]}
+    {"keywords": [3, 7], "filter": {"where": [["price", "<", 50]]}}
+    {"keywords": [0, 2], "filter": {"tenant": "acme"}}    # tenant-local kws
+    {"op": "insert", "points": [[...]], "keywords": [[...]],
+     "attrs": {"price": [...]}, "tenant": "acme"}
     {"op": "delete", "ids": [12, 904]}
     {"op": "compact"}
+
+``filter`` applies attribute predicates (grammar: ``[attr, op, value]``
+clauses, op in ``< <= > >= == != in between``, conjunction) and tenant
+scoping — on a namespaced corpus (``--tenants``) a tenant-scoped query
+speaks tenant-local keyword ids. ``--attrs`` attaches synthetic
+price/category columns to the demo corpus so filtered requests work out of
+the box; inserts must then carry matching ``attrs`` (and ``tenant`` on a
+multi-tenant corpus).
 
 Insert responses carry the assigned stable external ids; every ingest
 response reports the engine's generation/delta/tombstone state. Compaction
@@ -45,17 +56,38 @@ def handle_request(engine: NKSEngine, req: dict, *, tier: str, k: int) -> dict:
     """Execute one JSONL op against the engine; returns the JSON response."""
     op = req.get("op", "query")
     if op == "query":
-        res = engine.query(req["keywords"], k=req.get("k", k), tier=tier)
-        return {
+        res = engine.query(req["keywords"], k=req.get("k", k), tier=tier,
+                           filter=req.get("filter"))
+        out = {
             "op": "query",
             "keywords": list(map(int, req["keywords"])),
             "latency_ms": round(res.latency_s * 1e3, 2),
             "results": [{"ids": list(c.ids), "diameter": round(c.diameter, 4)}
                         for c in res.candidates],
         }
+        if req.get("filter"):
+            out["filter"] = req["filter"]
+        return out
     if op == "insert":
         pts = np.asarray(req["points"], dtype=np.float32)
-        ids = engine.insert(pts, req["keywords"])
+        attrs = {name: np.asarray(col)
+                 for name, col in (req.get("attrs") or {}).items()} or None
+        tenant = req.get("tenant")
+        keywords = req["keywords"]
+        ns = getattr(engine.dataset, "tenants", None)
+        if tenant is not None and ns is not None:
+            # Same convention as tenant-scoped queries: clients speak
+            # tenant-LOCAL keyword ids; resolve them into the tenant's global
+            # dictionary slots here, so an inserted point is reachable by the
+            # very queries its tenant will issue (and can never land in
+            # another tenant's namespace). Per-point tenant lists resolve
+            # per row.
+            if isinstance(tenant, (list, tuple)):
+                keywords = [ns.resolve(t, ks)
+                            for t, ks in zip(tenant, keywords)]
+            else:
+                keywords = [ns.resolve(tenant, ks) for ks in keywords]
+        ids = engine.insert(pts, keywords, attrs=attrs, tenant=tenant)
         return {"op": "insert", "ids": [int(i) for i in ids],
                 **_ingest_state(engine)}
     if op == "delete":
@@ -86,12 +118,27 @@ def main():
                          "fraction of the bulk corpus")
     ap.add_argument("--compact-min", type=int, default=4096,
                     help="minimum churn before auto-compaction triggers")
+    ap.add_argument("--attrs", action="store_true",
+                    help="attach synthetic price/category attribute columns "
+                         "(enables filtered requests)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="build a multi-tenant corpus with this many tenants "
+                         "(t0, t1, ...), each with a private keyword "
+                         "namespace of size --u; implies --attrs")
     args = ap.parse_args()
 
-    if args.corpus == "flickr":
+    if args.tenants:
+        from repro.data.synthetic import synthetic_tenants
+        per = max(args.n // args.tenants, 1)
+        ds = synthetic_tenants({f"t{i}": per for i in range(args.tenants)},
+                               d=args.d, u=args.u, t=args.t, seed=0)
+    elif args.corpus == "flickr":
         ds = flickr_like_dataset(n=args.n, d=args.d, u=args.u, t=args.t, seed=0)
     else:
         ds = synthetic_dataset(n=args.n, d=args.d, u=args.u, t=args.t, seed=0)
+    if args.attrs and not args.tenants:
+        from repro.data.synthetic import attach_attrs
+        ds = attach_attrs(ds, seed=0)
     engine = NKSEngine(ds, build_exact=(args.tier == "exact"),
                        build_approx=(args.tier != "exact"),
                        compact_ratio=args.compact_ratio,

@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core import plan, promish_a, promish_e
 from repro.core.backend import DistanceBackend, get_backend
+from repro.core.filters import Filter
 from repro.core.index import IndexDelta, PromishIndex, absorb_into, build_index
 from repro.core.subset_search import enumerate_with_block, local_groups
 from repro.core.types import (Candidate, KeywordDataset, StreamingCorpus,
@@ -90,6 +91,7 @@ class ScaleStats:
     active_queries: int = 0
     buckets_selected: int = 0
     duplicate_subsets: int = 0
+    filtered_subsets: int = 0    # predicate-pruned before pack/dispatch
     tasks_planned: int = 0
     tasks_searched: int = 0      # tasks with all keyword groups non-empty
     dispatches: int = 0          # device/loop distance dispatches this scale
@@ -139,6 +141,17 @@ class PipelineStats:
     delta_points: int = 0
     tombstones: int = 0
     compactions: int = 0
+    # Filtered-NKS accounting: eligible_points/selectivity describe the
+    # batch's predicate mask (None on an unfiltered batch); filtered_subsets
+    # counts planned subsets pruned because no member satisfied the
+    # predicate; h2d/d2h_bytes are the backend's transfer deltas for this
+    # batch — the "no new D2H" contract of the eligibility fold is asserted
+    # on d2h_bytes.
+    eligible_points: int | None = None
+    filter_selectivity: float | None = None
+    filtered_subsets: int = 0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
 
     @property
     def dispatches_per_scale(self) -> list[int]:
@@ -186,6 +199,17 @@ class PipelineStats:
             "delta_points": self.delta_points,
             "tombstones": self.tombstones,
             "compactions": self.compactions,
+        }
+
+    @property
+    def filtering(self) -> dict:
+        """JSON-ready filtered-NKS summary for the benchmark trajectory."""
+        return {
+            "eligible_points": self.eligible_points,
+            "selectivity": self.filter_selectivity,
+            "filtered_subsets": self.filtered_subsets,
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes,
         }
 
 
@@ -308,7 +332,9 @@ class NKSEngine:
         self._deltas = deltas
 
     def insert(self, points: np.ndarray,
-               keywords: Sequence[Sequence[int]]) -> np.ndarray:
+               keywords: Sequence[Sequence[int]],
+               attrs: dict | None = None,
+               tenant=None) -> np.ndarray:
         """Absorb a batch of tagged points; returns their external ids.
 
         The batch is visible to every query issued after this call returns
@@ -316,9 +342,19 @@ class NKSEngine:
         no partial-batch state, and a rejected batch changes nothing). Cost
         is O(batch * scales), never O(corpus); the bulk index is untouched
         until compaction folds the delta in.
+
+        ``attrs``/``tenant`` carry the batch's per-point attribute columns
+        and tenant assignment; a corpus built with attributes (or tenants)
+        requires them on every insert, and a corpus without rejects them —
+        the streaming schema is fixed at build time, so filtered queries
+        never see a half-attributed corpus. ``keywords`` are *global*
+        dictionary ids at this layer; a frontend speaking tenant-local ids
+        resolves them through ``dataset.tenants`` first (``launch/serve.py``
+        does this for its JSONL insert op).
         """
         view, deltas = self._streaming_state()
-        ids = view.absorb(points, keywords)   # validates before any mutation
+        # validates schema + keywords before any mutation
+        ids = view.absorb(points, keywords, attrs=attrs, tenant=tenant)
         absorb_into(deltas.values(), view.points[ids])
         self._commit_streaming(view, deltas)
         ext = np.arange(self._next_ext, self._next_ext + len(ids),
@@ -434,14 +470,23 @@ class NKSEngine:
         return cls(make_dataset(points, keywords), **kw)
 
     def _device_topk(self, keywords: Sequence[int], k: int,
-                     stats: PipelineStats | None = None) -> list[Candidate]:
+                     stats: PipelineStats | None = None,
+                     eligible: np.ndarray | None = None) -> list[Candidate]:
         """One anchor-star dispatch through the plane (sharded) or the
-        single-device kernel — the device tier's unit of work."""
+        single-device kernel — the device tier's unit of work. ``eligible``
+        (a filtered query's point mask) restricts the packed groups; a group
+        the filter empties means no feasible candidate, so the dispatch is
+        skipped outright."""
         import jax.numpy as jnp
         from repro.core.distributed import nks_anchor_topk
+        if eligible is not None:
+            if any(not eligible[self.dataset.points_with(v)].any()
+                   for v in keywords):
+                return []
         t0 = time.perf_counter()
         if self.plane is not None:
-            pg = self.plane.pack_groups(self.dataset, list(keywords))
+            pg = self.plane.pack_groups(self.dataset, list(keywords),
+                                        eligible=eligible)
             t1 = time.perf_counter()
             diams, cids = self.plane.nks_topk(jnp.asarray(pg.groups),
                                               jnp.asarray(pg.mask),
@@ -454,7 +499,8 @@ class NKSEngine:
                     stats.shard_dispatches[i] += 1
         else:
             from repro.core.device_plane import pack_groups
-            groups, mask, ids = pack_groups(self.dataset, list(keywords))
+            groups, mask, ids = pack_groups(self.dataset, list(keywords),
+                                            eligible=eligible)
             t1 = time.perf_counter()
             diams, cids = nks_anchor_topk(jnp.asarray(groups),
                                           jnp.asarray(mask),
@@ -473,22 +519,49 @@ class NKSEngine:
             cands.append(Candidate(ids=ids_i, diameter=float(diams[i])))
         return cands
 
+    def _resolve_filter(self, filter) -> "Filter | None":
+        return Filter.coerce(filter)
+
+    def _resolve_namespace(self, queries: Sequence[Sequence[int]],
+                           flt: "Filter | None") -> list[list[int]]:
+        """Per-tenant dictionary resolution, run before planning: a
+        tenant-scoped query on a namespaced corpus speaks *tenant-local*
+        keyword ids, mapped into the tenant's global dictionary slots here
+        (out-of-range local ids raise — the tenant cannot name, let alone
+        reach, another tenant's keywords)."""
+        if flt is None or flt.tenant is None or self.dataset.tenants is None:
+            return [list(q) for q in queries]
+        ns = self.dataset.tenants
+        return [ns.resolve(flt.tenant, q) for q in queries]
+
     def query(self, keywords: Sequence[int], k: int = 1,
-              tier: str = "approx") -> QueryResult:
+              tier: str = "approx", filter=None) -> QueryResult:
         t0 = time.perf_counter()
-        if tier in ("exact", "approx") and self._streaming_dirty():
+        flt = self._resolve_filter(filter)
+        if tier in ("exact", "approx") and (self._streaming_dirty()
+                                            or flt is not None):
             # The per-query searches walk a frozen index; with a live delta
             # the batched pipeline (a batch of one reproduces them exactly,
-            # per the PR-1 parity suite) is the delta-aware path.
+            # per the PR-1 parity suite) is the delta-aware path — and the
+            # filtered path, which evaluates the predicate once and threads
+            # the eligibility mask through every stage.
             res = self.query_batch([keywords], k=k, tier=tier,
-                                   backend="numpy")[0]
+                                   backend="numpy", filter=flt)[0]
             return dataclasses.replace(res, latency_s=time.perf_counter() - t0)
         if tier == "exact":
             pq = promish_e.search(self.dataset, self.index_e, keywords, k=k)
         elif tier == "approx":
             pq = promish_a.search(self.dataset, self.index_a, keywords, k=k)
         elif tier == "device":
-            cands = self._externalize(self._device_topk(keywords, k))
+            eligible = None
+            resolved = list(keywords)
+            if flt is not None:
+                resolved = self._resolve_namespace([keywords], flt)[0]
+                eligible = flt.evaluate(self.dataset)
+                if self._view is not None:
+                    self._view.mask_tombstones(eligible)
+            cands = self._externalize(
+                self._device_topk(resolved, k, eligible=eligible))
             return QueryResult(list(keywords), cands,
                                time.perf_counter() - t0, tier)
         else:
@@ -509,14 +582,20 @@ class NKSEngine:
 
     def _run_tasks(self, tasks: list[plan.SubsetTask], queries: list[list[int]],
                    pqs: list[TopK], backend: DistanceBackend,
-                   stats: PipelineStats) -> tuple[int, int, int]:
+                   stats: PipelineStats,
+                   eligible: np.ndarray | None = None) -> tuple[int, int, int]:
         """Distance stage + enumeration stage for one batch of subset tasks.
 
-        Returns (tasks_searched, dispatches_issued, join_pairs)."""
+        ``eligible`` is the batch's predicate mask: keyword groups restrict
+        to eligible rows (a task whose filtered groups lose a keyword is
+        dropped before any pack), and the backend folds the mask into the
+        device-side join bitmask. Returns (tasks_searched, dispatches_issued,
+        join_pairs)."""
         t0 = time.perf_counter()
         prepared = []
         for t in tasks:
-            gl = local_groups(t.f_ids, queries[t.qidx], self.dataset)
+            gl = local_groups(t.f_ids, queries[t.qidx], self.dataset,
+                              eligible=eligible)
             if gl is not None:
                 prepared.append((t, gl))
         stats.t_plan_s += time.perf_counter() - t0
@@ -528,7 +607,8 @@ class NKSEngine:
             [t.f_ids for t, _ in prepared],
             [pqs[t.qidx].kth_diameter() for t, _ in prepared],
             keys=[t.f_ids.tobytes() for t, _ in prepared],
-            generation=self._corpus_token)
+            generation=self._corpus_token,
+            eligible=eligible)
         t1 = time.perf_counter()
         join_pairs = 0
         for (t, gl), db in zip(prepared, blocks):
@@ -539,7 +619,9 @@ class NKSEngine:
         return len(prepared), backend.stats.dispatches - d0, join_pairs
 
     def _batch_search(self, queries: list[list[int]], k: int, tier: str,
-                      backend: DistanceBackend) -> tuple[list[TopK], PipelineStats]:
+                      backend: DistanceBackend,
+                      flt: "Filter | None" = None
+                      ) -> tuple[list[TopK], PipelineStats]:
         exact = tier == "exact"
         index = self.index_e if exact else self.index_a
         if index is None:
@@ -560,6 +642,19 @@ class NKSEngine:
         if self._streaming_dirty():
             delta = self._deltas["e" if exact else "a"]
         t0 = time.perf_counter()
+        # Filtered batch: evaluate the predicate/tenant mask ONCE here; every
+        # downstream stage (plan pruning, group restriction, device fold)
+        # consumes this same array. Tombstoned points are cleared from the
+        # mask too, so eligibility always implies liveness.
+        eligible = None
+        if flt is not None:
+            eligible = flt.evaluate(self.dataset)
+            if self._view is not None:
+                self._view.mask_tombstones(eligible)
+            stats.eligible_points = int(eligible.sum())
+            live = self.dataset.n - self.tombstone_count
+            stats.filter_selectivity = round(
+                stats.eligible_points / live, 6) if live else 0.0
         bitsets = [plan.query_bitset(self.dataset, q) for q in queries]
         if delta is not None:
             for bs in bitsets:
@@ -575,13 +670,16 @@ class NKSEngine:
             pstats = plan.PlanStats()
             t0 = time.perf_counter()
             tasks = plan.plan_scale(index, s, queries, bitsets, active,
-                                    explored, pstats, delta=delta)
+                                    explored, pstats, delta=delta,
+                                    eligible=eligible)
             stats.t_plan_s += time.perf_counter() - t0
             sstats.buckets_selected = pstats.buckets_selected
             sstats.duplicate_subsets = pstats.duplicate_subsets
+            sstats.filtered_subsets = pstats.filtered_subsets
+            stats.filtered_subsets += pstats.filtered_subsets
             sstats.tasks_planned = len(tasks)
             searched, dispatches, pairs = self._run_tasks(
-                tasks, queries, pqs, backend, stats)
+                tasks, queries, pqs, backend, stats, eligible=eligible)
             sstats.tasks_searched = searched
             sstats.dispatches = dispatches
             sstats.join_pairs = pairs
@@ -602,13 +700,15 @@ class NKSEngine:
 
         if active:
             stats.fallback_queries = len(active)
-            tasks = plan.fallback_tasks(bitsets, active)
+            tasks = plan.fallback_tasks(bitsets, active, eligible=eligible)
             _, stats.fallback_dispatches, _ = self._run_tasks(
-                tasks, queries, pqs, backend, stats)
+                tasks, queries, pqs, backend, stats, eligible=eligible)
         stats.t_pack_s = backend.stats.t_pack_s - b0.t_pack_s
         stats.t_dispatch_s = backend.stats.t_dispatch_s - b0.t_dispatch_s
         stats.cache_hits = backend.stats.cache_hits - b0.cache_hits
         stats.cache_misses = backend.stats.cache_misses - b0.cache_misses
+        stats.h2d_bytes = backend.stats.h2d_bytes - b0.h2d_bytes
+        stats.d2h_bytes = backend.stats.d2h_bytes - b0.d2h_bytes
         stats.sharded_dispatches = (backend.stats.sharded_dispatches
                                     - b0.sharded_dispatches)
         stats.t_collective_s = backend.stats.t_collective_s - b0.t_collective_s
@@ -623,8 +723,8 @@ class NKSEngine:
 
     def query_batch(self, queries: Sequence[Sequence[int]], k: int = 1,
                     tier: str = "approx",
-                    backend: str | DistanceBackend = "numpy"
-                    ) -> list[QueryResult]:
+                    backend: str | DistanceBackend = "numpy",
+                    filter=None) -> list[QueryResult]:
         """Answer a batch of queries through the staged pipeline.
 
         Bucket selection, Algorithm-2 dedup, and device dispatch are amortised
@@ -639,7 +739,17 @@ class NKSEngine:
         wall time divided by the batch size (attribution inside a fused
         dispatch is meaningless). Pipeline accounting lands in
         ``self.last_batch_stats``.
+
+        ``filter`` (a :class:`~repro.core.filters.Filter` or its JSON dict
+        form) applies attribute predicates and tenant scoping to the whole
+        batch: the mask is evaluated once, planning prunes fully-ineligible
+        subsets, the device folds eligibility into the packed join bitmask
+        (no new D2H), and every candidate is drawn from eligible points only.
+        On a namespaced multi-tenant corpus a tenant-scoped batch speaks
+        tenant-local keyword ids, resolved through the tenant's dictionary
+        before planning.
         """
+        flt = self._resolve_filter(filter)
         if tier == "device":
             t0 = time.perf_counter()
             stats = PipelineStats(
@@ -647,9 +757,20 @@ class NKSEngine:
                 backend="device-plane" if self.plane is not None else "anchor")
             stats.shard_dispatches = [0] * (
                 self.plane.n_shards if self.plane is not None else 1)
+            eligible = None
+            resolved = [list(q) for q in queries]
+            if flt is not None:
+                resolved = self._resolve_namespace(queries, flt)
+                eligible = flt.evaluate(self.dataset)
+                if self._view is not None:
+                    self._view.mask_tombstones(eligible)
+                stats.eligible_points = int(eligible.sum())
             out = []
-            for q in queries:
-                cands = self._externalize(self._device_topk(q, k, stats))
+            for q, rq in zip(queries, resolved):
+                cands = self._externalize(
+                    self._device_topk(rq, k, stats, eligible=eligible))
+                # echo the caller's keywords (tenant-local on a namespaced
+                # corpus), never the resolved global slots
                 out.append(QueryResult(list(q), cands, 0.0, tier))
             per_q = (time.perf_counter() - t0) / max(len(queries), 1)
             out = [dataclasses.replace(r, latency_s=per_q) for r in out]
@@ -659,12 +780,15 @@ class NKSEngine:
         if tier not in ("exact", "approx"):
             raise ValueError(tier)
         t0 = time.perf_counter()
-        qlists = self._validate_queries(queries)
+        qlists = self._validate_queries(self._resolve_namespace(queries, flt))
         pqs, stats = self._batch_search(qlists, k, tier,
-                                        self._resolve_backend(backend))
+                                        self._resolve_backend(backend),
+                                        flt=flt)
         self._record_ingest(stats)
         self.last_batch_stats = stats
         per_q = (time.perf_counter() - t0) / max(len(qlists), 1)
+        # results echo the caller's keyword lists verbatim — resolved global
+        # slots (tenant namespaces) and normalization stay internal
         return [QueryResult(list(q), self._externalize(pq.items), per_q, tier)
                 for q, pq in zip(queries, pqs)]
 

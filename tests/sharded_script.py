@@ -14,7 +14,10 @@ tests/multidev_script.py). Asserts:
   4. the device tier through the plane matches the single-device anchor-star
      kernel (the distributed parity contract, rebuilt on the plane);
   5. pack_groups truncation accounting survives the plane's shard-aligned
-     repacking.
+     repacking;
+  6. filtered queries (attribute predicates, ISSUE 5) are bit-identical
+     across the single-device and sharded routes — the packed eligibility
+     words shard with the tile, and the folded masks come back bit-exact.
 """
 import os
 
@@ -26,7 +29,9 @@ import numpy as np
 from repro.core.backend import PallasBackend
 from repro.core.device_plane import DevicePlane, pack_groups
 from repro.core.distributed import nks_anchor_topk
-from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.core.filters import where
+from repro.data.synthetic import (attach_attrs, random_queries,
+                                  synthetic_dataset)
 from repro.kernels import ops
 from repro.launch.mesh import make_serving_mesh
 from repro.serve.engine import NKSEngine
@@ -147,6 +152,64 @@ def test_device_tier_parity():
     print("device tier parity ok")
 
 
+def test_filtered_sharded_parity():
+    """ISSUE-5 forced-8-device leg: filtered dispatches and filtered engine
+    batches are bit-identical between the sharded and single-device routes."""
+    rng = np.random.default_rng(11)
+    points = rng.standard_normal((600, 10))
+    sizes = [40, 44, 37, 41, 39, 45, 42, 38, 40, 43,    # class 64, sharded
+             9, 11, 10]                                 # class 16, remainder
+    id_lists = [np.sort(rng.choice(600, n, replace=False)).astype(np.int64)
+                for n in sizes]
+    radii = [2.5] * 10 + [3.0, float("inf"), 2.0]
+    keys = [ids.tobytes() for ids in id_lists]
+    eligible = rng.random(600) < 0.5
+
+    single = PallasBackend()
+    shard = PallasBackend(plane=PLANE)
+    b1 = single.self_join_blocks(points, id_lists, radii, keys=keys,
+                                 eligible=eligible)
+    d2h_before = shard.stats.d2h_bytes
+    b8 = shard.self_join_blocks(points, id_lists, radii, keys=keys,
+                                eligible=eligible)
+    for i, (x, y) in enumerate(zip(b1, b8)):
+        assert x.join_count == y.join_count, f"subset {i}"
+        assert x.n_eligible == y.n_eligible == int(eligible[id_lists[i]].sum())
+        if x.mask is None:
+            assert y.mask is None
+        else:
+            np.testing.assert_array_equal(y.mask, x.mask,
+                                          err_msg=f"subset {i}")
+    assert shard.stats.sharded_dispatches >= 1
+    # the sharded filtered dispatch reads back exactly what the unfiltered
+    # one would: the fold rides the packed mask layout
+    plain = PallasBackend(plane=PLANE)
+    plain.self_join_blocks(points, id_lists, radii, keys=keys)
+    assert shard.stats.d2h_bytes - d2h_before == plain.stats.d2h_bytes
+
+    ds = attach_attrs(synthetic_dataset(n=500, d=8, u=20, t=2, seed=3),
+                      seed=9)
+    eng1 = NKSEngine(ds, m=2, n_scales=5, seed=0)
+    eng8 = NKSEngine(ds, m=2, n_scales=5, seed=0, mesh=PLANE.mesh)
+    queries = random_queries(ds, 2, 24, seed=5) + \
+        random_queries(ds, 3, 24, seed=6)
+    for flt in (where(("price", "<", 55.0)),
+                where(("price", "<", 8.0), ("category", "in", [0, 1, 2])),
+                where(("price", "<", -1.0))):        # 0% selectivity
+        for tier in ("exact", "approx"):
+            r1 = eng1.query_batch(queries, k=2, tier=tier, backend="pallas",
+                                  filter=flt)
+            r8 = eng8.query_batch(queries, k=2, tier=tier, backend="pallas",
+                                  filter=flt)
+            for q, a, b in zip(queries, r1, r8):
+                assert [(c.ids, c.diameter) for c in a.candidates] == \
+                       [(c.ids, c.diameter) for c in b.candidates], \
+                       f"tier={tier} query={q} filter={flt}"
+        st = eng8.last_batch_stats
+        assert st.eligible_points is not None
+    print("filtered sharded parity ok (backend + engine, 0-100% selectivity)")
+
+
 def test_pack_groups_on_plane():
     ds = synthetic_dataset(n=300, d=8, u=12, t=2, seed=7)
     query = random_queries(ds, 2, 1, seed=1)[0]
@@ -169,5 +232,6 @@ if __name__ == "__main__":
     test_backend_sharded_parity()
     test_engine_batch_parity()
     test_device_tier_parity()
+    test_filtered_sharded_parity()
     test_pack_groups_on_plane()
     print("ALL SHARDED OK")

@@ -9,7 +9,12 @@ Asserts the acceptance criterion's multi-device half:
   2. the sharded streaming engine matches the single-device streaming engine
      bit-exactly (delta points ride the same size-binned dispatches);
   3. generation-tagged caches behave identically under sharding: absorbs
-     retain the packed-tile LRU, compaction purges it once.
+     retain the packed-tile LRU, compaction purges it once;
+  4. filtered queries (ISSUE 5) hold the same parity at every step: the
+     streaming sharded engine, the streaming single-device engine, and a
+     fresh mesh engine over the equivalent static corpus answer filtered
+     batches bit-identically — delta points carry attributes through
+     absorb/compact.
 """
 import os
 
@@ -19,14 +24,17 @@ import numpy as np
 
 from repro.core.backend import PallasBackend
 from repro.core.device_plane import DevicePlane
+from repro.core.filters import where
 from repro.core.index import build_index
 from repro.core.types import make_dataset
-from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.data.synthetic import (attach_attrs, random_queries,
+                                  synthetic_attrs, synthetic_dataset)
 from repro.launch.mesh import make_serving_mesh
 from repro.serve.engine import NKSEngine
 
 PLANE = DevicePlane(make_serving_mesh(data=8))
 U = 18
+FILTER = where(("price", "<", 55.0))
 
 
 def cands(results):
@@ -34,8 +42,10 @@ def cands(results):
 
 
 def main():
-    base = synthetic_dataset(n=320, d=6, u=U, t=2, seed=7)
+    base = attach_attrs(synthetic_dataset(n=320, d=6, u=U, t=2, seed=7),
+                        seed=2)
     pool = synthetic_dataset(n=120, d=6, u=U, t=2, seed=8)
+    pool_attrs = synthetic_attrs(120, seed=3)
     probe = build_index(base, m=2, n_scales=5, exact=True, seed=0)
     pinned = dict(m=2, n_scales=5, seed=0, w0=probe.w0,
                   n_buckets=probe.structures[0].n_buckets)
@@ -46,6 +56,7 @@ def main():
     eng_one = NKSEngine(base, auto_compact=False, **pinned)
     pts = [base.points[i] for i in range(base.n)]
     kws = [base.kw.row(i).tolist() for i in range(base.n)]
+    attrs = {k: list(base.attrs[k]) for k in base.attrs}
     alive = dict.fromkeys(range(base.n), True)
 
     be_mesh = PallasBackend(interpret=True, plane=PLANE)
@@ -54,30 +65,42 @@ def main():
     def check(tag):
         ids = np.asarray(sorted(i for i, a in alive.items() if a))
         ds = make_dataset(np.stack([pts[i] for i in ids]),
-                          [kws[i] for i in ids], n_keywords=U)
+                          [kws[i] for i in ids], n_keywords=U,
+                          attrs={k: np.asarray([attrs[k][i] for i in ids])
+                                 for k in attrs})
         fresh = NKSEngine(ds, mesh=PLANE, **pinned)
         for tier in ("exact", "approx"):
-            got = eng_mesh.query_batch(queries, k=2, tier=tier, backend=be_mesh)
-            one = eng_one.query_batch(queries, k=2, tier=tier, backend=be_one)
-            want = fresh.query_batch(queries, k=2, tier=tier,
-                                     backend=PallasBackend(interpret=True,
-                                                           plane=PLANE))
-            want_ext = [[(tuple(int(ids[i]) for i in c.ids), c.diameter)
-                         for c in r.candidates] for r in want]
-            assert cands(got) == want_ext, f"{tag}/{tier}: sharded != fresh"
-            assert cands(got) == cands(one), f"{tag}/{tier}: sharded != 1-dev"
-        print(f"  {tag}: parity ok (cumulative sharded dispatches="
-              f"{be_mesh.stats.sharded_dispatches})")
+            for flt in (None, FILTER):
+                got = eng_mesh.query_batch(queries, k=2, tier=tier,
+                                           backend=be_mesh, filter=flt)
+                one = eng_one.query_batch(queries, k=2, tier=tier,
+                                          backend=be_one, filter=flt)
+                want = fresh.query_batch(queries, k=2, tier=tier,
+                                         backend=PallasBackend(interpret=True,
+                                                               plane=PLANE),
+                                         filter=flt)
+                want_ext = [[(tuple(int(ids[i]) for i in c.ids), c.diameter)
+                             for c in r.candidates] for r in want]
+                fl = "filtered" if flt else "plain"
+                assert cands(got) == want_ext, \
+                    f"{tag}/{tier}/{fl}: sharded != fresh"
+                assert cands(got) == cands(one), \
+                    f"{tag}/{tier}/{fl}: sharded != 1-dev"
+        print(f"  {tag}: parity ok incl filtered (cumulative sharded "
+              f"dispatches={be_mesh.stats.sharded_dispatches})")
 
     def ingest(lo, hi):
         chunk = pool.points[lo:hi]
         ck = [pool.kw.row(i).tolist() for i in range(lo, hi)]
-        eng_mesh.insert(chunk, ck)
-        eng_one.insert(chunk, ck)
+        ca = {k: v[lo:hi] for k, v in pool_attrs.items()}
+        eng_mesh.insert(chunk, ck, attrs=ca)
+        eng_one.insert(chunk, ck, attrs=ca)
         for j in range(lo, hi):
             alive[len(pts)] = True
             pts.append(pool.points[j])
             kws.append(pool.kw.row(j).tolist())
+            for k in attrs:
+                attrs[k].append(pool_attrs[k][j])
 
     def delete(doomed):
         eng_mesh.delete(doomed)

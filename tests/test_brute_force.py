@@ -1,0 +1,163 @@
+"""Unit tests for the brute-force NKS oracle itself.
+
+The oracle anchors every parity suite (filtered, streaming, sharded), so it
+must be trusted independently: hand-checkable instances with known answers,
+internal consistency between its three entry points, and — for the filtered
+variant — equivalence with materialising the eligible sub-corpus and running
+the unfiltered oracle there (the definitional ground truth).
+"""
+import numpy as np
+import pytest
+
+from repro.core import brute_force
+from repro.core.filters import Filter, where
+from repro.core.subset_search import is_minimal_candidate, pairwise_l2_numpy
+from repro.core.types import make_dataset, merge_tenants
+from repro.data.synthetic import attach_attrs, random_queries, synthetic_dataset
+
+
+def _hand_dataset():
+    """Five points on a line, two keywords; distances are the id gaps * 10."""
+    pts = np.array([[0.0], [10.0], [20.0], [30.0], [40.0]], np.float32)
+    kws = [[0], [1], [0], [1], [0, 1]]
+    return make_dataset(pts, kws, n_keywords=2)
+
+
+def test_hand_instance_known_answer():
+    ds = _hand_dataset()
+    pq = brute_force.search(ds, [0, 1], k=3)
+    # Point 4 covers both keywords alone: diameter 0 is the unique optimum.
+    assert pq.items[0].ids == (4,) and pq.items[0].diameter == 0.0
+    # Next best: adjacent {0,1}, {1,2}, {2,3}, {3,4}... all at diameter 10,
+    # k=3 keeps two of them (ordered by ids on the tie).
+    assert [c.diameter for c in pq.items] == [0.0, 10.0, 10.0]
+    for c in pq.items[1:]:
+        assert len(c.ids) == 2 and abs(c.ids[0] - c.ids[1]) == 1
+
+
+def test_enumerate_candidates_minimal_and_covering():
+    ds = _hand_dataset()
+    cands = list(brute_force.enumerate_candidates(ds, [0, 1]))
+    assert (4,) in cands
+    for ids in cands:
+        kws = set()
+        for i in ids:
+            kws.update(ds.kw.row(i).tolist())
+        assert {0, 1} <= kws
+        assert is_minimal_candidate(ids, [0, 1], ds)
+    # {0, 4} is NOT minimal (4 alone covers): must not be enumerated.
+    assert (0, 4) not in cands
+    assert brute_force.count_candidates(ds, [0, 1]) == len(cands)
+
+
+def test_search_matches_enumeration_ranking():
+    """search() top-k == sorting the exhaustive enumeration by the paper's
+    (diameter, cardinality) key."""
+    ds = synthetic_dataset(n=40, d=3, u=5, t=2, seed=3)
+    for q in random_queries(ds, 2, 4, seed=1):
+        pq = brute_force.search(ds, q, k=3)
+        ranked = sorted(
+            ((brute_force.set_diameter(ids, ds), len(ids))
+             for ids in brute_force.enumerate_candidates(ds, q)))
+        got = [(c.diameter, len(c.ids)) for c in pq.items]
+        np.testing.assert_allclose([g[0] for g in got],
+                                   [r[0] for r in ranked[:len(got)]], rtol=1e-5)
+        assert [g[1] for g in got] == [r[1] for r in ranked[:len(got)]]
+
+
+def test_empty_keyword_group_yields_empty_topk():
+    ds = _hand_dataset()
+    ds2 = make_dataset(ds.points, [[0], [1], [0], [1], [0, 1]], n_keywords=3)
+    pq = brute_force.search(ds2, [0, 2], k=2)    # keyword 2 tags nothing
+    assert pq.items == []
+    assert list(brute_force.enumerate_candidates(ds2, [0, 2])) == []
+
+
+def test_max_tuples_guard():
+    ds = synthetic_dataset(n=200, d=2, u=2, t=1, seed=0)
+    with pytest.raises(ValueError, match="infeasible"):
+        brute_force.search(ds, [0, 1], k=1, max_tuples=100)
+
+
+# ------------------------------------------------------------ filtered oracle
+def _subcorpus_reference(ds, query, eligible, k):
+    """The definitional filtered answer: materialise the eligible sub-corpus
+    (remapping ids) and run the unfiltered oracle there."""
+    keep = np.flatnonzero(eligible)
+    sub = make_dataset(ds.points[keep],
+                       [ds.kw.row(int(i)).tolist() for i in keep],
+                       n_keywords=ds.n_keywords)
+    pq = brute_force.search(sub, query, k=k)
+    return [(tuple(int(keep[j]) for j in c.ids), c.diameter) for c in pq.items]
+
+
+@pytest.mark.parametrize("sel", [1.0, 0.6, 0.25, 0.05, 0.0])
+def test_filtered_search_equals_subcorpus_oracle(sel):
+    ds = attach_attrs(synthetic_dataset(n=60, d=4, u=8, t=2, seed=11), seed=2)
+    flt = where(("price", "<", 100.0 * sel))
+    eligible = flt.evaluate(ds)
+    assert abs(eligible.mean() - sel) < 0.2
+    for q in random_queries(ds, 2, 4, seed=5):
+        got = brute_force.search(ds, q, k=2, eligible=eligible)
+        want = _subcorpus_reference(ds, q, eligible, k=2)
+        np.testing.assert_allclose([c.diameter for c in got.items],
+                                   [w[1] for w in want], rtol=1e-5)
+        # id sets match too: the sub-corpus remap preserves the tie-break
+        # ordering only up to equal keys, so compare as sets of frozensets
+        # within each diameter class.
+        assert {frozenset(c.ids) for c in got.items} == \
+            {frozenset(w[0]) for w in want}
+        for c in got.items:
+            assert all(eligible[i] for i in c.ids)
+
+
+def test_filtered_enumeration_is_subset_of_unfiltered():
+    ds = attach_attrs(synthetic_dataset(n=40, d=3, u=6, t=2, seed=4), seed=3)
+    eligible = ds.attrs["price"] < 50.0
+    q = random_queries(ds, 2, 1, seed=2)[0]
+    filt = set(brute_force.enumerate_candidates(ds, q, eligible=eligible))
+    for ids in filt:
+        assert all(eligible[i] for i in ids)
+    # Every filtered candidate is minimal+covering, hence also a candidate of
+    # the unfiltered instance.
+    full = set(brute_force.enumerate_candidates(ds, q))
+    assert filt <= full
+
+
+def test_search_filtered_wrapper_tenant_scoping():
+    mt = merge_tenants({
+        "acme": {"points": np.array([[0.0], [10.0]], np.float32),
+                 "keywords": [[0], [1]], "n_keywords": 2},
+        "globex": {"points": np.array([[1.0], [2.0]], np.float32),
+                   "keywords": [[0], [1]], "n_keywords": 2},
+    })
+    # Tenant-local query [0, 1]: acme's pair is 10 apart, globex's 1 apart —
+    # scoping must keep each tenant inside its own namespace and points.
+    got_a = brute_force.search_filtered(mt, [0, 1], Filter(tenant="acme"), k=1)
+    got_g = brute_force.search_filtered(mt, [0, 1], {"tenant": "globex"}, k=1)
+    assert got_a.items[0].ids == (0, 1) and got_a.items[0].diameter == 10.0
+    assert got_g.items[0].ids == (2, 3) and got_g.items[0].diameter == 1.0
+    # no filter -> plain search (coerce passes None through)
+    plain = brute_force.search_filtered(mt, [0, 1], None, k=1)
+    assert plain.items == brute_force.search(mt, [0, 1], k=1).items
+
+
+def test_zero_and_full_selectivity():
+    ds = attach_attrs(synthetic_dataset(n=30, d=3, u=5, t=2, seed=6), seed=1)
+    q = random_queries(ds, 2, 1, seed=0)[0]
+    none_elig = np.zeros(ds.n, dtype=bool)
+    assert brute_force.search(ds, q, k=2, eligible=none_elig).items == []
+    all_elig = np.ones(ds.n, dtype=bool)
+    a = brute_force.search(ds, q, k=2, eligible=all_elig)
+    b = brute_force.search(ds, q, k=2)
+    assert [(c.ids, c.diameter) for c in a.items] == \
+        [(c.ids, c.diameter) for c in b.items]
+
+
+def test_set_diameter_matches_pairwise():
+    ds = synthetic_dataset(n=20, d=4, u=4, t=1, seed=8)
+    ids = [2, 7, 11]
+    d = brute_force.set_diameter(ids, ds)
+    ref = pairwise_l2_numpy(ds.points[ids], ds.points[ids]).max()
+    np.testing.assert_allclose(d, ref, rtol=1e-12)
+    assert brute_force.set_diameter([3], ds) == 0.0

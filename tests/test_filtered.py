@@ -1,0 +1,507 @@
+"""Filtered & multi-tenant NKS: seeded differential suite.
+
+The filtered parity contract (ISSUE 5): for any predicate/tenant filter at
+any selectivity (0–100%), the exact tier matches the brute-force oracle over
+the eligible sub-corpus, the approx tier only ever returns eligible feasible
+candidates, both pallas and numpy backends agree bit-identically with each
+other, the device stays free of new D2H traffic (eligibility rides the
+packed join bitmask), and the whole thing composes with streaming ingest.
+
+These tests are seeded (no hypothesis dependency) so the contract is
+exercised in every environment; ``tests/test_properties.py`` layers the
+randomized hypothesis harness on top in CI.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import brute_force
+from repro.core.backend import NumpyBackend, PallasBackend
+from repro.core.filters import Clause, Filter, where
+from repro.core.subset_search import is_minimal_candidate, unpack_join_mask
+from repro.core.types import make_dataset
+from repro.data.synthetic import (attach_attrs, random_queries,
+                                  synthetic_attrs, synthetic_dataset,
+                                  synthetic_tenants)
+from repro.serve.engine import NKSEngine
+
+SELECTIVITIES = (1.0, 0.5, 0.1, 0.01, 0.0)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return attach_attrs(synthetic_dataset(n=300, d=8, u=12, t=2, seed=7),
+                        seed=1)
+
+
+@pytest.fixture(scope="module")
+def engine(corpus):
+    return NKSEngine(corpus, m=2, n_scales=5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return random_queries(corpus, 2, 6, seed=3) + \
+        random_queries(corpus, 3, 4, seed=4)
+
+
+def assert_same_ranking(got, want, ctx=""):
+    """Engine result == oracle result under the paper's (diameter,
+    cardinality) ranking. Ids are compared only through feasibility: at equal
+    keys the tie-break between distinct-but-equivalent candidate sets is
+    unspecified (the oracle enumerates in id order, the search in discovery
+    order), and the oracle stores float32 diameters (rtol 1e-5, the repo's
+    established oracle tolerance)."""
+    assert len(got) == len(want), f"{ctx}: {got} != {want}"
+    np.testing.assert_allclose([c.diameter for c in got],
+                               [c.diameter for c in want], rtol=1e-5,
+                               err_msg=ctx)
+    assert [len(c.ids) for c in got] == [len(c.ids) for c in want], ctx
+
+
+@pytest.mark.parametrize("sel", SELECTIVITIES)
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_exact_tier_matches_filtered_oracle(engine, corpus, queries, sel,
+                                            backend):
+    flt = where(("price", "<", 100.0 * sel))
+    eligible = flt.evaluate(corpus)
+    res = engine.query_batch(queries, k=2, tier="exact", backend=backend,
+                             filter=flt)
+    for q, r in zip(queries, res):
+        truth = brute_force.search_filtered(corpus, q, flt, k=2)
+        assert_same_ranking(r.candidates, truth.items,
+                            f"sel={sel} backend={backend} q={q}")
+        for c in r.candidates:
+            assert all(eligible[i] for i in c.ids)
+            assert is_minimal_candidate(c.ids, q, corpus)
+    st = engine.last_batch_stats
+    assert st.eligible_points == int(eligible.sum())
+    assert st.filter_selectivity == pytest.approx(eligible.mean(), abs=1e-6)
+    if sel < 1.0:
+        assert st.filtered_subsets > 0
+
+
+@pytest.mark.parametrize("sel", SELECTIVITIES)
+def test_approx_tier_subset_of_feasible(engine, corpus, queries, sel):
+    """approx ⊆ feasible: every candidate is eligible, covers the query, and
+    is minimal — including the empty-result path at 0% selectivity."""
+    flt = where(("price", "<", 100.0 * sel))
+    eligible = flt.evaluate(corpus)
+    for backend in ("numpy", "pallas"):
+        res = engine.query_batch(queries, k=2, tier="approx", backend=backend,
+                                 filter=flt)
+        for q, r in zip(queries, res):
+            if sel == 0.0:
+                assert r.candidates == []
+            for c in r.candidates:
+                assert all(eligible[i] for i in c.ids)
+                covered = set()
+                for i in c.ids:
+                    covered.update(corpus.kw.row(i).tolist())
+                assert set(q) <= covered
+                assert is_minimal_candidate(c.ids, q, corpus)
+
+
+@pytest.mark.parametrize("sel", [0.5, 0.05])
+def test_backends_agree_under_filter(engine, queries, sel):
+    """pallas and numpy agree candidate-for-candidate: same ids, same order,
+    diameters equal to float64 accumulation-order noise (the two paths run
+    the same enumeration over the same filtered groups; the device mask is a
+    rescored superset). Bit-exactness is a *same-backend* contract across
+    routes — asserted by the sharded/streaming scripts."""
+    flt = where(("price", "<", 100.0 * sel))
+    for tier in ("exact", "approx"):
+        a = engine.query_batch(queries, k=2, tier=tier, backend="numpy",
+                               filter=flt)
+        b = engine.query_batch(queries, k=2, tier=tier, backend="pallas",
+                               filter=flt)
+        for q, x, y in zip(queries, a, b):
+            assert [c.ids for c in x.candidates] == \
+                [c.ids for c in y.candidates], (tier, q)
+            np.testing.assert_allclose(
+                [c.diameter for c in x.candidates],
+                [c.diameter for c in y.candidates], rtol=1e-9,
+                err_msg=f"{tier}/{q}")
+
+
+def test_single_query_path_matches_batch(engine, corpus, queries):
+    flt = where(("price", "between", (20.0, 70.0)),
+                ("category", "in", [0, 1, 2, 3, 4]))
+    for tier in ("exact", "approx"):
+        batch = engine.query_batch(queries[:4], k=2, tier=tier, filter=flt)
+        for q, want in zip(queries[:4], batch):
+            got = engine.query(q, k=2, tier=tier, filter=flt)
+            assert [(c.ids, c.diameter) for c in got.candidates] == \
+                [(c.ids, c.diameter) for c in want.candidates]
+
+
+def test_device_tier_respects_filter(engine, corpus, queries):
+    flt = where(("price", "<", 40.0))
+    eligible = flt.evaluate(corpus)
+    res = engine.query_batch(queries[:3], k=2, tier="device", filter=flt)
+    for r in res:
+        for c in r.candidates:
+            assert all(eligible[i] for i in c.ids)
+    assert engine.last_batch_stats.eligible_points == int(eligible.sum())
+    # 0% selectivity: the dispatch is skipped, results empty
+    zero = engine.query_batch(queries[:2], k=1, tier="device",
+                              filter=where(("price", "<", -1.0)))
+    assert all(r.candidates == [] for r in zero)
+
+
+# --------------------------------------------------------------- device fold
+def test_eligibility_fold_no_new_d2h():
+    """The acceptance criterion's transfer contract, at the backend: folding
+    eligibility changes zero D2H bytes (the mask rides the existing packed
+    layout), adds only the packed eligibility words H2D, and the folded mask
+    equals the host-side AND of the unfiltered mask."""
+    rng = np.random.default_rng(0)
+    points = rng.standard_normal((500, 10))
+    sizes = [40, 37, 20, 9, 64]
+    id_lists = [np.sort(rng.choice(500, n, replace=False)).astype(np.int64)
+                for n in sizes]
+    radii = [2.5, 3.0, 2.0, float("inf"), 2.8]
+    keys = [ids.tobytes() for ids in id_lists]
+    eligible = rng.random(500) < 0.4
+
+    be = PallasBackend()
+    plain = be.self_join_blocks(points, id_lists, radii, keys=keys)
+    h2d0, d2h0 = be.stats.h2d_bytes, be.stats.d2h_bytes
+    assert d2h0 > 0
+    filt = be.self_join_blocks(points, id_lists, radii, keys=keys,
+                               eligible=eligible)
+    h2d1 = be.stats.h2d_bytes - h2d0
+    d2h1 = be.stats.d2h_bytes - d2h0
+    assert d2h1 == d2h0, "eligibility fold added D2H traffic"
+    # tiles were cached from the unfiltered call: the filtered repeat ships
+    # only radii + eligibility words
+    assert 0 < h2d1 < h2d0
+    assert be.stats.cache_hits > 0
+
+    for i, (p, f) in enumerate(zip(plain, filt)):
+        el = eligible[id_lists[i]]
+        assert f.n_eligible == int(el.sum())
+        if p.mask is None:               # r=inf device skip on both routes
+            assert f.mask is None
+            assert f.join_count == f.n_eligible ** 2
+            continue
+        adj = unpack_join_mask(p.mask, p.n).astype(bool)
+        ref = adj & el[:, None] & el[None, :]
+        np.testing.assert_array_equal(
+            unpack_join_mask(f.mask, f.n).astype(bool), ref,
+            err_msg=f"subset {i}")
+        assert f.join_count == int(ref.sum())
+
+
+def test_numpy_backend_eligible_counts():
+    rng = np.random.default_rng(1)
+    points = rng.standard_normal((60, 4))
+    ids = np.arange(30, dtype=np.int64)
+    eligible = np.zeros(60, dtype=bool)
+    eligible[::3] = True
+    be = NumpyBackend()
+    (block,) = be.self_join_blocks(points, [ids], [2.0], eligible=eligible)
+    el = eligible[ids]
+    dist = np.sqrt(((points[ids][:, None] - points[ids][None, :]) ** 2
+                    ).sum(-1))
+    want = int(((dist <= 2.0) & el[:, None] & el[None, :]).sum())
+    assert block.join_count == want
+    assert block.n_eligible == int(el.sum())
+
+
+# ----------------------------------------------------------------- streaming
+def _streaming_rig(seed=0):
+    base = attach_attrs(synthetic_dataset(n=260, d=6, u=12, t=2, seed=seed),
+                        seed=seed + 1)
+    pool = synthetic_dataset(n=120, d=6, u=12, t=2, seed=seed + 2)
+    pattrs = synthetic_attrs(120, seed=seed + 3)
+    return base, pool, pattrs
+
+
+def _equivalent_static(base, pool, pattrs, inserted, deleted):
+    pts = np.concatenate([base.points, pool.points[:inserted]])
+    kws = [base.kw.row(i).tolist() for i in range(base.n)] + \
+        [pool.kw.row(i).tolist() for i in range(inserted)]
+    attrs = {k: np.concatenate([base.attrs[k], pattrs[k][:inserted]])
+             for k in base.attrs}
+    live = np.ones(base.n + inserted, dtype=bool)
+    live[list(deleted)] = False
+    keep = np.flatnonzero(live)
+    ds = make_dataset(pts[keep], [kws[int(i)] for i in keep],
+                      n_keywords=base.n_keywords,
+                      attrs={k: v[keep] for k, v in attrs.items()})
+    return ds, keep
+
+
+def test_streaming_filtered_parity_interleaved():
+    """Filtered queries under insert/delete/compact interleavings answer
+    identically (same ids via the external-id map, same diameters) to a
+    fresh engine over the equivalent static corpus."""
+    base, pool, pattrs = _streaming_rig(seed=21)
+    pinned_probe = NKSEngine(base, m=2, n_scales=5, seed=0,
+                             build_approx=False)
+    pinned = dict(m=2, n_scales=5, seed=0, w0=pinned_probe.index_e.w0,
+                  n_buckets=pinned_probe.index_e.structures[0].n_buckets)
+    eng = NKSEngine(base, auto_compact=False, **pinned)
+    queries = random_queries(base, 2, 6, seed=9)
+    flt = where(("price", "<", 55.0))
+    inserted, deleted = 0, set()
+
+    def check(tag):
+        ds, keep = _equivalent_static(base, pool, pattrs, inserted, deleted)
+        fresh = NKSEngine(ds, **pinned)
+        for tier in ("exact", "approx"):
+            got = eng.query_batch(queries, k=2, tier=tier, backend="numpy",
+                                  filter=flt)
+            want = fresh.query_batch(queries, k=2, tier=tier,
+                                     backend="numpy", filter=flt)
+            for q, a, b in zip(queries, got, want):
+                ext = [tuple(int(keep[j]) for j in c.ids) for c in b.candidates]
+                assert [c.ids for c in a.candidates] == ext, (tag, tier, q)
+                np.testing.assert_allclose(
+                    [c.diameter for c in a.candidates],
+                    [c.diameter for c in b.candidates], rtol=1e-9,
+                    err_msg=f"{tag}/{tier}/{q}")
+
+    def ingest(lo, hi):
+        nonlocal inserted
+        eng.insert(pool.points[lo:hi],
+                   [pool.kw.row(i).tolist() for i in range(lo, hi)],
+                   attrs={k: v[lo:hi] for k, v in pattrs.items()})
+        inserted = hi
+
+    check("static")
+    ingest(0, 40)
+    check("insert")
+    eng.delete([3, 17, 270])
+    deleted |= {3, 17, 270}
+    check("delete")
+    assert eng.compact()
+    check("compact")
+    ingest(40, 80)
+    eng.delete([8, 300])
+    deleted |= {8, 300}
+    check("post-compact churn")
+
+
+def test_streaming_attr_schema_validation():
+    base, pool, pattrs = _streaming_rig(seed=5)
+    eng = NKSEngine(base, m=2, n_scales=3, seed=0, build_approx=False,
+                    auto_compact=False)
+    pts = pool.points[:4]
+    kws = [pool.kw.row(i).tolist() for i in range(4)]
+    with pytest.raises(ValueError, match="schema"):
+        eng.insert(pts, kws)                      # missing attrs
+    with pytest.raises(ValueError, match="schema"):
+        eng.insert(pts, kws, attrs={"price": pattrs["price"][:4]})
+    with pytest.raises(ValueError, match="must be"):
+        eng.insert(pts, kws, attrs={"price": pattrs["price"][:3],
+                                    "category": pattrs["category"][:4]})
+    assert eng.delta_points == 0, "rejected batches must not mutate"
+    # tenant on a tenant-less corpus
+    with pytest.raises(ValueError, match="tenant"):
+        eng.insert(pts, kws, attrs={k: v[:4] for k, v in pattrs.items()},
+                   tenant="acme")
+    # attrs survive compaction
+    eng.insert(pts, kws, attrs={k: v[:4] for k, v in pattrs.items()})
+    assert eng.compact()
+    assert eng.dataset.attrs["price"].shape == (base.n + 4,)
+    np.testing.assert_allclose(eng.dataset.attrs["price"][-4:],
+                               pattrs["price"][:4])
+
+
+# -------------------------------------------------------------- multi-tenant
+def test_tenant_scoping_matches_oracle_and_isolates():
+    mt = synthetic_tenants({"acme": 140, "globex": 160}, d=6, u=10, t=2,
+                           seed=5)
+    eng = NKSEngine(mt, m=2, n_scales=5, seed=0)
+    ns = mt.tenants
+    for tname in ("acme", "globex"):
+        tid = ns.id_of(tname)
+        for q in ([0, 3], [1, 2, 4]):
+            flt = Filter(tenant=tname)
+            for tier, backend in (("exact", "numpy"), ("exact", "pallas"),
+                                  ("approx", "numpy")):
+                r = eng.query_batch([q], k=2, tier=tier, backend=backend,
+                                    filter=flt)[0]
+                for c in r.candidates:
+                    assert all(mt.tenant_of[i] == tid for i in c.ids), \
+                        f"tenant isolation violated: {tname} got {c.ids}"
+            r = eng.query_batch([q], k=2, tier="exact", backend="numpy",
+                                filter=flt)[0]
+            truth = brute_force.search_filtered(mt, q, flt, k=2)
+            assert_same_ranking(r.candidates, truth.items,
+                                f"tenant={tname} q={q}")
+
+
+def test_tenant_namespace_resolution_and_validation():
+    mt = synthetic_tenants({"acme": 60, "globex": 60}, d=4, u=6, t=2, seed=2)
+    eng = NKSEngine(mt, m=2, n_scales=3, seed=0, build_approx=False)
+    ns = mt.tenants
+    # local ids resolve into the tenant's global slot range
+    assert ns.resolve("globex", [0, 5]) == [6, 11]
+    with pytest.raises(ValueError, match="outside tenant"):
+        ns.resolve("acme", [6])
+    with pytest.raises(KeyError, match="unknown tenant"):
+        eng.query_batch([[0]], tier="exact", filter=Filter(tenant="nobody"))
+    # a tenant-scoped query cannot escape its dictionary even with ids that
+    # are valid globally
+    with pytest.raises(ValueError, match="outside tenant"):
+        eng.query_batch([[7]], tier="exact", filter=Filter(tenant="acme"))
+    # tenant scoping combines with attribute clauses
+    flt = where(("price", "<", 70.0), tenant="acme")
+    r = eng.query_batch([[0, 1]], k=1, tier="exact", filter=flt)[0]
+    elig = flt.evaluate(mt)
+    for c in r.candidates:
+        assert all(elig[i] for i in c.ids)
+
+
+def test_tenant_streaming_insert_and_query():
+    mt = synthetic_tenants({"acme": 80, "globex": 80}, d=4, u=6, t=2, seed=3)
+    eng = NKSEngine(mt, m=2, n_scales=4, seed=0, auto_compact=False)
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(0, 10_000, (5, 4)).astype(np.float32)
+    kws = [mt.tenants.resolve("acme", [i % 6]) for i in range(5)]
+    attrs = {"price": np.full(5, 1.0), "category": np.zeros(5, np.int64)}
+    eng.insert(pts, kws, attrs=attrs, tenant="acme")
+    r = eng.query_batch([[0]], k=3, tier="exact", backend="numpy",
+                        filter=Filter(tenant="acme"))[0]
+    tid = mt.tenants.id_of("acme")
+    merged_tids = eng.dataset.tenant_ids
+    for c in r.candidates:
+        assert all(merged_tids[i] == tid for i in c.ids)
+    # inserting without a tenant on a multi-tenant corpus is rejected
+    with pytest.raises(ValueError, match="tenant"):
+        eng.insert(pts, kws, attrs=attrs)
+
+
+# ----------------------------------------------------------- filter grammar
+def test_filter_grammar_and_json_roundtrip():
+    flt = where(("price", "<", 50.0), ("category", "in", [2, 1, 2]),
+                ("price", ">=", 5.0), tenant="acme")
+    spec = flt.as_json()
+    back = Filter.from_json(json.loads(json.dumps(spec)))
+    assert back == flt
+    assert Filter.coerce(None) is None
+    assert Filter.coerce(Filter()) is None          # empty filter == None
+    assert Filter.coerce({"where": [["price", "<", 1]]})
+
+    with pytest.raises(ValueError, match="unknown predicate op"):
+        Clause("price", "~", 3)
+    with pytest.raises(ValueError, match="value list"):
+        Clause("price", "in", 3)
+    with pytest.raises(ValueError, match="lo, hi"):
+        Clause("price", "between", [1])
+    with pytest.raises(ValueError, match="unknown filter keys"):
+        Filter.from_json({"tenant": "a", "wher": []})
+
+
+def test_filter_evaluate_errors(corpus):
+    with pytest.raises(KeyError, match="unknown attribute"):
+        where(("nope", "<", 1)).evaluate(corpus)
+    strcorp = make_dataset(
+        np.zeros((4, 2), np.float32), [[0]] * 4, n_keywords=1,
+        attrs={"label": np.array(["a", "b", "a", "c"])})
+    with pytest.raises(ValueError, match="non-numeric"):
+        where(("label", "<", "b")).evaluate(strcorp)
+    # equality / set ops on string columns are fine
+    np.testing.assert_array_equal(
+        where(("label", "==", "a")).evaluate(strcorp), [1, 0, 1, 0])
+    np.testing.assert_array_equal(
+        where(("label", "in", ["b", "c"])).evaluate(strcorp), [0, 1, 0, 1])
+    with pytest.raises(ValueError, match="no tenant column"):
+        Filter(tenant="acme").evaluate(corpus)
+    bare = synthetic_dataset(n=10, d=2, u=3, t=1, seed=0)
+    with pytest.raises(KeyError, match="unknown attribute"):
+        where(("price", "<", 1)).evaluate(bare)
+
+
+def test_filter_evaluate_ops(corpus):
+    price = corpus.attrs["price"]
+    cat = corpus.attrs["category"]
+    cases = [
+        (where(("price", "<", 30.0)), price < 30.0),
+        (where(("price", ">=", 30.0)), price >= 30.0),
+        (where(("category", "==", 3)), cat == 3),
+        (where(("category", "!=", 3)), cat != 3),
+        (where(("category", "in", [1, 4])), np.isin(cat, [1, 4])),
+        (where(("price", "between", (10.0, 20.0))),
+         (price >= 10.0) & (price <= 20.0)),
+        (where(("price", "<", 50.0), ("category", "==", 0)),
+         (price < 50.0) & (cat == 0)),
+    ]
+    for flt, want in cases:
+        np.testing.assert_array_equal(flt.evaluate(corpus), want, err_msg=str(flt))
+
+
+# ------------------------------------------------------------------ serving
+def test_serve_filter_requests(tmp_path):
+    from repro.launch.serve import handle_request
+    ds = attach_attrs(synthetic_dataset(n=120, d=4, u=8, t=2, seed=1), seed=2)
+    eng = NKSEngine(ds, m=2, n_scales=3, seed=0, build_exact=False)
+    q = random_queries(ds, 2, 1, seed=0)[0]
+    out = handle_request(
+        eng, {"keywords": q, "k": 2,
+              "filter": {"where": [["price", "<", 60.0]]}},
+        tier="approx", k=1)
+    assert out["filter"] == {"where": [["price", "<", 60.0]]}
+    elig = ds.attrs["price"] < 60.0
+    for res in out["results"]:
+        assert all(elig[i] for i in res["ids"])
+    ins = handle_request(
+        eng, {"op": "insert", "points": ds.points[:2].tolist(),
+              "keywords": [[0], [1]],
+              "attrs": {"price": [1.0, 2.0], "category": [0, 1]}},
+        tier="approx", k=1)
+    assert len(ins["ids"]) == 2 and ins["delta_points"] == 2
+    out2 = handle_request(
+        eng, {"keywords": [0], "k": 1,
+              "filter": {"where": [["price", "<", 1.5]]}},
+        tier="approx", k=1)
+    assert out2["results"], "freshly inserted eligible point not found"
+    assert out2["results"][0]["ids"] == [int(ins["ids"][0])]
+
+
+def test_serve_tenant_insert_roundtrip():
+    """The serving layer speaks tenant-LOCAL keyword ids on BOTH sides:
+    a tenant's insert must be reachable by that tenant's own queries (the
+    launcher resolves insert keywords through the namespace exactly as the
+    engine resolves query keywords)."""
+    from repro.launch.serve import handle_request
+    mt = synthetic_tenants({"acme": 60, "globex": 60}, d=4, u=6, t=2, seed=4)
+    eng = NKSEngine(mt, m=2, n_scales=3, seed=0, build_exact=False)
+    pt = np.full((1, 4), 7.0, np.float32).tolist()
+    # price -5 makes the new point the ONLY one matching price < 0, so the
+    # roundtrip query below has exactly one feasible answer
+    ins = handle_request(
+        eng, {"op": "insert", "points": pt, "keywords": [[3]],
+              "tenant": "globex",
+              "attrs": {"price": [-5.0], "category": [0]}},
+        tier="approx", k=1)
+    new_id = int(ins["ids"][0])
+    # globex finds its point under its local id 3...
+    got = handle_request(
+        eng, {"keywords": [3], "k": 3,
+              "filter": {"tenant": "globex", "where": [["price", "<", 0]]}},
+        tier="approx", k=1)
+    assert [res["ids"] for res in got["results"]] == [[new_id]], got
+    # ...and acme (whose namespace also contains a local id 3) cannot see
+    # it: had the insert skipped namespace resolution, global slot 3 would
+    # lie in acme's namespace and this query would return the point
+    other = handle_request(
+        eng, {"keywords": [3], "k": 3,
+              "filter": {"tenant": "acme", "where": [["price", "<", 0]]}},
+        tier="approx", k=1)
+    assert other["results"] == [], other
+    # per-point tenant lists resolve row by row
+    ins2 = handle_request(
+        eng, {"op": "insert", "points": pt + pt, "keywords": [[2], [2]],
+              "tenant": ["acme", "globex"],
+              "attrs": {"price": [1.0, 1.0], "category": [0, 0]}},
+        tier="approx", k=1)
+    tids = eng.dataset.tenant_ids
+    ns = mt.tenants
+    internal = [np.flatnonzero(eng._ext_of == e)[0] for e in ins2["ids"]]
+    assert tids[internal[0]] == ns.id_of("acme")
+    assert tids[internal[1]] == ns.id_of("globex")

@@ -233,3 +233,35 @@ def test_flash_attention_matches_model_attention():
     got = flash_attention(q, k, v, causal=True, bq=16, bk=16, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-3, atol=2e-3)
+
+
+def test_pairwise_l2_join_batched_masked_eligibility_fold():
+    """The device-side eligibility fold (filtered NKS, ISSUE 5): packed
+    eligibility words AND into the mask identically on both lowerings, the
+    output keeps the unfiltered (S, P, ceil(P/32)) layout, and counts become
+    eligible-pair popcounts."""
+    from repro.core.subset_search import pack_join_mask, unpack_join_mask
+    rng = np.random.default_rng(9)
+    s, p, d = 5, 37, 6
+    x = rng.uniform(0, 50, (s, p, d)).astype(np.float32)
+    lens = np.array([37, 20, 7, 1, 0], np.int32)
+    radii = np.array([30.0, np.inf, 10.0, 5.0, 8.0], np.float32)
+    el = rng.random((s, p)) < 0.5
+    elig = pack_join_mask(el)                          # (s, ceil(p/32))
+
+    m_plain, c_plain = ops.pairwise_l2_join_batched_masked(
+        jnp.asarray(x), lens, radii, impl="xla")
+    m_xla, c_xla = ops.pairwise_l2_join_batched_masked(
+        jnp.asarray(x), lens, radii, jnp.asarray(elig), impl="xla")
+    m_pl, c_pl = ops.pairwise_l2_join_batched_masked(
+        jnp.asarray(x), lens, radii, jnp.asarray(elig), bm=16, bn=32,
+        impl="pallas", interpret=True)
+    assert m_xla.shape == m_plain.shape                # layout unchanged
+    np.testing.assert_array_equal(np.asarray(m_pl), np.asarray(m_xla))
+    np.testing.assert_array_equal(np.asarray(c_pl), np.asarray(c_xla))
+    for si in range(s):
+        ref = (unpack_join_mask(np.asarray(m_plain)[si], p).astype(bool)
+               & el[si][:, None] & el[si][None, :])
+        got = unpack_join_mask(np.asarray(m_xla)[si], p).astype(bool)
+        np.testing.assert_array_equal(got, ref, err_msg=f"subset {si}")
+        assert int(np.asarray(c_xla)[si]) == int(ref.sum())

@@ -1,20 +1,40 @@
-"""Property-based tests (hypothesis) for the system's core invariants."""
+"""Property-based tests (hypothesis) for the system's core invariants,
+including the randomized differential oracle harness for filtered /
+multi-tenant NKS: random corpora x random predicate/tenant filters x random
+streaming interleavings, each asserting promish == brute-force oracle (exact)
+or feasibility containment (approx) across selectivities 0-100%.
+
+Profiles: "ci" is the default; the dedicated CI hypothesis leg sets
+HYPOTHESIS_PROFILE=ci-heavy for more examples with an explicit deadline."""
+import os
+
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="hypothesis not installed in this env")
-from hypothesis import given, settings, strategies as st
+from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core import brute_force, promish_e
+from repro.core import brute_force, promish_a, promish_e
 from repro.core import projection as proj
+from repro.core.filters import Filter, where
 from repro.core.index import build_index
-from repro.core.subset_search import pairwise_l2_numpy
+from repro.core.subset_search import is_minimal_candidate, pairwise_l2_numpy
 from repro.core.types import Candidate, TopK, make_dataset
 from repro.train.grad_compress import _quantize
 from repro.utils.csr import csr_from_lists, invert_csr
 
 settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+# The dedicated hypothesis matrix leg: more examples, explicit per-example
+# deadline (these properties are pure numpy — no jit warmup to absorb), and
+# suppression of the too-slow health check on the heavier differential
+# strategies (corpus construction dominates, not the search under test).
+settings.register_profile(
+    "ci-heavy", max_examples=100, deadline=2000,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large,
+                           HealthCheck.filter_too_much])
+# `or "ci"`, not a get() default: the CI matrix exports the variable as an
+# empty string on legs that don't set a profile, and load_profile("") raises.
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE") or "ci")
 
 pts_strategy = st.integers(5, 40)
 
@@ -134,3 +154,238 @@ def test_hash_bucket_determinism_across_orderings(n, seed):
     b = sig.hash_signatures(sigs, 4096)
     b_perm = sig.hash_signatures(sigs[perm], 4096)
     np.testing.assert_array_equal(b[perm], b_perm)
+
+
+# ---------------------------------------------------------------------------
+# Randomized differential oracle harness: filtered & multi-tenant NKS.
+# ---------------------------------------------------------------------------
+def _random_corpus(rng, n, d, u, with_attrs=True):
+    pts = rng.uniform(0, 1000, (n, d)).astype(np.float32)
+    kws = [rng.choice(u, size=rng.integers(1, 3), replace=False).tolist()
+           for _ in range(n)]
+    attrs = None
+    if with_attrs:
+        attrs = {"price": rng.uniform(0.0, 100.0, n),
+                 "category": rng.integers(0, 4, n).astype(np.int64)}
+    return make_dataset(pts, kws, n_keywords=u, attrs=attrs)
+
+
+def _draw_filter(draw, kind=None):
+    """A random predicate spanning the whole selectivity range, including the
+    degenerate 0% (price < 0) and 100% (price < 101) endpoints."""
+    if kind is None:
+        kind = draw(st.sampled_from(
+            ["all", "empty", "price", "category", "both"]))
+    if kind == "all":
+        return where(("price", "<", 101.0))
+    if kind == "empty":
+        return where(("price", "<", -1.0))
+    if kind == "price":
+        return where(("price", "<", draw(st.floats(0.0, 100.0))))
+    if kind == "category":
+        cats = draw(st.lists(st.integers(0, 3), min_size=1, max_size=3,
+                             unique=True))
+        return where(("category", "in", cats))
+    return where(("price", "<", draw(st.floats(10.0, 90.0))),
+                 ("category", "in",
+                  draw(st.lists(st.integers(0, 3), min_size=1, max_size=3,
+                                unique=True))))
+
+
+@st.composite
+def filtered_instances(draw):
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    ds = _random_corpus(rng, draw(st.integers(15, 45)),
+                        draw(st.integers(2, 5)), draw(st.integers(4, 8)))
+    q = draw(st.integers(2, 3))
+    populated = np.flatnonzero(np.diff(ds.ikp.offsets) > 0)
+    if len(populated) < q:
+        q = max(len(populated), 1)
+    query = sorted(rng.choice(populated, size=q, replace=False).tolist())
+    return ds, query, _draw_filter(draw), seed
+
+
+@given(inst=filtered_instances())
+def test_filtered_promish_e_equals_oracle(inst):
+    """Filtered parity, exact tier: for any random corpus + predicate (0-100%
+    selectivity), ProMiSH-E over the eligibility mask ranks identically to
+    the brute-force oracle over the eligible sub-corpus, and only ever
+    returns eligible minimal candidates."""
+    ds, query, flt, seed = inst
+    eligible = flt.evaluate(ds)
+    idx = build_index(ds, m=2, n_scales=4, exact=True, seed=seed % 7)
+    got = promish_e.search(ds, idx, query, k=2, eligible=eligible)
+    want = brute_force.search(ds, query, k=2, eligible=eligible)
+    np.testing.assert_allclose([c.diameter for c in got.items],
+                               [c.diameter for c in want.items], rtol=1e-4)
+    assert [len(c.ids) for c in got.items] == \
+        [len(c.ids) for c in want.items]
+    for c in got.items:
+        assert all(eligible[i] for i in c.ids)
+        assert is_minimal_candidate(c.ids, query, ds)
+    if not eligible.any():
+        assert got.items == []
+
+
+@given(inst=filtered_instances())
+def test_filtered_promish_a_subset_of_feasible(inst):
+    """Filtered containment, approx tier: every ProMiSH-A candidate under a
+    predicate is drawn from the feasible set — eligible points only, covers
+    the query, minimal, diameter exact — and 0% selectivity yields empty."""
+    ds, query, flt, seed = inst
+    eligible = flt.evaluate(ds)
+    idx = build_index(ds, m=2, n_scales=4, exact=False, seed=seed % 5)
+    got = promish_a.search(ds, idx, query, k=2, eligible=eligible)
+    feasible = set(brute_force.enumerate_candidates(ds, query,
+                                                    eligible=eligible))
+    for c in got.items:
+        assert all(eligible[i] for i in c.ids)
+        assert c.ids in feasible
+        np.testing.assert_allclose(
+            c.diameter, brute_force.set_diameter(c.ids, ds), rtol=1e-9)
+    if not eligible.any():
+        assert got.items == []
+
+
+@given(inst=filtered_instances())
+@settings(deadline=None)
+def test_engine_filtered_batch_equals_oracle(inst):
+    """The whole serving pipeline (plan -> backend -> enumeration) under a
+    filter matches the oracle — the engine-level restatement of the parity
+    contract, exercising bucket pruning and group restriction."""
+    from repro.serve.engine import NKSEngine
+    ds, query, flt, seed = inst
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=seed % 7)
+    res = eng.query_batch([query], k=2, tier="exact", backend="numpy",
+                          filter=flt)[0]
+    want = brute_force.search_filtered(ds, query, flt, k=2)
+    np.testing.assert_allclose([c.diameter for c in res.candidates],
+                               [c.diameter for c in want.items], rtol=1e-4)
+    assert [len(c.ids) for c in res.candidates] == \
+        [len(c.ids) for c in want.items]
+
+
+@st.composite
+def tenant_instances(draw):
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    from repro.core.types import merge_tenants
+    u = draw(st.integers(3, 6))
+    corpora = {}
+    for name in ("acme", "globex"):
+        n = draw(st.integers(8, 25))
+        pts = rng.uniform(0, 1000, (n, 3)).astype(np.float32)
+        kws = [rng.choice(u, size=rng.integers(1, 3), replace=False).tolist()
+               for _ in range(n)]
+        corpora[name] = {"points": pts, "keywords": kws, "n_keywords": u,
+                         "attrs": {"price": rng.uniform(0, 100, n),
+                                   "category": rng.integers(0, 4, n)
+                                   .astype(np.int64)}}
+    ds = merge_tenants(corpora)
+    tenant = draw(st.sampled_from(["acme", "globex"]))
+    query = sorted(rng.choice(u, size=min(2, u), replace=False).tolist())
+    return ds, tenant, query, seed
+
+
+@given(inst=tenant_instances())
+@settings(deadline=None)
+def test_tenant_scoping_isolates_and_matches_oracle(inst):
+    """Multi-tenant parity + isolation: a tenant-scoped query (tenant-local
+    keyword ids) matches the oracle over that tenant's sub-corpus and can
+    never return another tenant's points."""
+    from repro.serve.engine import NKSEngine
+    ds, tenant, query, seed = inst
+    flt = Filter(tenant=tenant)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=seed % 5)
+    res = eng.query_batch([query], k=2, tier="exact", backend="numpy",
+                          filter=flt)[0]
+    want = brute_force.search_filtered(ds, query, flt, k=2)
+    np.testing.assert_allclose([c.diameter for c in res.candidates],
+                               [c.diameter for c in want.items], rtol=1e-4)
+    tid = ds.tenants.id_of(tenant)
+    for c in res.candidates:
+        assert all(ds.tenant_of[i] == tid for i in c.ids), \
+            f"tenant isolation violated: {tenant} -> {c.ids}"
+
+
+@st.composite
+def streaming_scripts(draw):
+    """A random interleaving of insert/delete(/compact) ops plus a filtered
+    query load."""
+    seed = draw(st.integers(0, 10_000))
+    n_ops = draw(st.integers(1, 4))
+    ops = [draw(st.sampled_from(["insert", "delete", "compact"]))
+           for _ in range(n_ops)]
+    return seed, ops, _draw_filter(draw)
+
+
+@given(script=streaming_scripts())
+@settings(deadline=None, max_examples=20)
+def test_streaming_filtered_interleaving_parity(script):
+    """Streaming x filtering: after any random interleaving of inserts,
+    deletes, and compactions, a filtered exact query answers identically
+    (external ids and diameters) to a fresh engine over the equivalent
+    static corpus."""
+    from repro.serve.engine import NKSEngine
+    seed, ops, flt = script
+    rng = np.random.default_rng(seed)
+    u, d = 6, 3
+    base = _random_corpus(rng, 30, d, u)
+    probe = build_index(base, m=2, n_scales=4, exact=True, seed=0)
+    pinned = dict(m=2, n_scales=4, seed=0, w0=probe.w0,
+                  n_buckets=probe.structures[0].n_buckets)
+    eng = NKSEngine(base, auto_compact=False, **pinned)
+
+    pts = [base.points[i].copy() for i in range(base.n)]
+    kws = [base.kw.row(i).tolist() for i in range(base.n)]
+    price = list(base.attrs["price"])
+    cat = list(base.attrs["category"])
+    alive = {i: True for i in range(base.n)}
+
+    for op in ops:
+        live_ids = [i for i, a in alive.items() if a]
+        if op == "insert":
+            b = int(rng.integers(1, 5))
+            np_pts = rng.uniform(0, 1000, (b, d)).astype(np.float32)
+            np_kws = [rng.choice(u, size=rng.integers(1, 3),
+                                 replace=False).tolist() for _ in range(b)]
+            np_price = rng.uniform(0, 100, b)
+            np_cat = rng.integers(0, 4, b).astype(np.int64)
+            ext = eng.insert(np_pts, np_kws,
+                             attrs={"price": np_price, "category": np_cat})
+            for j, e in enumerate(ext):
+                alive[int(e)] = True
+                pts.append(np_pts[j]); kws.append(np_kws[j])
+                price.append(np_price[j]); cat.append(np_cat[j])
+        elif op == "delete" and len(live_ids) > 3:
+            doomed = rng.choice(live_ids, size=min(2, len(live_ids) - 3),
+                                replace=False)
+            eng.delete(sorted(int(i) for i in doomed))
+            for i in doomed:
+                alive[int(i)] = False
+        elif op == "compact" and (eng.delta_points or eng.tombstone_count):
+            if eng.tombstone_count < eng.dataset.n:
+                eng.compact()
+
+    keep = np.asarray(sorted(i for i, a in alive.items() if a))
+    fresh_ds = make_dataset(
+        np.stack([pts[i] for i in keep]), [kws[int(i)] for i in keep],
+        n_keywords=u,
+        attrs={"price": np.asarray([price[i] for i in keep]),
+               "category": np.asarray([cat[i] for i in keep])})
+    fresh = NKSEngine(fresh_ds, **pinned)
+    populated = np.flatnonzero(np.diff(fresh_ds.ikp.offsets) > 0)
+    if len(populated) < 2:
+        return
+    query = sorted(rng.choice(populated, size=2, replace=False).tolist())
+
+    got = eng.query_batch([query], k=2, tier="exact", backend="numpy",
+                          filter=flt)[0]
+    want = fresh.query_batch([query], k=2, tier="exact", backend="numpy",
+                             filter=flt)[0]
+    ext_want = [tuple(int(keep[j]) for j in c.ids) for c in want.candidates]
+    assert [c.ids for c in got.candidates] == ext_want, (ops, query)
+    np.testing.assert_allclose([c.diameter for c in got.candidates],
+                               [c.diameter for c in want.candidates],
+                               rtol=1e-9)
