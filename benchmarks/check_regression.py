@@ -37,7 +37,11 @@ import json
 import os
 import sys
 
-GATED = ("batch_pallas_qps", "batch_numpy_qps", "loop_qps")
+# ``batch_auto_qps`` (cost-model routed engine, PR 6) joins the gate as soon
+# as the committed baseline records it — ``compare`` skips metrics the
+# baseline doesn't have yet, so pre-PR-6 baselines gate the original trio
+# only (warn-only semantics for the new fields until baselines regenerate).
+GATED = ("batch_pallas_qps", "batch_numpy_qps", "loop_qps", "batch_auto_qps")
 # Filtered sweep: gate the unfiltered reference and the sweep geomean. The
 # individual ``qps@<sel>`` points are recorded in the trajectory for
 # inspection but not gated — at fast-profile batch sizes they wobble
@@ -132,6 +136,21 @@ def main(argv=None) -> int:
         print(f"== batch pipeline ({args.fresh} vs {args.baseline})")
         _print_rows(rows)
         failures += len(regressions)
+        fresh_b = pair[0]
+        for tier, m in fresh_b.get("tiers", {}).items():
+            # Hard failure regardless of throughput: the mixed-precision
+            # prune tier / cost-model routing changed the result set. This
+            # is a correctness contract, not a perf gate.
+            if m.get("cascade_result_parity") is False:
+                print(f"FAIL: {tier}: cascade changed the result set "
+                      f"(cascade_result_parity=false)", file=sys.stderr)
+                failures += 1
+            binning = m.get("binning") or {}
+            q = (binning.get("quantile") or {}).get("padded_cell_ratio")
+            p = (binning.get("pow2") or {}).get("padded_cell_ratio")
+            if q is not None and p is not None and q > p:
+                print(f"WARNING: {tier}: quantile binning padded more than "
+                      f"pow2 ({q:.4f} > {p:.4f})", file=sys.stderr)
 
     pair = _load_pair(args.filtered_fresh, args.filtered_baseline,
                       args.require_fresh, baseline_required=False,

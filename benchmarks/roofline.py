@@ -1,5 +1,6 @@
 """§Roofline — derive the three roofline terms per (arch x cell x mesh) from
-the dry-run artifacts (deliverable g).
+the dry-run artifacts (deliverable g), plus roofline rows for the NKS join
+kernels themselves.
 
     compute term    = HLO_FLOPs / peak_FLOP/s            (per chip — the
     memory term     = HLO_bytes / HBM_bw                  compiled module is
@@ -11,6 +12,20 @@ Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
 Also reports MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per device and
 the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy
 waste; >1 means HLO under-counts, <1 means recompute/overhead).
+
+The **kernel section** AOT-lowers the batched threshold-join ops (the fp32
+masked join and the bf16 coarse-count prune tier) at representative bin
+shapes and prices XLA's own cost analysis against the v5e constants. Off
+TPU this measures the XLA lowering — the interpret-validated stand-in for
+the Mosaic kernel — so CI can track the numbers until real-TPU validation
+lands (ROADMAP raw-speed campaign):
+
+    PYTHONPATH=src python -m benchmarks.roofline [--fast] \
+        [--art-dir artifacts/dryrun] [--out BENCH_roofline.json]
+
+``--fast`` trims the shape sweep to the two bin shapes the fast bench
+actually exercises; ``--out`` writes every row (cells + kernels) as JSON so
+a CI leg can upload the trajectory as an artifact.
 """
 from __future__ import annotations
 
@@ -21,6 +36,13 @@ import os
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link
+
+# (S, P, d) batched-join bin shapes: the fast-bench pair first (quantile
+# classes on the flickr-like corpus land near these), then the larger bins
+# the full profile / fallback stage reaches.
+KERNEL_SHAPES_FAST = [(64, 128, 16), (16, 512, 16)]
+KERNEL_SHAPES = KERNEL_SHAPES_FAST + [(256, 128, 16), (64, 256, 32),
+                                      (8, 1024, 64)]
 
 CELL_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
                "decode_32k": 128, "long_500k": 1}
@@ -75,24 +97,98 @@ def roofline_row(rec: dict) -> dict | None:
             "useful_ratio": useful, "roofline_fraction": frac}
 
 
-def main(art_dir: str = "artifacts/dryrun", fast: bool = False):
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def kernel_row(op: str, s: int, p: int, d: int) -> dict:
+    """AOT-lower one batched-join op at one (S, P, d) bin shape and price
+    XLA's cost analysis against the v5e roofline constants."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    x = jax.ShapeDtypeStruct((s, p, d), jnp.float32)
+    lens = jax.ShapeDtypeStruct((s,), jnp.int32)
+    r = jax.ShapeDtypeStruct((s,), jnp.float32)
+    if op == "join_masked_fp32":
+        fn = jax.jit(lambda xx, ll, rr: ops.join_batched_masked_local(
+            xx, ll, rr, interpret=False))
+    elif op == "join_counts_bf16":
+        fn = jax.jit(lambda xx, ll, rr: ops.join_batched_counts_local(
+            xx, ll, rr, dtype="bf16", interpret=False))
+    else:
+        raise ValueError(op)
+    cost = _cost_dict(fn.lower(x, lens, r).compile())
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    # matmul-equivalent useful work: the norms-identity join is one S
+    # batched (P, d)x(d, P) product — 2·S·P²·d MACs-as-flops.
+    mf = 2.0 * s * p * p * d
+    return {"op": op, "S": s, "P": p, "d": d,
+            "hlo_flops": flops, "hlo_bytes": byts,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "dominant": "compute" if t_compute >= t_memory else "memory",
+            "useful_ratio": mf / flops if flops else 0.0,
+            "arithmetic_intensity": flops / byts if byts else 0.0,
+            "backend": jax.default_backend()}
+
+
+def kernel_rows(fast: bool = False) -> list[dict]:
+    rows = []
+    for s, p, d in (KERNEL_SHAPES_FAST if fast else KERNEL_SHAPES):
+        for op in ("join_masked_fp32", "join_counts_bf16"):
+            rows.append(kernel_row(op, s, p, d))
+    return rows
+
+
+def main(art_dir: str = "artifacts/dryrun", fast: bool = False,
+         out: str | None = None) -> dict:
+    results: dict = {"cells": [], "kernels": []}
     recs = load_records(art_dir)
     if not recs:
         print("roofline.no_artifacts,0.0,run repro.launch.dryrun first")
-        return
-    print("arch,cell,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
-          "useful_ratio,roofline_fraction")
-    for rec in recs:
-        row = roofline_row(rec)
-        if row is None or row.get("error"):
-            print(f"{rec['arch']},{rec['cell']},{rec['mesh']},ERROR,,,,,")
-            continue
-        print(f"{row['arch']},{row['cell']},{row['mesh']},"
+    else:
+        print("arch,cell,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+              "useful_ratio,roofline_fraction")
+        for rec in recs:
+            row = roofline_row(rec)
+            if row is None or row.get("error"):
+                print(f"{rec['arch']},{rec['cell']},{rec['mesh']},ERROR,,,,,")
+                continue
+            results["cells"].append(row)
+            print(f"{row['arch']},{row['cell']},{row['mesh']},"
+                  f"{row['t_compute_s']:.4e},{row['t_memory_s']:.4e},"
+                  f"{row['t_collective_s']:.4e},{row['dominant']},"
+                  f"{row['useful_ratio']:.3f},{row['roofline_fraction']:.3f}")
+    print("op,S,P,d,hlo_flops,hlo_bytes,t_compute_s,t_memory_s,dominant,"
+          "useful_ratio,backend")
+    for row in kernel_rows(fast):
+        results["kernels"].append(row)
+        print(f"{row['op']},{row['S']},{row['P']},{row['d']},"
+              f"{row['hlo_flops']:.3e},{row['hlo_bytes']:.3e},"
               f"{row['t_compute_s']:.4e},{row['t_memory_s']:.4e},"
-              f"{row['t_collective_s']:.4e},{row['dominant']},"
-              f"{row['useful_ratio']:.3f},{row['roofline_fraction']:.3f}")
+              f"{row['dominant']},{row['useful_ratio']:.3f},{row['backend']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {os.path.abspath(out)}")
+    return results
 
 
 if __name__ == "__main__":
-    import sys
-    main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("art_dir", nargs="?", default="artifacts/dryrun")
+    ap.add_argument("--art-dir", dest="art_dir_opt", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="fast-bench bin shapes only")
+    ap.add_argument("--out", default=None,
+                    help="write all rows (cells + kernels) as JSON")
+    args = ap.parse_args()
+    main(args.art_dir_opt or args.art_dir, fast=args.fast, out=args.out)

@@ -43,7 +43,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.subset_search import pack_join_mask, pairwise_l2_numpy
+from repro.core.subset_search import (_sq_dists_f64, pack_join_mask,
+                                      pairwise_l2_numpy)
 
 _EPS32 = float(np.finfo(np.float32).eps)
 _F32_MAX = float(np.finfo(np.float32).max)
@@ -79,6 +80,18 @@ class BackendStats:
     shard_dispatches: list = dataclasses.field(default_factory=list)
     shard_valid_cells: list = dataclasses.field(default_factory=list)
     shard_total_cells: list = dataclasses.field(default_factory=list)
+    # Cascade / routing accounting (PallasBackend): the coarse mixed-precision
+    # prune tier and the cost-model host route. ``t_prune_s`` and ``t_host_s``
+    # are *components* of ``t_dispatch_s`` (the engine subtracts them out to
+    # report the fp32 join share). ``bin_points`` maps each size-class edge to
+    # cumulative (valid, padded) point totals packed under it.
+    prune_tier_dispatches: int = 0         # coarse counts passes issued
+    cells_pruned: int = 0                  # fp32 tile cells skipped via prune
+    t_prune_s: float = 0.0                 # wall inside coarse counts passes
+    host_routed_dispatches: int = 0        # bins routed to the host backend
+    host_routed_subsets: int = 0           # subsets served by host routing
+    t_host_s: float = 0.0                  # wall inside host-routed bins
+    bin_points: dict = dataclasses.field(default_factory=dict)
 
     def ensure_shards(self, n: int) -> None:
         for lst in (self.shard_dispatches, self.shard_valid_cells,
@@ -111,6 +124,12 @@ class DistanceBlock:
                  ``join_count`` cover eligible pairs only (the eligibility
                  fold), so the empty-join test becomes
                  ``join_count <= n_eligible``.
+    rows       : eligible-dense packing (low-selectivity filtered dispatch):
+                 sorted subset-local row positions actually packed into the
+                 device tile. ``mask`` then covers only those rows — the
+                 enumeration stage remaps its keyword groups into the packed
+                 row space (``subset_search.enumerate_with_block``). None on
+                 the standard full-subset pack.
     """
 
     n: int
@@ -120,6 +139,7 @@ class DistanceBlock:
     dist: np.ndarray | None = None
     mask: np.ndarray | None = None
     n_eligible: int | None = None
+    rows: np.ndarray | None = None
 
 
 class DistanceBackend(abc.ABC):
@@ -160,6 +180,166 @@ class DistanceBackend(abc.ABC):
         reuses every cache entry and ships only fresh eligibility words."""
 
 
+@dataclasses.dataclass(frozen=True)
+class DispatchCostModel:
+    """Measured crossover model for dispatch routing (calibrated at warmup).
+
+    Costs are a two-point linear fit per route: a fixed per-dispatch term
+    plus a per-join-cell term, probed at the corpus dimensionality the
+    backend actually serves (so no cross-d extrapolation). ``prune_cell_s``
+    is the coarse counts-pass cost per cell; the prune tier only pays off
+    where the coarse gemm is genuinely cheaper than the fp32 one (the TPU
+    MXU's double-rate bf16 path — on CPU/XLA there is no such discount, so
+    ``prune_profitable`` is False off-TPU regardless of timings).
+    """
+
+    platform: str
+    d: int
+    dev_fixed_s: float     # per-dispatch overhead (trace/launch/readback)
+    dev_cell_s: float      # fp32 masked join, per padded tile cell
+    prune_cell_s: float    # coarse counts pass, per padded tile cell
+    host_fixed_s: float    # numpy route, per subset
+    host_cell_s: float     # numpy float64 join, per valid cell
+    settle_cell_s: float = 0.0   # expected host f64 settlement of a device
+    settle_fixed_s: float = 0.0  # block (unpack + table + expansion), per
+    #                              valid cell / per subset
+
+    def device_cost(self, padded_cells: int, valid_cells: int = 0,
+                    n_subsets: int = 0) -> float:
+        # A device block is not free after readback: subsets whose join is
+        # non-empty settle on the host in float64 — work a host-routed block
+        # (which ships exact distances) never repeats. The settle terms make
+        # the two routes comparable as *end-to-end* costs; on accelerators
+        # the dev term shrinks by orders of magnitude (and the prune tier
+        # kills most settlements), which is exactly the measured crossover.
+        return self.dev_fixed_s + self.dev_cell_s * padded_cells \
+            + self.settle_cell_s * valid_cells \
+            + self.settle_fixed_s * n_subsets
+
+    def host_cost(self, n_subsets: int, valid_cells: int) -> float:
+        return self.host_fixed_s * n_subsets + self.host_cell_s * valid_cells
+
+    @property
+    def prune_profitable(self) -> bool:
+        return (self.platform == "tpu"
+                and self.prune_cell_s < 0.7 * self.dev_cell_s)
+
+
+_COST_MODELS: dict[tuple, DispatchCostModel] = {}
+
+
+def calibrate_cost_model(d: int, *, bm: int = 128, bn: int = 128,
+                         interpret: bool | None = None) -> DispatchCostModel:
+    """Measure the device/host crossover at dimensionality ``d`` (memoized
+    per process). Probes the warm path: each probe is compiled + warmed once,
+    then timed best-of-3, so jit tracing never lands in the model."""
+    import jax
+    from repro.kernels import ops
+
+    platform = jax.default_backend()
+    key = (platform, d, bm, bn, interpret)
+    model = _COST_MODELS.get(key)
+    if model is not None:
+        return model
+
+    def best(f, reps=3):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            f()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    x_s = np.zeros((8, 32, d), np.float32)
+    x_b = np.zeros((8, 256, d), np.float32)
+    l_s = np.full(8, 32, np.int32)
+    l_b = np.full(8, 256, np.int32)
+    r = np.ones(8, np.float32)
+
+    def dev(x, lens):
+        mask, cnt = ops.pairwise_l2_join_batched_masked(
+            x, lens, r, bm=bm, bn=bn, interpret=interpret)
+        np.asarray(cnt)
+
+    def prune(x, lens):
+        np.asarray(ops.pairwise_l2_join_batched_counts(
+            x, lens, r, bm=bm, bn=bn, interpret=interpret))
+
+    dev(x_s, l_s)
+    dev(x_b, l_b)
+    prune(x_b, l_b)
+    t_ds, t_db = best(lambda: dev(x_s, l_s)), best(lambda: dev(x_b, l_b))
+    cells_s, cells_b = 8 * 32 * 32, 8 * 256 * 256
+    dev_cell = max((t_db - t_ds) / (cells_b - cells_s), 1e-13)
+    dev_fixed = max(t_ds - dev_cell * cells_s, 0.0)
+    prune_cell = max((best(lambda: prune(x_b, l_b)) - dev_fixed) / cells_b,
+                     1e-13)
+
+    p_s = np.zeros((32, d))
+    p_b = np.zeros((256, d))
+
+    def host(pts):
+        dist = pairwise_l2_numpy(pts, pts)
+        (dist <= 1.0).sum()
+
+    host(p_s)
+    t_hs, t_hb = best(lambda: host(p_s)), best(lambda: host(p_b))
+    host_cell = max((t_hb - t_hs) / (cells_b // 8 - cells_s // 8), 1e-13)
+    host_fixed = max(t_hs - host_cell * (cells_s // 8), 0.0)
+
+    # Settlement share of a device block's end-to-end cost, as a fraction of
+    # the equivalent host join. Without an accelerator the fp32 dispatch buys
+    # no arithmetic advantage, every settled subset re-pays host-f64 work on
+    # top of the dispatch, and measured end-to-end rates show the host route
+    # winning (the exact-tier inversion this model exists to fix) — so the
+    # full host cost is charged. On TPU the prune tier removes most
+    # settlements and the dispatch term collapses, so half is charged.
+    settle_frac = 0.5 if platform == "tpu" else 1.0
+    model = DispatchCostModel(
+        platform=platform, d=d, dev_fixed_s=dev_fixed, dev_cell_s=dev_cell,
+        prune_cell_s=prune_cell, host_fixed_s=host_fixed,
+        host_cell_s=host_cell,
+        settle_cell_s=settle_frac * host_cell,
+        settle_fixed_s=settle_frac * host_fixed)
+    _COST_MODELS[key] = model
+    return model
+
+
+def _dp_segment(values: np.ndarray, counts: np.ndarray,
+                cap: int) -> np.ndarray:
+    """Waste-minimizing size-class edges over a length histogram.
+
+    ``values`` are distinct (rounded) subset lengths, ``counts`` their
+    multiplicities. A segmentation assigns every value to the segment's top
+    value (the bin edge each member pads to); its cost is total padded tile
+    cells ``sum(edge^2 * members)`` plus ``lam`` per segment. The O(u^2) DP
+    is exact for a given ``lam``; ``lam`` escalates x4 from one cell until
+    the optimum uses at most ``cap`` segments, so edges are deterministic —
+    no timing enters the choice."""
+    u = len(values)
+    if u <= cap:
+        return values.copy()
+    v2 = values.astype(np.float64) ** 2
+    csum = np.concatenate([[0.0], np.cumsum(counts.astype(np.float64))])
+    lam = 1.0
+    while True:
+        dp = np.zeros(u + 1)
+        prev = np.zeros(u + 1, np.int64)
+        nseg = np.zeros(u + 1, np.int64)
+        for j in range(1, u + 1):
+            cost = dp[:j] + v2[j - 1] * (csum[j] - csum[:j]) + lam
+            bi = int(np.argmin(cost))
+            dp[j], prev[j], nseg[j] = cost[bi], bi, nseg[bi] + 1
+        if nseg[u] <= cap:
+            edges = []
+            j = u
+            while j > 0:
+                edges.append(int(values[j - 1]))
+                j = prev[j]
+            return np.asarray(sorted(edges), dtype=values.dtype)
+        lam *= 4.0
+
+
 class NumpyBackend(DistanceBackend):
     """float64 control-plane backend: exact, loops subset by subset."""
 
@@ -193,9 +373,9 @@ class NumpyBackend(DistanceBackend):
                 count = int(((dist <= r) & pair_ok).sum()) \
                     if np.isfinite(r) else int(pair_ok.sum())
             self.stats.subsets += 1
-            self.stats.points_packed += len(pts)
+            self.stats.points_packed += len(ids)
             self.stats.join_pairs += count
-            out.append(DistanceBlock(n=len(pts), dist=dist, slack=0.0,
+            out.append(DistanceBlock(n=len(ids), dist=dist, slack=0.0,
                                      rescore=False, join_count=count,
                                      n_eligible=n_elig))
         self.stats.t_dispatch_s += time.perf_counter() - t0
@@ -233,7 +413,16 @@ class PallasBackend(DistanceBackend):
                  interpret: bool | None = None, quantum: int = 8,
                  max_block_bytes: int = 256 << 20,
                  cache_bytes: int = 128 << 20,
-                 plane=None) -> None:
+                 plane=None,
+                 bin_strategy: str = "quantile",
+                 n_classes: int = 6,
+                 route: str = "auto",
+                 prune_tier: str = "auto",
+                 prune_dtype: str = "bf16",
+                 prune_eps: float = 0.05,
+                 elig_pack_threshold: float = 0.25,
+                 placement: str = "sorted",
+                 cost_model: DispatchCostModel | None = None) -> None:
         super().__init__()
         self.bm = bm
         self.bn = bn
@@ -242,6 +431,40 @@ class PallasBackend(DistanceBackend):
         self.max_block_bytes = max_block_bytes
         self.cache_bytes = cache_bytes
         self.plane = plane
+        # --- raw-speed campaign knobs (see README "Performance tuning") ---
+        # bin_strategy: "quantile" fits size-class edges to the planned
+        #   subset-length distribution per call (deterministic DP, at most
+        #   n_classes edges, never more padded cells than "pow2").
+        # route: "auto" sends bins below the measured Pallas break-even to
+        #   the exact host path (one dispatch per bin either way); "device"
+        #   pins every finite-radius bin on the device.
+        # prune_tier: "on"/"off"/"auto" — the coarse bf16/int8 counts pass
+        #   ahead of the fp32 masked join; "auto" enables it only where the
+        #   calibrated model shows a coarse-gemm discount (TPU).
+        # elig_pack_threshold: below this filter selectivity, tiles pack
+        #   eligible rows densely instead of folding an eligibility mask.
+        # placement: "sorted" deals sharded bins to shards in snake order of
+        #   packed size so slab work stays level; "none" keeps plan order.
+        if bin_strategy not in ("quantile", "pow2"):
+            raise ValueError(f"unknown bin_strategy: {bin_strategy!r}")
+        if route not in ("auto", "device"):
+            raise ValueError(f"unknown route: {route!r}")
+        if prune_tier not in ("auto", "on", "off"):
+            raise ValueError(f"unknown prune_tier: {prune_tier!r}")
+        if prune_dtype not in ("bf16", "int8"):
+            raise ValueError(f"unknown prune_dtype: {prune_dtype!r}")
+        if placement not in ("sorted", "none"):
+            raise ValueError(f"unknown placement: {placement!r}")
+        self.bin_strategy = bin_strategy
+        self.n_classes = n_classes
+        self.route = route
+        self.prune_tier = prune_tier
+        self.prune_dtype = prune_dtype
+        self.prune_eps = prune_eps
+        self.elig_pack_threshold = elig_pack_threshold
+        self.placement = placement
+        self._model = cost_model
+        self._edge_cache: dict[bytes, np.ndarray] = {}
         # LRU over both per-subset packed rows and whole device-committed
         # dispatch tiles; values are (nbytes, payload). Entries are only
         # valid for one corpus *generation*: subset keys are id bytes, so a
@@ -337,11 +560,66 @@ class PallasBackend(DistanceBackend):
             p <<= 1
         return p
 
+    def _cost_model(self, d: int) -> DispatchCostModel:
+        if self._model is None:
+            self._model = calibrate_cost_model(
+                d, bm=self.bm, bn=self.bn, interpret=self.interpret)
+        return self._model
+
+    def _prune_active(self, d: int) -> bool:
+        if self.prune_tier == "on":
+            return True
+        if self.prune_tier == "off":
+            return False
+        # "auto": only where the coarse gemm is actually discounted. Off-TPU
+        # the answer is a platform property, so skip the calibration probes.
+        import jax
+        if jax.default_backend() != "tpu":
+            return False
+        return self._cost_model(d).prune_profitable
+
+    def _quantile_edges(self, sizes: np.ndarray) -> np.ndarray:
+        """Data-driven size-class edges for one call's subset lengths.
+
+        Lengths are rounded up to the quantum (shape reuse) and floored at
+        the platform min class, then segmented by the waste-minimizing DP
+        (:func:`_dp_segment`) capped at ``n_classes`` edges — or the pow2
+        class count if that is larger, which makes the pow2 segmentation a
+        *feasible* DP choice and hence quantile padded cells <= pow2 padded
+        cells on every call (the guard below enforces it exactly). Edges are
+        cached per sorted-length signature; the cache lives inside one
+        corpus generation (purged with the LRU)."""
+        self._class_pad(1)                      # resolve _min_class
+        q = self.quantum
+        vals = np.maximum(((np.maximum(sizes, 1) + q - 1) // q) * q,
+                          self._min_class).astype(np.int64)
+        svals = np.sort(vals)
+        sig = svals.tobytes()
+        hit = self._edge_cache.get(sig)
+        if hit is not None:
+            return hit
+        distinct, counts = np.unique(svals, return_counts=True)
+        pow2_edges = np.unique([self._class_pad(int(v)) for v in distinct])
+        cap = max(self.n_classes, len(pow2_edges))
+        edges = _dp_segment(distinct, counts, cap)
+
+        def total_cells(e):
+            cls = e[np.searchsorted(e, distinct)]
+            return int((counts * cls.astype(np.int64) ** 2).sum())
+
+        if total_cells(edges) > total_cells(pow2_edges):
+            edges = pow2_edges
+        if len(self._edge_cache) > 128:
+            self._edge_cache.clear()
+        self._edge_cache[sig] = edges
+        return edges
+
     def _purge_cache(self, generation_bump: bool) -> None:
         if self._cache:
             self.stats.generation_purges += int(generation_bump)
         self._cache.clear()
         self._cache_nbytes = 0
+        self._edge_cache.clear()
 
     def self_join_blocks(self, points: np.ndarray,
                          id_lists: Sequence[np.ndarray],
@@ -371,12 +649,17 @@ class PallasBackend(DistanceBackend):
             self._corpus = points
         # Size-binned dispatch: padding every subset of a scale to the batch
         # max wastes quadratically (a single near-corpus subset makes every
-        # tiny one pay its P^2); pow2 size classes keep padded cells < 4x the
-        # valid ones at a handful of dispatches per scale. Within a class,
+        # tiny one pay its P^2). Size-class edges come from the bin strategy:
+        # "quantile" fits them to this call's length distribution (DP over
+        # the histogram, <= n_classes edges, never more padded cells than
+        # pow2), "pow2" keeps the classic powers of two. Within a class,
         # chunk so one dispatch's (S, P, P) on-device join block stays under
-        # the memory budget. Result order matches the task order.
-        classes: dict[int, list[int]] = {}
+        # the memory budget, then route each chunk: bins whose estimated
+        # device cost exceeds the measured host cost go to the exact numpy
+        # path (route="auto"), the rest dispatch on device. Result order
+        # matches the task order.
         blocks: list[DistanceBlock | None] = [None] * len(id_lists)
+        finite: list[int] = []
         for i, ids in enumerate(id_lists):
             if not np.isfinite(radii[i]):
                 # An infinite pruning radius joins every pair by construction
@@ -394,9 +677,39 @@ class PallasBackend(DistanceBackend):
                 blocks[i] = DistanceBlock(n=n, slack=0.0, rescore=True,
                                           join_count=pairs, n_eligible=n_elig)
                 continue
-            classes.setdefault(self._class_pad(len(ids)), []).append(i)
+            finite.append(i)
+        if not finite:
+            return blocks
+        lens = np.fromiter((len(id_lists[i]) for i in finite), np.int64,
+                           count=len(finite))
+        # Eligible-dense packing: when a filter keeps only a thin slice of
+        # each subset, folding an eligibility mask into a full-width tile
+        # wastes ~1/selectivity^2 of the join cells. Below the threshold the
+        # tiles pack eligible rows densely instead — sized by eligible
+        # counts, uncached (the pack is filter-dependent), blocks carrying
+        # the packed row map for the enumeration stage.
+        elig_dense = False
+        if eligible is not None and len(lens):
+            el_counts = np.fromiter(
+                (int(eligible[id_lists[i]].sum()) for i in finite), np.int64,
+                count=len(finite))
+            tot = int(lens.sum())
+            elig_dense = tot > 0 and \
+                int(el_counts.sum()) < self.elig_pack_threshold * tot
+        sizes = el_counts if elig_dense else lens
+        if self.bin_strategy == "quantile":
+            edges = self._quantile_edges(sizes)
+            cls = edges[np.searchsorted(edges, np.maximum(sizes, 1))]
+        else:
+            cls = np.array([self._class_pad(int(max(s, 1))) for s in sizes])
+        classes: dict[int, list[int]] = {}
+        for pos, i in enumerate(finite):
+            classes.setdefault(int(cls[pos]), []).append(pos)
+        model = None
+        if self.route == "auto":
+            model = self._cost_model(points.shape[1])
         budget = max(1, self.max_block_bytes // 4)
-        for p_pad, idxs in sorted(classes.items()):
+        for p_pad, poss in sorted(classes.items()):
             # Budget the *padded* subset count: _dispatch rounds it up to
             # quantum for shape reuse, so floor max_s to a quantum multiple
             # (falling back to unrounded single-subset dispatches when even
@@ -405,27 +718,112 @@ class PallasBackend(DistanceBackend):
             if max_s >= self.quantum:
                 max_s = (max_s // self.quantum) * self.quantum
             max_s = max(1, max_s)
-            for c0 in range(0, len(idxs), max_s):
-                chunk = idxs[c0:c0 + max_s]
-                out = self._dispatch(points, [id_lists[i] for i in chunk],
-                                     [radii[i] for i in chunk],
-                                     [keys[i] for i in chunk], p_pad,
-                                     eligible)
-                for i, b in zip(chunk, out):
+            for c0 in range(0, len(poss), max_s):
+                chunk = poss[c0:c0 + max_s]
+                idxs = [finite[p] for p in chunk]
+                if model is not None:
+                    padded_cells = self._round(len(chunk)) * p_pad * p_pad
+                    valid_cells = int((sizes[chunk] ** 2).sum())
+                    if model.host_cost(len(chunk), valid_cells) \
+                            < model.device_cost(padded_cells, valid_cells,
+                                                len(chunk)):
+                        out = self._host_dispatch(
+                            points, [id_lists[i] for i in idxs],
+                            [radii[i] for i in idxs], eligible,
+                            keys=[keys[i] for i in idxs])
+                        for i, b in zip(idxs, out):
+                            blocks[i] = b
+                        continue
+                out = self._dispatch(points, [id_lists[i] for i in idxs],
+                                     [radii[i] for i in idxs],
+                                     [keys[i] for i in idxs], p_pad,
+                                     eligible, elig_dense=elig_dense)
+                for i, b in zip(idxs, out):
                     blocks[i] = b
         return blocks
+
+    def _host_dispatch(self, points: np.ndarray,
+                       id_lists: Sequence[np.ndarray],
+                       radii: Sequence[float],
+                       eligible: np.ndarray | None,
+                       keys: Sequence[bytes | None] | None = None
+                       ) -> list[DistanceBlock]:
+        """Cost-model host route: one bin served by the exact float64 path.
+
+        Blocks carry dense float64 distances (no slack, no rescore) computed
+        with the *same* difference-based arithmetic the enumeration stage's
+        float64 settlement uses (``sqrt`` of ``_sq_dists_f64``) — not the
+        norms identity of :class:`NumpyBackend`, which rounds differently at
+        the last ulp. That keeps the routing decision invisible in the
+        output: a bin served here yields bitwise the same diameters the
+        device route's rescore would have produced, so the cost model can
+        flip a bin between routes without changing a single result. The
+        whole bin counts as one dispatch — the same accounting unit as the
+        device route it replaces.
+
+        Distance tables are LRU-cached per subset key (generation-scoped,
+        like the device tiles): distances are radius- and filter-independent,
+        so a steady-state host-routed bin recomputes nothing — only the
+        threshold count per call. This is the host route's analogue of the
+        device tile cache, and what makes auto routing faster than a pure
+        :class:`NumpyBackend` pass at the same results."""
+        t0 = time.perf_counter()
+        if keys is None:
+            keys = [None] * len(id_lists)
+        out = []
+        for ids, r, key in zip(id_lists, radii, keys):
+            ck = None if key is None else ("hostdist", key)
+            dist = self._cache_get(ck) if ck is not None else None
+            if dist is None:
+                pts = points[ids]
+                dist = np.sqrt(_sq_dists_f64(np.asarray(pts, np.float64)))
+                if ck is not None:
+                    self.stats.cache_misses += 1
+                    self._cache_put(ck, dist, dist.nbytes)
+            else:
+                self.stats.cache_hits += 1
+            n_elig = None
+            if eligible is None:
+                count = int((dist <= r).sum())
+            else:
+                el = eligible[ids]
+                n_elig = int(el.sum())
+                count = int(((dist <= r) & el[:, None] & el[None, :]).sum())
+            self.stats.subsets += 1
+            self.stats.points_packed += len(ids)
+            self.stats.join_pairs += count
+            out.append(DistanceBlock(n=len(ids), dist=dist, slack=0.0,
+                                     rescore=False, join_count=count,
+                                     n_eligible=n_elig))
+        dt = time.perf_counter() - t0
+        self.stats.dispatches += 1
+        self.stats.host_routed_dispatches += 1
+        self.stats.host_routed_subsets += len(id_lists)
+        self.stats.t_host_s += dt
+        self.stats.t_dispatch_s += dt
+        return out
 
     def _dispatch(self, points: np.ndarray, id_lists: Sequence[np.ndarray],
                   radii: Sequence[float], keys: Sequence[bytes | None],
                   p_pad: int,
-                  eligible: np.ndarray | None = None) -> list[DistanceBlock]:
+                  eligible: np.ndarray | None = None, *,
+                  elig_dense: bool = False) -> list[DistanceBlock]:
         from repro.kernels import ops
         import jax.numpy as jnp
 
         t0 = time.perf_counter()
         n_subsets = len(id_lists)
-        lengths = np.fromiter((len(ids) for ids in id_lists), np.int32,
-                              count=n_subsets)
+        # Eligible-dense packing: tiles hold only the eligible rows; the
+        # block carries the packed row map. The pack is filter-dependent, so
+        # both the subset-row cache and the tile cache are bypassed.
+        if elig_dense:
+            row_lists = [np.flatnonzero(eligible[ids]) for ids in id_lists]
+            lengths = np.fromiter((len(rw) for rw in row_lists), np.int32,
+                                  count=n_subsets)
+        else:
+            row_lists = None
+            lengths = np.fromiter((len(ids) for ids in id_lists), np.int32,
+                                  count=n_subsets)
         # Route over the device plane when the bin packs at least one subset
         # per shard; thinner bins (the remainder after chunking) stay on a
         # single device — sharding them would only ship empty slabs.
@@ -444,10 +842,37 @@ class PallasBackend(DistanceBackend):
                 sharded = False
                 s_pad = n_subsets
 
-        tile_key = None if any(k is None for k in keys) \
-            else ("tile", tuple(keys), s_pad, p_pad, sharded)
         lens_pad = np.zeros(s_pad, np.int32)
         lens_pad[:n_subsets] = lengths
+        # Shard placement: deal subsets to tile slots in snake order of
+        # packed size so each shard's contiguous slab carries level work
+        # (``device_plane.balance_order``). The permutation is a pure
+        # function of the packed lengths — radius-independent, so cached
+        # tiles (which are reused across radii) stay valid — and slot->shard
+        # is what ``shard_cells`` reports, so ``shard_utilisation`` reads the
+        # levelled layout directly. ``inv[i]`` is subset i's tile slot.
+        inv = None
+        if sharded and self.placement == "sorted":
+            from repro.core.device_plane import balance_order
+            perm = balance_order(lens_pad, plane.n_shards)
+            inv = np.empty(s_pad, np.int64)
+            inv[perm] = np.arange(s_pad)
+
+        def slot(i: int) -> int:
+            return i if inv is None else int(inv[i])
+
+        def to_slots(arr):
+            if inv is None:
+                return arr
+            out = np.zeros_like(arr)
+            out[inv] = arr
+            return out
+
+        lens_ship = to_slots(lens_pad)
+        tile_key = None
+        if not elig_dense and not any(k is None for k in keys):
+            tile_key = ("tile", tuple(keys), s_pad, p_pad, sharded,
+                        self.placement if sharded else "none")
         cached_tile = self._cache_get(tile_key) if tile_key else None
         if cached_tile is not None:
             # Packed tiles already live on the device: skip gather, packing,
@@ -471,73 +896,174 @@ class PallasBackend(DistanceBackend):
             d = points.shape[1]
             x = np.zeros((s_pad, p_pad, d), np.float32)
             for i, (ids, key) in enumerate(zip(id_lists, keys)):
-                rows, slacks[i] = self._subset_rows(points, ids, key)
-                x[i, : len(ids)] = rows
+                if elig_dense:
+                    rows = np.ascontiguousarray(
+                        points[ids[row_lists[i]]], dtype=np.float32)
+                    slacks[i] = self._slack(rows)
+                else:
+                    rows, slacks[i] = self._subset_rows(points, ids, key)
+                x[slot(i), : lengths[i]] = rows
             if sharded:
                 # Commit the tile scattered over the mesh's data axis so the
                 # sharded dispatch starts from the right placement (a cached
                 # sharded tile stays resident exactly where it will be used).
-                x_dev, lens_dev = plane.put_sharded(x, lens_pad)
+                x_dev, lens_dev = plane.put_sharded(x, lens_ship)
             else:
                 x_dev = jnp.asarray(x)
-                lens_dev = jnp.asarray(lens_pad)
+                lens_dev = jnp.asarray(lens_ship)
             if tile_key is not None:
                 self._cache_put(tile_key, (x_dev, lens_dev, slacks),
                                 x.nbytes + slacks.nbytes)
 
         # Pruning radius r + slack, rounded *up* to fp32 so the device
         # comparison can never be tighter than the published slack contract.
-        r = np.zeros(s_pad, np.float32)
+        # ``r_orig`` is indexed by subset, the shipped vectors by tile slot.
+        r_orig = np.zeros(s_pad, np.float32)
         r_mask = np.asarray(radii, np.float64) + slacks
         with np.errstate(over="ignore"):    # nextafter(f32max) saturates to inf
-            r[:n_subsets] = np.nextafter(r_mask.astype(np.float32),
-                                         np.float32(np.inf))
-        r[:n_subsets][~np.isfinite(r_mask)] = np.float32(np.inf)
-        # Filtered dispatch: pack each subset's eligibility bits into the
-        # mask word layout. These words are the *only* extra traffic a filter
-        # adds — the tile (cached or not) is filter-independent, and the
-        # readback stays the same packed mask.
+            r_orig[:n_subsets] = np.nextafter(r_mask.astype(np.float32),
+                                              np.float32(np.inf))
+        r_orig[:n_subsets][~np.isfinite(r_mask)] = np.float32(np.inf)
+        r = to_slots(r_orig)
+        # Filtered dispatch (fold mode): pack each subset's eligibility bits
+        # into the mask word layout. These words are the *only* extra traffic
+        # a filter adds — the tile (cached or not) is filter-independent, and
+        # the readback stays the same packed mask. Eligible-dense tiles skip
+        # the fold (every packed row is eligible by construction).
         elig_words = el_counts = None
-        if eligible is not None:
+        if eligible is not None and not elig_dense:
             el = np.zeros((s_pad, p_pad), dtype=bool)
+            el_counts = np.zeros(n_subsets, np.int64)
             for i, ids in enumerate(id_lists):
-                el[i, : len(ids)] = eligible[ids]
-            el_counts = el.sum(axis=1).astype(np.int64)
+                eli = eligible[ids]
+                el[slot(i), : len(ids)] = eli
+                el_counts[i] = int(eli.sum())
             elig_words = pack_join_mask(el)        # (s_pad, ceil(p_pad/32))
         self.stats.t_pack_s += time.perf_counter() - t0
         self.stats.h2d_bytes += r.nbytes + \
             (elig_words.nbytes if elig_words is not None else 0) + \
             (0 if cached_tile is not None
-             else x.nbytes + lens_pad.nbytes)
+             else x.nbytes + lens_ship.nbytes)
 
-        t1 = time.perf_counter()
-        if sharded:
-            mask, cnt = plane.join_batched_masked(
-                x_dev, lens_dev, r, elig_words, bm=self.bm, bn=self.bn,
-                interpret=self.interpret)
-        else:
-            mask, cnt = ops.pairwise_l2_join_batched_masked(
-                x_dev, lens_dev, r, elig_words, bm=self.bm, bn=self.bn,
-                interpret=self.interpret)
-        mask = np.asarray(mask)
-        counts = np.asarray(cnt)
-        dt = time.perf_counter() - t1
-        self.stats.t_dispatch_s += dt
-        self.stats.d2h_bytes += mask.nbytes + counts.nbytes
+        # n_live: the diagonal bound the enumeration stage's empty-join test
+        # uses — eligible counts under a fold, packed lengths otherwise.
+        n_live = lengths.astype(np.int64) if el_counts is None else el_counts
+        # ---- tier 0: coarse mixed-precision prune (counts only) ----
+        pruned = None
+        cc = None
+        if self._prune_active(points.shape[1]):
+            # Coarse radius: the fp32 pruning radius widened by the coarse
+            # tier's own error budget — a second fp32-identity slack (the
+            # coarse pass accumulates in fp32 too) plus the bf16 coordinate
+            # rounding (2 * eps16 * max-norm, eps16 = 2^-8; the max norm is
+            # recovered from the cached slack, sqrt(S_norm) = slack /
+            # sqrt((64+4d)*eps32)), all scaled by (1 + prune_eps) headroom.
+            # Any pair the fp32 tier could join is therefore inside the
+            # coarse radius: coarse count <= diagonal bound proves the fp32
+            # join empty, and the singleton path the enumeration stage takes
+            # is decided by that bound alone — results stay bit-identical
+            # whether or not the fp32 tier ran. int8 adds its quantization
+            # slack inside the op itself.
+            d = points.shape[1]
+            eps16 = 2.0 ** -8
+            rtnorm = slacks / np.sqrt((64.0 + 4.0 * d) * _EPS32)
+            r_c = (r_mask + slacks + 2.0 * eps16 * rtnorm) \
+                * (1.0 + self.prune_eps)
+            rc_orig = np.zeros(s_pad, np.float32)
+            with np.errstate(over="ignore"):
+                rc_orig[:n_subsets] = np.nextafter(
+                    r_c.astype(np.float32), np.float32(np.inf))
+            rc = to_slots(rc_orig)
+            t_p = time.perf_counter()
+            if sharded:
+                cnt_c = plane.join_batched_counts(
+                    x_dev, lens_dev, rc, elig_words, dtype=self.prune_dtype,
+                    bm=self.bm, bn=self.bn, interpret=self.interpret)
+            else:
+                cnt_c = ops.pairwise_l2_join_batched_counts(
+                    x_dev, lens_dev, rc, elig_words, dtype=self.prune_dtype,
+                    bm=self.bm, bn=self.bn, interpret=self.interpret)
+            counts_c = np.asarray(cnt_c)
+            dtp = time.perf_counter() - t_p
+            self.stats.t_prune_s += dtp
+            self.stats.t_dispatch_s += dtp
+            self.stats.prune_tier_dispatches += 1
+            self.stats.h2d_bytes += rc.nbytes
+            self.stats.d2h_bytes += counts_c.nbytes
+            cc = counts_c[:n_subsets] if inv is None \
+                else counts_c[inv[:n_subsets]]
+            pruned = cc <= n_live
+            self.stats.cells_pruned += int(pruned.sum()) * p_pad * p_pad
+
+        # ---- tier 1: fp32 masked join on surviving subsets ----
+        mask = counts = None
+        sub_slots = None
+        if pruned is None or not pruned.all():
+            t1 = time.perf_counter()
+            if pruned is not None and pruned.any():
+                # Survivor sub-dispatch: gather surviving slots out of the
+                # committed tile on device (no re-pack, no H2D of rows).
+                surv = np.flatnonzero(~pruned)
+                slots_surv = surv if inv is None else inv[surv]
+                n_surv = len(surv)
+                s_sub = self._round(n_surv)
+                sub_sharded = sharded and n_surv >= plane.n_shards
+                if sub_sharded:
+                    s_sub = plane.shard_pad(s_sub)
+                idx_pad = np.zeros(s_sub, np.int64)
+                idx_pad[:n_surv] = slots_surv
+                lens_sub = np.zeros(s_sub, np.int32)
+                lens_sub[:n_surv] = lengths[surv]
+                r_sub = np.zeros(s_sub, np.float32)
+                r_sub[:n_surv] = r_orig[surv]
+                elig_sub = None
+                if elig_words is not None:
+                    elig_sub = np.zeros((s_sub, elig_words.shape[1]),
+                                        np.uint32)
+                    elig_sub[:n_surv] = elig_words[slots_surv]
+                x_sub = jnp.take(x_dev, jnp.asarray(idx_pad), axis=0)
+                if sub_sharded:
+                    m, c = plane.join_batched_masked(
+                        x_sub, lens_sub, r_sub, elig_sub, bm=self.bm,
+                        bn=self.bn, interpret=self.interpret)
+                else:
+                    m, c = ops.pairwise_l2_join_batched_masked(
+                        x_sub, lens_sub, r_sub, elig_sub, bm=self.bm,
+                        bn=self.bn, interpret=self.interpret)
+                sub_slots = {int(i): j for j, i in enumerate(surv)}
+            else:
+                if sharded:
+                    m, c = plane.join_batched_masked(
+                        x_dev, lens_dev, r, elig_words, bm=self.bm,
+                        bn=self.bn, interpret=self.interpret)
+                else:
+                    m, c = ops.pairwise_l2_join_batched_masked(
+                        x_dev, lens_dev, r, elig_words, bm=self.bm,
+                        bn=self.bn, interpret=self.interpret)
+            mask = np.asarray(m)
+            counts = np.asarray(c)
+            dt = time.perf_counter() - t1
+            self.stats.t_dispatch_s += dt
+            self.stats.d2h_bytes += mask.nbytes + counts.nbytes
+            if sharded:
+                self.stats.t_collective_s += dt
 
         self.stats.dispatches += 1
         self.stats.subsets += n_subsets
         self.stats.points_packed += int(lengths.sum())
         self.stats.points_padded += s_pad * p_pad - int(lengths.sum())
-        self.stats.join_pairs += int(counts[:n_subsets].sum())
+        bp = self.stats.bin_points.get(p_pad, (0, 0))
+        self.stats.bin_points[p_pad] = (
+            bp[0] + int(lengths.sum()),
+            bp[1] + s_pad * p_pad - int(lengths.sum()))
         if sharded:
             # Per-shard accounting: every device participated; utilisation is
-            # valid vs total join-block cells on each shard's slab.
+            # valid vs total join-block cells on each shard's slab (computed
+            # on the shipped, i.e. placement-permuted, lengths).
             self.stats.sharded_dispatches += 1
-            self.stats.t_collective_s += dt
             n_sh = plane.n_shards
             self.stats.ensure_shards(n_sh)
-            valid, total = plane.shard_cells(lens_pad, p_pad)
+            valid, total = plane.shard_cells(lens_ship, p_pad)
             for i in range(n_sh):
                 self.stats.shard_dispatches[i] += 1
                 self.stats.shard_valid_cells[i] += valid[i]
@@ -554,11 +1080,33 @@ class PallasBackend(DistanceBackend):
         out = []
         for i, ids in enumerate(id_lists):
             n = len(ids)
-            words = (n + 31) // 32
+            n_elig = None
+            if elig_dense:
+                n_elig = int(lengths[i])
+            elif el_counts is not None:
+                n_elig = int(el_counts[i])
+            rows_i = None
+            if elig_dense:
+                rows_i = row_lists[i]
+            if pruned is not None and pruned[i]:
+                # Coarse count at or below the diagonal bound: the fp32 join
+                # is provably empty off-diagonal, emit the mask-free block
+                # (the enumeration stage's singleton path never unpacks it).
+                self.stats.join_pairs += int(cc[i])
+                out.append(DistanceBlock(
+                    n=n, slack=float(slacks[i]), rescore=True,
+                    join_count=int(cc[i]), mask=None, n_eligible=n_elig,
+                    rows=rows_i))
+                continue
+            row = i if sub_slots is None else sub_slots[i]
+            row = slot(row) if sub_slots is None else row
+            npk = int(lengths[i])
+            words = (npk + 31) // 32
+            self.stats.join_pairs += int(counts[row])
             out.append(DistanceBlock(
-                n=n, mask=mask[i, :n, :words], slack=float(slacks[i]),
-                rescore=True, join_count=int(counts[i]),
-                n_eligible=None if el_counts is None else int(el_counts[i])))
+                n=n, mask=mask[row, :npk, :words], slack=float(slacks[i]),
+                rescore=True, join_count=int(counts[row]),
+                n_eligible=n_elig, rows=rows_i))
         return out
 
 

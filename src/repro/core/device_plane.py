@@ -119,6 +119,34 @@ def replicated_topk_merge(axis: str, diams, cand_ids, k: int):
     return -neg, c_all[sel]
 
 
+def balance_order(lengths: np.ndarray, n_shards: int) -> np.ndarray:
+    """Work-levelling shard placement: a permutation of ``range(len(lengths))``
+    that deals subsets round-robin in descending size order.
+
+    The plane assigns shard i the contiguous slab [i*S/n, (i+1)*S/n), so a
+    length-sorted batch (the size-binned packer emits near-sorted bins) piles
+    the big subsets onto the first shards. Dealing the descending sort
+    across the n slabs in boustrophedon (snake) order — forward on even
+    passes, backward on odd — pairs each shard's large draws with small
+    ones, keeping slab work sums within one subset of each other (plain
+    round-robin systematically favours low shard ids). The sort key is the *packed* work
+    proxy (valid length; eligible counts when a filter packs eligible-dense),
+    not the pruning radius: placement must stay radius-independent because
+    committed tiles are reused across radii, so the ISSUE's "radius-sorted"
+    placement is realised as size-sorted — the quantity that actually sets
+    per-shard join cost. ``len(lengths)`` must be a shard multiple (callers
+    pad first); returns ``perm`` such that ``x[perm]`` is the levelled order
+    and ``out[np.argsort(perm)]`` restores dispatch order on readback.
+    """
+    s = len(lengths)
+    assert s % n_shards == 0, (s, n_shards)
+    order = np.argsort(-np.asarray(lengths, np.int64), kind="stable")
+    ranks = order.reshape(-1, n_shards).copy()   # row = one dealing pass
+    ranks[1::2] = ranks[1::2, ::-1]              # snake: reverse odd passes
+    # shard i's contiguous slab = column i across passes
+    return np.ascontiguousarray(ranks.T).reshape(-1)
+
+
 class DevicePlane:
     """One mesh + the serving-axis contract, shared by every sharded tier."""
 
@@ -196,6 +224,55 @@ class DevicePlane:
                 f"sharded join needs S % n_shards == 0, got S={s} over "
                 f"{self.n_shards} shards (pad with zero-length subsets)")
         fn = self._join_fn(bm, bn, impl, interpret, elig is not None)
+        if elig is None:
+            return fn(x, lengths, r)
+        return fn(x, lengths, r, elig)
+
+    def _counts_fn(self, dtype: str, bm: int, bn: int, impl: str | None,
+                   interpret: bool | None, with_elig: bool):
+        key = ("counts", dtype, bm, bn, impl, interpret, with_elig)
+        fn = self._join_fns.get(key)
+        if fn is None:
+            from repro.kernels import ops
+            ax = self.axis
+
+            if with_elig:
+                def body(x_loc, len_loc, r_loc, e_loc):
+                    return ops.join_batched_counts_local(
+                        x_loc, len_loc, r_loc, e_loc, dtype=dtype, bm=bm,
+                        bn=bn, impl=impl, interpret=interpret)
+            else:
+                def body(x_loc, len_loc, r_loc):
+                    return ops.join_batched_counts_local(
+                        x_loc, len_loc, r_loc, dtype=dtype, bm=bm, bn=bn,
+                        impl=impl, interpret=interpret)
+
+            n_in = 4 if with_elig else 3
+            sharded = shard_map(body, mesh=self.mesh,
+                                in_specs=(P(ax),) * n_in,
+                                out_specs=P(ax),
+                                check_rep=False)
+            fn = jax.jit(sharded,
+                         in_shardings=(self.sharding(P(ax)),) * n_in)
+            self._join_fns[key] = fn
+        return fn
+
+    def join_batched_counts(self, x, lengths, r, elig=None, *,
+                            dtype: str = "bf16", bm: int = 128, bn: int = 128,
+                            impl: str | None = None,
+                            interpret: bool | None = None):
+        """Sharded coarse prune-tier counts: the cascade's tier 0 on the
+        plane. Same sharding contract as :meth:`join_batched_masked` — S
+        sharded over ``data``, one local counts pass per shard, no
+        collectives — but the readback is S int32 words instead of the packed
+        mask, so the prune decision costs almost no D2H. ``elig`` uses the
+        packed uint32 word layout."""
+        s = x.shape[0]
+        if s % self.n_shards:
+            raise ValueError(
+                f"sharded counts need S % n_shards == 0, got S={s} over "
+                f"{self.n_shards} shards (pad with zero-length subsets)")
+        fn = self._counts_fn(dtype, bm, bn, impl, interpret, elig is not None)
         if elig is None:
             return fn(x, lengths, r)
         return fn(x, lengths, r, elig)

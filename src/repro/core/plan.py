@@ -48,6 +48,54 @@ def query_bitset(dataset: KeywordDataset, query: Sequence[int]) -> np.ndarray:
     return bs
 
 
+class BatchPlanContext:
+    """Per-batch memoization shared by planning and keyword grouping.
+
+    One batch touches the same few keywords over and over: every scale's
+    covering-bucket selection re-reads the same I_khb rows, and every subset
+    task re-runs a searchsorted membership test per query keyword
+    (``subset_search.group_by_keyword`` — the dominant plan-stage cost in the
+    batch bench). The context converts both into per-batch one-time work:
+
+      * :meth:`kw_mask` — a boolean corpus mask per keyword, built once and
+        reused by every bitset and every keyword-group restriction (a boolean
+        gather per group instead of a searchsorted per (task, keyword));
+      * :meth:`covering` — the per-(scale, query) covering-bucket array,
+        computed once even when duplicate queries share a batch or the
+        fallback stage revisits a scale.
+
+    The context is valid for exactly one batch: the corpus is frozen while a
+    batch runs (streaming absorbs land between batches), so masks never go
+    stale within its lifetime. Build a fresh one per ``query_batch`` call.
+    """
+
+    def __init__(self, dataset: KeywordDataset):
+        self.dataset = dataset
+        self._kw_masks: dict[int, np.ndarray] = {}
+        self._covers: dict[tuple, np.ndarray] = {}
+
+    def kw_mask(self, v: int) -> np.ndarray:
+        m = self._kw_masks.get(v)
+        if m is None:
+            m = np.zeros(self.dataset.n, dtype=bool)
+            m[self.dataset.ikp.row(int(v))] = True
+            self._kw_masks[v] = m
+        return m
+
+    def query_bitset(self, query: Sequence[int]) -> np.ndarray:
+        bs = np.zeros(self.dataset.n, dtype=bool)
+        for v in query:
+            bs |= self.kw_mask(v)
+        return bs
+
+    def covering(self, hi, scale: int, query: Sequence[int]) -> np.ndarray:
+        key = (id(hi), scale, tuple(query))
+        cover = self._covers.get(key)
+        if cover is None:
+            cover = self._covers[key] = covering_buckets(hi, query)
+        return cover
+
+
 def covering_buckets(hi, query: Sequence[int]) -> np.ndarray:
     """Buckets containing all query keywords: intersect I_khb rows by counting."""
     counts = np.zeros(hi.n_buckets, dtype=np.int32)
@@ -63,7 +111,8 @@ def plan_scale(index: PromishIndex, scale: int,
                explored: dict[int, set[bytes]] | None,
                stats: PlanStats | None = None,
                delta=None,
-               eligible: np.ndarray | None = None) -> list[SubsetTask]:
+               eligible: np.ndarray | None = None,
+               ctx: BatchPlanContext | None = None) -> list[SubsetTask]:
     """Collect every subset to search at ``scale`` for the active queries.
 
     ``explored`` maps query index -> Algorithm-2 hash set (exact set-hash on
@@ -95,7 +144,8 @@ def plan_scale(index: PromishIndex, scale: int,
     for qidx in active:
         bs = bitsets[qidx]
         if delta is None:
-            cover = covering_buckets(hi, queries[qidx])
+            cover = ctx.covering(hi, scale, queries[qidx]) if ctx is not None \
+                else covering_buckets(hi, queries[qidx])
             d_buckets = d_ids = None
         else:
             cover = delta.covering_buckets(scale, queries[qidx])

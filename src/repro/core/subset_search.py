@@ -34,6 +34,7 @@ blowup; approximate blocks only ever admit *extra* work, never wrong results.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -74,20 +75,28 @@ _sorted_member = sorted_member
 
 
 def group_by_keyword(f_ids: np.ndarray, query: Sequence[int],
-                     dataset: KeywordDataset) -> list[np.ndarray]:
+                     dataset: KeywordDataset, ctx=None) -> list[np.ndarray]:
     """SL: one id-array per query keyword (a point may appear in several).
     ``f_ids`` must be sorted (plan emits sorted unique ids); membership runs
-    through searchsorted against each keyword's sorted I_kp row."""
+    through searchsorted against each keyword's sorted I_kp row, or — with a
+    ``ctx`` (:class:`repro.core.plan.BatchPlanContext`) — through the
+    context's per-keyword corpus masks, built once per batch instead of a
+    searchsorted per (subset, keyword)."""
+    if ctx is not None:
+        return [f_ids[ctx.kw_mask(v)[f_ids]] for v in query]
     return [f_ids[_sorted_member(f_ids, dataset.ikp.row(v))] for v in query]
 
 
 def local_groups(f_ids: np.ndarray, query: Sequence[int],
                  dataset: KeywordDataset,
-                 eligible: np.ndarray | None = None) -> list[np.ndarray] | None:
+                 eligible: np.ndarray | None = None,
+                 ctx=None) -> list[np.ndarray] | None:
     """Keyword groups as *row indices into f_ids* (Alg. 3 steps 2-5), or None
     when some query keyword has no representative in the subset (no candidate
     can exist — Alg. 3 bails before any distance work). Row indices come from
-    ``np.searchsorted`` over the already-sorted ``f_ids``.
+    ``np.searchsorted`` over the already-sorted ``f_ids``, or directly from
+    the batch context's keyword masks when one is supplied (same rows, no
+    per-task searchsorted).
 
     ``eligible`` (the (N,) predicate mask of a filtered query) restricts each
     group to eligible points. Enumeration only ever indexes adjacency rows
@@ -97,6 +106,16 @@ def local_groups(f_ids: np.ndarray, query: Sequence[int],
     candidate. A group emptied by the filter bails exactly like a missing
     keyword — no eligible candidate can exist in this subset.
     """
+    if ctx is not None:
+        groups = []
+        for v in query:
+            rows = np.flatnonzero(ctx.kw_mask(v)[f_ids])
+            if eligible is not None:
+                rows = rows[eligible[f_ids[rows]]]
+            if len(rows) == 0:
+                return None
+            groups.append(rows)
+        return groups
     groups = group_by_keyword(f_ids, query, dataset)
     if eligible is not None:
         groups = [g[eligible[g]] for g in groups]
@@ -115,18 +134,21 @@ def greedy_group_order(m_counts: np.ndarray) -> list[int]:
     q = m_counts.shape[0]
     if q == 1:
         return [0]
+    iu, ju = _triu_indices(q)
+    # stable argsort on the edge weights reproduces the classic
+    # (count, i, j) tuple sort: ties keep the lexicographic (i, j) order
+    # _triu_indices generates them in.
     order: list[int] = []
-    edges = [(int(m_counts[i, j]), i, j) for i in range(q) for j in range(i + 1, q)]
-    edges.sort()
-    for _, i, j in edges:
-        if i not in order:
-            order.append(i)
-        if j not in order:
-            order.append(j)
+    seen = [False] * q
+    for e in np.argsort(m_counts[iu, ju], kind="stable"):
+        for v in (int(iu[e]), int(ju[e])):
+            if not seen[v]:
+                seen[v] = True
+                order.append(v)
         if len(order) == q:
             break
     for i in range(q):          # isolated groups (no surviving pairs)
-        if i not in order:
+        if not seen[i]:
             order.append(i)
     return order
 
@@ -168,22 +190,36 @@ def unpack_join_mask(mask: np.ndarray, n_cols: int) -> np.ndarray:
                          count=n_cols)
 
 
+_TRIU_CACHE: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+
+def _triu_indices(q: int) -> tuple[np.ndarray, np.ndarray]:
+    out = _TRIU_CACHE.get(q)
+    if out is None:
+        out = _TRIU_CACHE[q] = np.triu_indices(q, 1)
+    return out
+
+
 def pair_counts(adj: np.ndarray, groups: list[np.ndarray]) -> np.ndarray:
     """Inner-join edge weights M[vi, vj] (Alg. 3 steps 6-18): survivors of
-    the join between each group pair, counted on the 0/1 adjacency."""
+    the join between each group pair, counted on the 0/1 adjacency. One
+    column-sum per group over its adjacency rows, then a gather per pair —
+    O(q*n + q^2*|g|) instead of a (|gi|, |gj|) slice per pair."""
     q = len(groups)
     m_counts = np.zeros((q, q), dtype=np.int64)
+    if q < 2:
+        return m_counts
+    colsum = [adj[g].sum(axis=0, dtype=np.int64) for g in groups]
     for i in range(q):
-        rows = adj[groups[i]]
+        ci = colsum[i]
         for j in range(i + 1, q):
-            m_counts[i, j] = m_counts[j, i] = int(
-                rows[:, groups[j]].sum())
+            m_counts[i, j] = m_counts[j, i] = int(ci[groups[j]].sum())
     return m_counts
 
 
 def _frontier_tuples(adj: np.ndarray, ordered_groups: list[np.ndarray],
                      limit: int, pts: np.ndarray | None = None,
-                     thr: float = np.inf
+                     thr: float = np.inf, d2: np.ndarray | None = None
                      ) -> tuple[np.ndarray, np.ndarray | None] | None:
     """Vectorized Alg. 4: expand candidate prefixes group-by-group over the
     join adjacency. Each frontier row keeps the bitwise-AND of its members'
@@ -198,28 +234,37 @@ def _frontier_tuples(adj: np.ndarray, ordered_groups: list[np.ndarray],
     radius is a stale upper bound), and yields each completed tuple's
     diameter for free as the running max of refined pair distances.
 
+    ``d2`` (a precomputed (n, n) float64 *squared*-distance matrix over the
+    subset) replaces the per-extension einsum with a table gather — cheaper
+    than recomputing coordinate differences whenever total candidate pairs
+    exceed the n^2 build cost, which the caller decides by subset size.
+
     Returns ``(tuples (T, q), diams (T,) | None)``, or None once the frontier
     exceeds ``limit`` (caller falls back to the pruned recursion)."""
     g0 = np.asarray(ordered_groups[0], dtype=np.int64)
     prefix = g0[:, None]
     compat = adj[g0]
     thr2 = thr * thr
-    d2max = np.zeros(len(g0)) if pts is not None else None
+    refine = pts is not None or d2 is not None
+    d2max = np.zeros(len(g0)) if refine else None
     for g in ordered_groups[1:]:
         g = np.asarray(g, dtype=np.int64)
         fi, gj = np.nonzero(compat[:, g])
         if fi.size > limit:
             return None
         cand = g[gj]
-        if pts is not None:
-            diff = pts[prefix[fi]] - pts[cand][:, None, :]   # (C, i, d)
-            d2 = np.maximum(np.einsum("cid,cid->ci", diff, diff)
-                            .max(axis=1), d2max[fi])
-            keep = d2 <= thr2
-            fi, cand, d2max = fi[keep], cand[keep], d2[keep]
+        if refine:
+            if d2 is not None:
+                d2new = d2[prefix[fi], cand[:, None]].max(axis=1)   # (C, i) -> (C,)
+            else:
+                diff = pts[prefix[fi]] - pts[cand][:, None, :]      # (C, i, d)
+                d2new = np.einsum("cid,cid->ci", diff, diff).max(axis=1)
+            d2new = np.maximum(d2new, d2max[fi])
+            keep = d2new <= thr2
+            fi, cand, d2max = fi[keep], cand[keep], d2new[keep]
         prefix = np.concatenate([prefix[fi], cand[:, None]], axis=1)
         compat = compat[fi] & adj[cand]
-    return prefix, (np.sqrt(d2max) if pts is not None else None)
+    return prefix, (np.sqrt(d2max) if refine else None)
 
 
 def tuple_diameters_f64(pts: np.ndarray) -> np.ndarray:
@@ -374,10 +419,35 @@ def enumerate_with_distances(f_ids: np.ndarray, gl: list[np.ndarray],
     return len(tuples)
 
 
+# Subset size below which the mask path precomputes the full float64
+# squared-distance table for frontier refinement: the n^2*d build is cheaper
+# than per-extension coordinate einsums as soon as the frontier materialises
+# more candidate pairs than n^2, which small/mid subsets essentially always
+# do. Large subsets keep the streaming einsum (no quadratic materialisation).
+_D2_TABLE_MAX_N = 512
+
+
+def _sq_dists_f64(pts: np.ndarray) -> np.ndarray:
+    """(n, d) float64 -> (n, n) squared L2 distances.
+
+    Difference-based (not the norms identity): the table must be *bitwise*
+    interchangeable with the frontier's per-extension coordinate einsum, so
+    it uses the same subtract-then-einsum arithmetic, chunked to bound the
+    (rows, n, d) temporary."""
+    n, d = pts.shape
+    d2 = np.empty((n, n), dtype=np.float64)
+    step = max(1, (1 << 22) // max(1, n * d))
+    for i in range(0, n, step):
+        diff = pts[i:i + step, None, :] - pts[None, :, :]
+        d2[i:i + step] = np.einsum("ijd,ijd->ij", diff, diff)
+    return d2
+
+
 def enumerate_with_block(f_ids: np.ndarray, gl: list[np.ndarray],
                          query: Sequence[int], dataset: KeywordDataset,
                          pq: TopK, block, *,
-                         frontier_limit: int = DEFAULT_FRONTIER_LIMIT) -> int:
+                         frontier_limit: int = DEFAULT_FRONTIER_LIMIT,
+                         timers: dict | None = None) -> int:
     """Host enumeration over a backend ``DistanceBlock``.
 
     Dense blocks re-pack the mask at the live r_k; mask-only device blocks
@@ -385,7 +455,18 @@ def enumerate_with_block(f_ids: np.ndarray, gl: list[np.ndarray],
     radius, a safe superset of the live one). A block whose inner join has no
     off-diagonal pair at the dispatch radius short-circuits to the singleton
     scan — the adaptive-radii feedback that skips host enumeration for
-    subsets the kernel already proved empty. Mutates ``pq``; returns N_p.
+    subsets the kernel already proved empty (the coarse bf16 prune tier
+    lands here too: a pruned block carries ``join_count <= n_live`` and is
+    never unpacked). Mutates ``pq``; returns N_p.
+
+    ``block.rows`` marks an eligible-dense device block (low-selectivity
+    packing): the mask covers only the subset-local eligible row positions
+    in ``rows``, so groups — already restricted to eligible points — are
+    remapped into that packed row space before the adjacency is consumed.
+
+    ``timers`` (optional dict) accumulates ``rescore_s``: wall time in the
+    float64 settlement of surviving tuples (table build + refine/recursion),
+    the cascade's exact tier.
     """
     if block.dist is not None:
         return enumerate_with_distances(
@@ -410,25 +491,59 @@ def enumerate_with_block(f_ids: np.ndarray, gl: list[np.ndarray],
         return _offer_singletons(common, f_ids, query, dataset, pq,
                                   gate=True)
 
+    rows = getattr(block, "rows", None)
+    if rows is not None:
+        # Eligible-dense block: translate groups (subset-local rows, all
+        # eligible by construction) into the packed eligible-row space and
+        # restrict the id/coordinate view to the packed rows.
+        gl = [np.searchsorted(rows, g) for g in gl]
+        f_ids = f_ids[rows]
+    n_adj = block.n if rows is None else len(rows)
     # mask=None marks an infinite-radius block (all pairs join by
     # construction; the backend skipped the device round-trip).
-    adj = np.ones((block.n, block.n), dtype=np.uint8) if block.mask is None \
-        else unpack_join_mask(block.mask, block.n)
+    adj = np.ones((n_adj, n_adj), dtype=np.uint8) if block.mask is None \
+        else unpack_join_mask(block.mask, n_adj)
+    # Live-row restriction: the expansion only ever consults rows that are
+    # members of some keyword group — the rest of the subset exists solely
+    # to have joined on the device. Restricting the adjacency, coordinates,
+    # and the float64 table to the group union shrinks the dominant
+    # settlement cost from |subset|^2 to |live|^2 without changing a single
+    # value (every distance entry depends only on its own row pair).
+    live = np.unique(np.concatenate(gl))
+    if len(live) < n_adj:
+        remap = np.empty(n_adj, np.int64)
+        remap[live] = np.arange(len(live))
+        gl = [remap[g] for g in gl]
+        f_ids = f_ids[live]
+        adj = adj[np.ix_(live, live)]
+        n_adj = len(live)
     order = greedy_group_order(pair_counts(adj, gl))
     ordered_groups = [gl[i] for i in order]
+    t0 = time.perf_counter() if timers is not None else 0.0
     pts = np.asarray(dataset.points[f_ids], dtype=np.float64)
+    d2 = _sq_dists_f64(pts) if n_adj <= _D2_TABLE_MAX_N else None
     # The mask prunes at the (stale) dispatch radius; the float64 refine
     # inside the expansion re-prunes at the live r_k and hands back exact
     # diameters, subsuming the batched rescore.
-    out = _frontier_tuples(adj, ordered_groups, frontier_limit, pts=pts,
-                           thr=pq.kth_diameter())
+    out = _frontier_tuples(adj, ordered_groups, frontier_limit,
+                           pts=None if d2 is not None else pts,
+                           thr=pq.kth_diameter(), d2=d2)
     if out is None:
         # Mask too loose for vectorized expansion: rebuild exact float64
         # distances and run the live-r_k recursion (no slack, no rescore).
-        return _enumerate_recursive(f_ids, ordered_groups, query, dataset,
-                                    pq, pairwise_l2_numpy(pts, pts),
-                                    0.0, False)
+        # Always through pairwise_l2_numpy — the recursion's historical
+        # distance source — so fallback results stay bit-identical.
+        dist = pairwise_l2_numpy(pts, pts)
+        explored = _enumerate_recursive(f_ids, ordered_groups, query, dataset,
+                                        pq, dist, 0.0, False)
+        if timers is not None:
+            timers["rescore_s"] = timers.get("rescore_s", 0.0) \
+                + time.perf_counter() - t0
+        return explored
     tuples, diams = out
+    if timers is not None:
+        timers["rescore_s"] = timers.get("rescore_s", 0.0) \
+            + time.perf_counter() - t0
     _offer_tuples(tuples, diams, f_ids, query, dataset, pq)
     return len(tuples)
 

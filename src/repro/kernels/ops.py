@@ -91,6 +91,130 @@ def _xla_join_batched_masked(x, lengths, r, with_sq):
     return mask, cnt
 
 
+def _elig_dense(elig, p):
+    """Packed (S, ceil(P/32)) uint32 eligibility words -> dense (S, P) bool."""
+    col = jnp.arange(p)
+    return ((elig[:, col // 32] >> (col % 32).astype(jnp.uint32))
+            & jnp.uint32(1)) > 0
+
+
+def _xla_join_batched_counts(x, lengths, r, elig_row, dtype):
+    """XLA lowering of the coarse prune tier: per-subset join counts only.
+
+    ``dtype`` picks the coarse arithmetic:
+
+      * ``"bf16"`` — coordinates round to bfloat16, Gram matmul at bf16
+        input precision with fp32 accumulation, self-norms computed from the
+        same bf16 values in fp32. Identical math to the Pallas prune kernel
+        (modulo reduction order, which the caller's slack radius covers).
+      * ``"int8"`` — symmetric per-subset quantization
+        ``q = round(x * 127 / maxabs)``; Gram and norms are *exact* int32,
+        and the threshold is widened on the integer side by the worst-case
+        quantization slack ``sqrt(d) * maxabs / 127`` (0.5 rounding error
+        per coordinate, two endpoints), so the integer count is again a
+        guaranteed upper bound of the fp32 join count.
+
+    ``elig_row`` is a dense (S, P) bool eligibility mask (or None). Returns
+    counts (S,) int32.
+    """
+    n_subsets, p, d = x.shape
+    lengths = jnp.asarray(lengths, jnp.int32).reshape((n_subsets,))
+    rr = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (n_subsets,))
+    valid_row = jnp.arange(p)[None, :] < lengths[:, None]        # (S, P)
+    if elig_row is not None:
+        valid_row = valid_row & elig_row
+    if dtype == "int8":
+        xf = x.astype(jnp.float32)
+        maxabs = jnp.maximum(jnp.max(jnp.abs(xf), axis=(1, 2)),
+                             jnp.float32(1e-30))                 # (S,)
+        scale = jnp.float32(127.0) / maxabs
+        q = jnp.round(xf * scale[:, None, None]).astype(jnp.int8)
+        qi = q.astype(jnp.int32)
+        n2 = jnp.sum(qi * qi, axis=-1)                           # (S, P) exact
+        gram = jax.lax.dot_general(q, q, (((2,), (2,)), ((0,), (0,))),
+                                   preferred_element_type=jnp.int32)
+        sq = n2[:, :, None] + n2[:, None, :] - 2 * gram          # exact int32
+        # ||x_i - x_j|| >= (||q_i - q_j|| - sqrt(d)) / scale: include iff
+        # ||q||^2 <= (r*scale + sqrt(d))^2, +1 absorbs the fp32 threshold
+        # rounding (the quadratic fits int32: d * 254^2).
+        rq = rr * scale + jnp.float32(d) ** 0.5
+        thr = (jnp.ceil(rq * rq) + 1.0).astype(jnp.int32)
+        joined = sq <= thr[:, None, None]
+    elif dtype == "bf16":
+        xb = x.astype(jnp.bfloat16)
+        xf = xb.astype(jnp.float32)
+        r2 = jnp.square(rr)
+        n2 = jnp.sum(xf * xf, axis=-1)                           # (S, P)
+        gram = jax.lax.dot_general(xb, xb, (((2,), (2,)), ((0,), (0,))),
+                                   preferred_element_type=jnp.float32)
+        sq = jnp.maximum(n2[:, :, None] + n2[:, None, :] - 2.0 * gram, 0.0)
+        joined = sq <= r2[:, None, None]
+    else:
+        raise ValueError(f"unknown prune dtype: {dtype!r}")
+    joined = joined & valid_row[:, :, None] & valid_row[:, None, :]
+    return jnp.sum(joined, axis=(1, 2), dtype=jnp.int32)
+
+
+def join_batched_counts_local(x, lengths, r, elig=None, *, dtype: str = "bf16",
+                              bm: int = 128, bn: int = 128,
+                              impl: str | None = None,
+                              interpret: bool | None = None):
+    """Un-jit'd coarse prune-tier counts, safe to call under an outer trace
+    (``core.device_plane`` shard_maps it). ``elig`` uses the packed uint32
+    word layout shared with the masked join; the Pallas lowering consumes it
+    as a dense fp32 row (unpacked at trace time). ``impl="pallas"`` requires
+    ``dtype="bf16"`` — the int8 path is XLA-only (int8 Gram through Mosaic is
+    a ROADMAP item). Returns counts (S,) int32."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    if impl == "pallas" and dtype != "bf16":
+        impl = "xla"
+    interpret = _default_interpret() if interpret is None else interpret
+    p = x.shape[1]
+    elig_row = None if elig is None \
+        else _elig_dense(jnp.asarray(elig, jnp.uint32), p)
+    if impl == "xla":
+        return _xla_join_batched_counts(x, lengths, r, elig_row, dtype)
+    ones = jnp.ones(x.shape[:2], jnp.float32) if elig_row is None \
+        else elig_row.astype(jnp.float32)
+    cnt = _pairwise.pairwise_l2_join_batched_prune(
+        x, lengths, r, ones, bm=bm, bn=bn, interpret=interpret)
+    return cnt.sum(axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "bm", "bn", "impl",
+                                             "interpret"))
+def _join_batched_counts(x, lengths, r, elig, *, dtype, bm, bn, impl,
+                         interpret):
+    return join_batched_counts_local(x, lengths, r, elig, dtype=dtype, bm=bm,
+                                     bn=bn, impl=impl, interpret=interpret)
+
+
+def pairwise_l2_join_batched_counts(x: jax.Array, lengths: jax.Array,
+                                    r: jax.Array | float,
+                                    elig: jax.Array | None = None, *,
+                                    dtype: str = "bf16", bm: int = 128,
+                                    bn: int = 128, impl: str | None = None,
+                                    interpret: bool | None = None):
+    """Coarse mixed-precision threshold-join counts (the cascade's tier 0).
+
+    Same batching contract as :func:`pairwise_l2_join_batched_masked` but
+    counts-only: no mask is materialised, no dense block, the readback is S
+    int32 words. Call with the error-widened coarse radii; a subset whose
+    count is at or below its live diagonal provably has no off-diagonal fp32
+    pair, so the fp32 masked join can skip it. ``dtype`` is "bf16" or
+    "int8" (int8 is XLA-only)."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    interpret = _default_interpret() if interpret is None else interpret
+    return _join_batched_counts(x, lengths, r, elig, dtype=dtype, bm=bm,
+                                bn=bn, impl=impl, interpret=interpret)
+
+
 def _fold_eligibility(mask, cnt, elig):
     """AND a packed per-subset eligibility vector into the packed join mask.
 

@@ -184,6 +184,90 @@ def pairwise_l2_join_batched(x: jax.Array, lengths: jax.Array,
     return sq[:, :p, :p], cnt
 
 
+def _prune_block(a, b):
+    """sq-L2 block from bf16 tiles: norms in fp32, Gram on the bf16 MXU.
+
+    The matmul runs at bf16 input precision (the point of the prune tier —
+    half the MXU input bandwidth), accumulated in fp32; the self-norm terms
+    are computed from the *same* bf16 values upcast to fp32, so the only
+    error sources are the bf16 rounding of the coordinates (bounded by the
+    caller's slack radius) and the fp32 accumulation (covered by the fp32
+    slack term)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    a2 = jnp.sum(af * af, axis=1, keepdims=True)   # (bm, 1)
+    b2 = jnp.sum(bf * bf, axis=1, keepdims=True)   # (bn, 1)
+    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (bm, bn)
+    return jnp.maximum(a2 + b2.T - 2.0 * ab, 0.0)
+
+
+def _batched_prune_kernel(len_ref, r2_ref, a_ref, b_ref, ea_ref, eb_ref,
+                          cnt_ref, *, bm: int, bn: int):
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    sq = _prune_block(a_ref[0], b_ref[0])
+    n_valid = len_ref[s]
+    rows = (i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)) < n_valid
+    cols = (j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)) < n_valid
+    valid = rows & cols & (ea_ref[0][:, None] > 0.0) & (eb_ref[0][None, :] > 0.0)
+    cnt_ref[0, 0, 0] = jnp.sum((sq <= r2_ref[s]) & valid, dtype=jnp.int32)
+
+
+def pairwise_l2_join_batched_prune(x: jax.Array, lengths: jax.Array,
+                                   r: jax.Array | float, elig: jax.Array, *,
+                                   bm: int = 128, bn: int = 128,
+                                   interpret: bool = False) -> jax.Array:
+    """Coarse bf16 threshold-join: per-subset join *counts* only, no mask.
+
+    The cascade's pruning tier. ``x`` is (S, P, d) **bfloat16** (cast outside
+    the call so the H2D transfer itself is halved); ``r`` carries the
+    error-widened coarse radii (``PallasBackend`` computes
+    ``(r + slack32 + slack16) * (1 + eps)``), so the coarse count is a
+    guaranteed upper bound of the fp32 join count. A subset whose coarse
+    count stays at or below its live diagonal cannot produce an off-diagonal
+    fp32 pair — the fp32 tier (and its 32x-heavier mask readback) is skipped
+    for it entirely.
+
+    ``elig`` is a dense (S, P) fp32 0/1 eligibility row (all-ones when no
+    filter is active): ineligible points drop out of the counts so the
+    diagonal bound matches the fp32 tier's eligible-pair counts.
+
+    Returns counts (S, gm, gn) int32 (``sum(axis=(1, 2))`` per subset).
+    """
+    n_subsets, p, d = x.shape
+    gm = pl.cdiv(p, bm)
+    gn = pl.cdiv(p, bn)
+    p_pad = max(gm * bm, gn * bn)
+    x_p = jnp.pad(x.astype(jnp.bfloat16), ((0, 0), (0, p_pad - p), (0, 0)))
+    e_p = jnp.pad(jnp.asarray(elig, jnp.float32), ((0, 0), (0, p_pad - p)))
+    lengths = jnp.asarray(lengths, jnp.int32).reshape((n_subsets,))
+    r2 = jnp.square(jnp.broadcast_to(jnp.asarray(r, jnp.float32), (n_subsets,)))
+
+    kern = functools.partial(_batched_prune_kernel, bm=bm, bn=bn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_subsets, gm, gn),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda s, i, j, *_: (s, i, 0)),
+            pl.BlockSpec((1, bn, d), lambda s, i, j, *_: (s, j, 0)),
+            pl.BlockSpec((1, bm), lambda s, i, j, *_: (s, i)),
+            pl.BlockSpec((1, bn), lambda s, i, j, *_: (s, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1), lambda s, i, j, *_: (s, i, j)),
+        ],
+    )
+    (cnt,) = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_subsets, gm, gn), jnp.int32)],
+        interpret=interpret,
+    )(lengths, r2, x_p, x_p, e_p, e_p)
+    return cnt
+
+
 def _pack_bits_mxu(bits: jax.Array, bn: int) -> jax.Array:
     """(bm, bn) 0/1 fp32 -> (bm, bn//32) uint32 words, LSB-first per word.
 

@@ -152,6 +152,25 @@ class PipelineStats:
     filtered_subsets: int = 0
     h2d_bytes: int = 0
     d2h_bytes: int = 0
+    # Cascade accounting (ISSUE 6): the three-tier distance cascade splits
+    # device time into the coarse bf16 count pass (``t_prune_s``), the fp32
+    # masked join (the remainder of ``t_dispatch_s``), and the host float64
+    # settlement of surviving tuples (``t_rescore_s``, measured inside the
+    # enumeration stage). ``cells_pruned`` counts fp32 join cells the coarse
+    # tier proved empty and never dispatched. Cost-model routing lands in
+    # ``host_routed_dispatches`` (bins the crossover model sent to the f64
+    # host loop instead of the device). ``bin_occupancy`` maps each size
+    # class (padded width) to [valid, padded] packed point counts, and
+    # ``bin_strategy`` names the binning that produced it.
+    prune_tier_dispatches: int = 0
+    cells_pruned: int = 0
+    t_prune_s: float = 0.0
+    t_rescore_s: float = 0.0
+    t_host_s: float = 0.0
+    host_routed_dispatches: int = 0
+    host_routed_subsets: int = 0
+    bin_occupancy: dict = dataclasses.field(default_factory=dict)
+    bin_strategy: str = ""
 
     @property
     def dispatches_per_scale(self) -> list[int]:
@@ -179,6 +198,40 @@ class PipelineStats:
             "enumerate_s": round(self.t_enumerate_s, 6),
             "collective_s": round(self.t_collective_s, 6),
             "cache_hit_rate": round(self.cache_hits / probed, 4) if probed else None,
+        }
+
+    @property
+    def padded_cell_ratio(self) -> float | None:
+        """Fraction of dispatched join-block cells that were padding (the
+        quantity size-binning exists to minimise); None with no dispatches."""
+        total = sum(self.shard_total_cells)
+        if not total:
+            return None
+        return round(1.0 - sum(self.shard_valid_cells) / total, 6)
+
+    @property
+    def cascade(self) -> dict:
+        """JSON-ready per-tier cascade summary for the benchmark trajectory."""
+        return {
+            "prune_tier_dispatches": self.prune_tier_dispatches,
+            "cells_pruned": self.cells_pruned,
+            "prune_s": round(self.t_prune_s, 6),
+            "join_s": round(max(self.t_dispatch_s - self.t_prune_s
+                                - self.t_host_s, 0.0), 6),
+            "rescore_s": round(self.t_rescore_s, 6),
+            "host_routed_dispatches": self.host_routed_dispatches,
+            "host_routed_subsets": self.host_routed_subsets,
+            "host_s": round(self.t_host_s, 6),
+        }
+
+    @property
+    def binning(self) -> dict:
+        """JSON-ready size-class occupancy for the benchmark trajectory."""
+        return {
+            "strategy": self.bin_strategy,
+            "padded_cell_ratio": self.padded_cell_ratio,
+            "bins": {str(k): {"points": v[0], "padded": v[1]}
+                     for k, v in sorted(self.bin_occupancy.items())},
         }
 
     @property
@@ -583,19 +636,23 @@ class NKSEngine:
     def _run_tasks(self, tasks: list[plan.SubsetTask], queries: list[list[int]],
                    pqs: list[TopK], backend: DistanceBackend,
                    stats: PipelineStats,
-                   eligible: np.ndarray | None = None) -> tuple[int, int, int]:
+                   eligible: np.ndarray | None = None,
+                   ctx: "plan.BatchPlanContext | None" = None,
+                   timers: dict | None = None) -> tuple[int, int, int]:
         """Distance stage + enumeration stage for one batch of subset tasks.
 
         ``eligible`` is the batch's predicate mask: keyword groups restrict
         to eligible rows (a task whose filtered groups lose a keyword is
         dropped before any pack), and the backend folds the mask into the
-        device-side join bitmask. Returns (tasks_searched, dispatches_issued,
+        device-side join bitmask. ``ctx`` carries the batch's keyword-mask
+        memoization; ``timers`` accumulates the enumeration stage's float64
+        rescore wall time. Returns (tasks_searched, dispatches_issued,
         join_pairs)."""
         t0 = time.perf_counter()
         prepared = []
         for t in tasks:
             gl = local_groups(t.f_ids, queries[t.qidx], self.dataset,
-                              eligible=eligible)
+                              eligible=eligible, ctx=ctx)
             if gl is not None:
                 prepared.append((t, gl))
         stats.t_plan_s += time.perf_counter() - t0
@@ -614,7 +671,8 @@ class NKSEngine:
         for (t, gl), db in zip(prepared, blocks):
             join_pairs += db.join_count
             stats.candidates_explored += enumerate_with_block(
-                t.f_ids, gl, queries[t.qidx], self.dataset, pqs[t.qidx], db)
+                t.f_ids, gl, queries[t.qidx], self.dataset, pqs[t.qidx], db,
+                timers=timers)
         stats.t_enumerate_s += time.perf_counter() - t1
         return len(prepared), backend.stats.dispatches - d0, join_pairs
 
@@ -634,6 +692,7 @@ class NKSEngine:
         b0_shards = (list(backend.stats.shard_dispatches),
                      list(backend.stats.shard_valid_cells),
                      list(backend.stats.shard_total_cells))
+        b0_bins = dict(getattr(backend.stats, "bin_points", None) or {})
         pqs = [TopK(k, init_full=exact) for _ in queries]
         # Streaming: plan over bulk ∪ delta, tombstones cleared from every
         # bitset (the subsets the backend packs and the enumeration walks
@@ -655,13 +714,18 @@ class NKSEngine:
             live = self.dataset.n - self.tombstone_count
             stats.filter_selectivity = round(
                 stats.eligible_points / live, 6) if live else 0.0
-        bitsets = [plan.query_bitset(self.dataset, q) for q in queries]
+        # One BatchPlanContext per batch: keyword masks and covering-bucket
+        # selections are memoized for the batch's lifetime (the corpus is
+        # frozen while the batch runs).
+        pctx = plan.BatchPlanContext(self.dataset)
+        bitsets = [pctx.query_bitset(q) for q in queries]
         if delta is not None:
             for bs in bitsets:
                 self._view.mask_tombstones(bs)
         stats.t_plan_s += time.perf_counter() - t0
         explored = {i: set() for i in range(len(queries))} if exact else None
         active = list(range(len(queries)))
+        timers = {"rescore_s": 0.0}
 
         for s in range(index.n_scales):
             if not active:
@@ -671,7 +735,7 @@ class NKSEngine:
             t0 = time.perf_counter()
             tasks = plan.plan_scale(index, s, queries, bitsets, active,
                                     explored, pstats, delta=delta,
-                                    eligible=eligible)
+                                    eligible=eligible, ctx=pctx)
             stats.t_plan_s += time.perf_counter() - t0
             sstats.buckets_selected = pstats.buckets_selected
             sstats.duplicate_subsets = pstats.duplicate_subsets
@@ -679,7 +743,8 @@ class NKSEngine:
             stats.filtered_subsets += pstats.filtered_subsets
             sstats.tasks_planned = len(tasks)
             searched, dispatches, pairs = self._run_tasks(
-                tasks, queries, pqs, backend, stats, eligible=eligible)
+                tasks, queries, pqs, backend, stats, eligible=eligible,
+                ctx=pctx, timers=timers)
             sstats.tasks_searched = searched
             sstats.dispatches = dispatches
             sstats.join_pairs = pairs
@@ -702,7 +767,9 @@ class NKSEngine:
             stats.fallback_queries = len(active)
             tasks = plan.fallback_tasks(bitsets, active, eligible=eligible)
             _, stats.fallback_dispatches, _ = self._run_tasks(
-                tasks, queries, pqs, backend, stats, eligible=eligible)
+                tasks, queries, pqs, backend, stats, eligible=eligible,
+                ctx=pctx, timers=timers)
+        stats.t_rescore_s = timers["rescore_s"]
         stats.t_pack_s = backend.stats.t_pack_s - b0.t_pack_s
         stats.t_dispatch_s = backend.stats.t_dispatch_s - b0.t_dispatch_s
         stats.cache_hits = backend.stats.cache_hits - b0.cache_hits
@@ -719,6 +786,20 @@ class NKSEngine:
                  backend.stats.shard_total_cells), b0_shards):
             dst.extend(v - (before[i] if i < len(before) else 0)
                        for i, v in enumerate(now))
+        # Cascade / routing counters (zero on backends without the fields).
+        for f in ("prune_tier_dispatches", "cells_pruned",
+                  "host_routed_dispatches", "host_routed_subsets"):
+            setattr(stats, f, getattr(backend.stats, f, 0) - getattr(b0, f, 0))
+        for f in ("t_prune_s", "t_host_s"):
+            setattr(stats, f,
+                    getattr(backend.stats, f, 0.0) - getattr(b0, f, 0.0))
+        stats.bin_strategy = getattr(backend, "bin_strategy", "")
+        for edge, (pts, padded) in (getattr(backend.stats, "bin_points", None)
+                                    or {}).items():
+            before = b0_bins.get(edge, (0, 0))
+            dp, dpad = pts - before[0], padded - before[1]
+            if dp or dpad:
+                stats.bin_occupancy[edge] = (dp, dpad)
         return pqs, stats
 
     def query_batch(self, queries: Sequence[Sequence[int]], k: int = 1,

@@ -68,8 +68,11 @@ def test_backend_sharded_parity():
     radii = [2.5] * 10 + [3.0, float("inf"), 2.0]
     keys = [ids.tobytes() for ids in id_lists]
 
-    single = PallasBackend()
-    shard = PallasBackend(plane=PLANE)
+    # Pinned knobs: these asserts encode the pow2 class layout and the
+    # device route's dispatch/shard counters, so auto cost-model routing and
+    # quantile re-binning are out of scope here.
+    single = PallasBackend(route="device", bin_strategy="pow2")
+    shard = PallasBackend(plane=PLANE, route="device", bin_strategy="pow2")
     b1 = single.self_join_blocks(points, id_lists, radii, keys=keys)
     b8 = shard.self_join_blocks(points, id_lists, radii, keys=keys)
     for i, (x, y) in enumerate(zip(b1, b8)):
@@ -94,7 +97,8 @@ def test_backend_sharded_parity():
     assert shard.stats.cache_hits > 0
     # a tight memory budget (chunking + shard rounding vs the clamp) keeps
     # bit-exact parity too
-    tight = PallasBackend(plane=PLANE, max_block_bytes=256 << 10)
+    tight = PallasBackend(plane=PLANE, max_block_bytes=256 << 10,
+                          route="device", bin_strategy="pow2")
     bt = tight.self_join_blocks(points, id_lists, radii, keys=keys)
     for i, (x, y) in enumerate(zip(b1, bt)):
         assert x.join_count == y.join_count, f"subset {i}"
@@ -165,8 +169,8 @@ def test_filtered_sharded_parity():
     keys = [ids.tobytes() for ids in id_lists]
     eligible = rng.random(600) < 0.5
 
-    single = PallasBackend()
-    shard = PallasBackend(plane=PLANE)
+    single = PallasBackend(route="device", bin_strategy="pow2")
+    shard = PallasBackend(plane=PLANE, route="device", bin_strategy="pow2")
     b1 = single.self_join_blocks(points, id_lists, radii, keys=keys,
                                  eligible=eligible)
     d2h_before = shard.stats.d2h_bytes
@@ -183,7 +187,7 @@ def test_filtered_sharded_parity():
     assert shard.stats.sharded_dispatches >= 1
     # the sharded filtered dispatch reads back exactly what the unfiltered
     # one would: the fold rides the packed mask layout
-    plain = PallasBackend(plane=PLANE)
+    plain = PallasBackend(plane=PLANE, route="device", bin_strategy="pow2")
     plain.self_join_blocks(points, id_lists, radii, keys=keys)
     assert shard.stats.d2h_bytes - d2h_before == plain.stats.d2h_bytes
 

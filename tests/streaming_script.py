@@ -59,8 +59,11 @@ def main():
     attrs = {k: list(base.attrs[k]) for k in base.attrs}
     alive = dict.fromkeys(range(base.n), True)
 
-    be_mesh = PallasBackend(interpret=True, plane=PLANE)
-    be_one = PallasBackend(interpret=True)
+    # route="device": the suite asserts sharded-dispatch accounting, and on
+    # a host-platform mesh the cost model (rightly) routes every bin to the
+    # exact host path, which never touches the plane.
+    be_mesh = PallasBackend(interpret=True, plane=PLANE, route="device")
+    be_one = PallasBackend(interpret=True, route="device")
 
     def check(tag):
         ids = np.asarray(sorted(i for i, a in alive.items() if a))
@@ -77,7 +80,8 @@ def main():
                                           backend=be_one, filter=flt)
                 want = fresh.query_batch(queries, k=2, tier=tier,
                                          backend=PallasBackend(interpret=True,
-                                                               plane=PLANE),
+                                                               plane=PLANE,
+                                                               route="device"),
                                          filter=flt)
                 want_ext = [[(tuple(int(ids[i]) for i in c.ids), c.diameter)
                              for c in r.candidates] for r in want]

@@ -1,0 +1,355 @@
+"""Raw-speed campaign (PR 6) contracts at the backend level:
+
+  * quantile size-class edges — DP segmentation edge cases, the pow2
+    padded-cell guard, and recomputation across streaming generations;
+  * cost-model dispatch routing — host-routed bins carry the settlement's
+    exact float64 distances (routing is invisible in engine results),
+    device parity regardless of route;
+  * mixed-precision prune tier — forced-on cascade is bit-identical to the
+    fp32-only route, filtered included, on adversarial boundary subsets;
+  * eligible-dense packing — low-selectivity filters pack eligible rows
+    densely and the block row map reproduces the folded results;
+  * snake shard placement — permuted tiles produce bit-identical blocks.
+
+Everything here runs on CPU (interpret / XLA lowerings); the same contracts
+run against real meshes in tests/sharded_script.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.backend import (DispatchCostModel, NumpyBackend,
+                                PallasBackend, _dp_segment)
+from repro.core.subset_search import unpack_join_mask
+
+# A cost model with an absurdly expensive device: route="auto" must send
+# every bin to the host. The platform is "cpu" so the prune tier stays off.
+HOST_WINS = DispatchCostModel(platform="cpu", d=0, dev_fixed_s=10.0,
+                              dev_cell_s=1.0, prune_cell_s=1.0,
+                              host_fixed_s=1e-9, host_cell_s=1e-12)
+# The opposite: free device, costly host — auto must keep every bin on
+# device even for tiny bins.
+DEV_WINS = DispatchCostModel(platform="cpu", d=0, dev_fixed_s=1e-12,
+                             dev_cell_s=1e-15, prune_cell_s=1e-15,
+                             host_fixed_s=10.0, host_cell_s=1.0)
+
+
+def _mk(seed=0, n=400, d=6, sizes=(40, 37, 20, 9, 64, 12, 33)):
+    rng = np.random.default_rng(seed)
+    points = rng.standard_normal((n, d))
+    id_lists = [np.sort(rng.choice(n, s, replace=False)).astype(np.int64)
+                for s in sizes]
+    radii = [float(r) for r in rng.uniform(1.5, 3.0, len(sizes))]
+    keys = [ids.tobytes() for ids in id_lists]
+    return points, id_lists, radii, keys
+
+
+# ----------------------------------------------------------- DP segmentation
+def test_dp_segment_all_equal_lengths():
+    edges = _dp_segment(np.array([64]), np.array([10]), cap=6)
+    assert list(edges) == [64]
+
+
+def test_dp_segment_single_value_per_bin():
+    vals = np.array([8, 64, 512])
+    edges = _dp_segment(vals, np.array([1, 1, 1]), cap=6)
+    # with cap >= #distinct the zero-waste segmentation keeps every value
+    assert set(vals).issubset(set(edges.tolist()))
+
+
+def test_dp_segment_cap_merges():
+    vals = np.arange(8, 8 * 30 + 1, 8)
+    counts = np.ones(len(vals), np.int64)
+    edges = _dp_segment(vals, counts, cap=4)
+    assert len(edges) <= 4 + 1 or len(edges) <= len(vals)
+    assert edges[-1] == vals[-1]            # the max length is always covered
+    cls = edges[np.searchsorted(edges, vals)]
+    assert (cls >= vals).all()              # every length fits its class
+
+
+def test_quantile_edges_never_worse_than_pow2():
+    """The guard contract: total padded cells under the quantile edges are
+    <= pow2 on any length distribution (pow2 is a feasible DP choice)."""
+    be = PallasBackend(route="device")
+    rng = np.random.default_rng(5)
+    for trial in range(20):
+        sizes = rng.integers(1, 600, size=rng.integers(1, 40))
+        edges = be._quantile_edges(sizes)
+        q = be.quantum
+        vals = np.maximum(((np.maximum(sizes, 1) + q - 1) // q) * q,
+                          be._min_class).astype(np.int64)
+        cls_q = edges[np.searchsorted(edges, vals)]
+        cls_p = np.array([be._class_pad(int(v)) for v in vals], np.int64)
+        assert int((cls_q ** 2).sum()) <= int((cls_p ** 2).sum()), \
+            f"trial {trial}: {sizes}"
+
+
+def test_quantile_edges_cached_and_recomputed_across_generations():
+    be = PallasBackend(route="device")
+    points, id_lists, radii, keys = _mk()
+    be.self_join_blocks(points, id_lists, radii, keys=keys, generation=1)
+    assert be._edge_cache
+    sig = next(iter(be._edge_cache))
+    # same generation, same lengths: cache hit (object identity preserved)
+    e0 = be._edge_cache[sig]
+    be.self_join_blocks(points, id_lists, radii, keys=keys, generation=1)
+    assert be._edge_cache[sig] is e0
+    # a generation bump purges the edge cache with the LRU: the next batch
+    # recomputes edges against the new corpus' length distribution
+    be.self_join_blocks(points, id_lists, radii, keys=keys, generation=2)
+    assert sig not in be._edge_cache or be._edge_cache[sig] is not e0
+
+
+def test_empty_and_infinite_bins():
+    """r=inf subsets never reach the binner; an empty task list returns
+    empty; a single subset forms a single one-class bin."""
+    be = PallasBackend(route="device")
+    points, id_lists, radii, keys = _mk(sizes=(20,))
+    assert be.self_join_blocks(points, [], []) == []
+    blocks = be.self_join_blocks(points, id_lists, [float("inf")], keys=keys)
+    assert blocks[0].mask is None and blocks[0].join_count == 20 * 20
+    assert be.stats.dispatches == 0
+    blocks = be.self_join_blocks(points, id_lists, radii[:1], keys=keys)
+    assert be.stats.dispatches == 1 and blocks[0].mask is not None
+
+
+# ------------------------------------------------------- cost-model routing
+def test_forced_host_route_settlement_identical():
+    """Host-routed blocks carry exactly the float64 distances the device
+    route's rescore stage would have produced (sqrt of the difference-based
+    squared-distance table) — the arithmetic that makes routing invisible
+    in search results. NumpyBackend's norms-identity distances agree only
+    to ~1e-12, which is why it is *not* the reference here."""
+    from repro.core.subset_search import _sq_dists_f64
+    points, id_lists, radii, keys = _mk(seed=3)
+    auto = PallasBackend(cost_model=HOST_WINS)
+    got = auto.self_join_blocks(points, id_lists, radii, keys=keys)
+    assert auto.stats.host_routed_dispatches == auto.stats.dispatches > 0
+    assert auto.stats.host_routed_subsets == len(id_lists)
+    assert auto.stats.t_host_s > 0.0
+    for i, (y, ids, r) in enumerate(zip(got, id_lists, radii)):
+        want = np.sqrt(_sq_dists_f64(points[ids]))
+        assert y.n == len(ids), f"subset {i}"
+        assert y.rescore is False and y.slack == 0.0
+        np.testing.assert_array_equal(y.dist, want, err_msg=f"subset {i}")
+        assert y.join_count == int((want <= r).sum()), f"subset {i}"
+
+
+def test_host_route_bitwise_invisible_in_engine_results():
+    """End-to-end: forcing every bin to the host route yields bitwise the
+    same ids and diameters as the pure device route — the cost model may
+    flip routing per bin without perturbing a single result."""
+    from repro.data.flickr_like import flickr_like_dataset
+    from repro.data.synthetic import random_queries
+    from repro.serve.engine import NKSEngine
+
+    ds = flickr_like_dataset(n=400, d=8, u=20, t=3, n_clusters=6, seed=11)
+    engine = NKSEngine(ds, m=2, n_scales=4, seed=0)
+    queries = random_queries(ds, 3, 6, seed=5)
+    for tier in ("exact", "approx"):
+        dev = engine.query_batch(queries, k=2, tier=tier,
+                                 backend=PallasBackend(route="device"))
+        host = engine.query_batch(queries, k=2, tier=tier,
+                                  backend=PallasBackend(cost_model=HOST_WINS))
+        for a, b in zip(dev, host):
+            assert [(c.ids, c.diameter) for c in a.candidates] \
+                == [(c.ids, c.diameter) for c in b.candidates], tier
+
+
+def test_auto_route_device_parity():
+    """Whatever the cost model decides, every route honours the pruning
+    contract the float64 rescore depends on: the block's adjacency contains
+    every true pair at radius r, and any extra pair sits within the
+    published slack of the threshold. (Exact end-to-end parity across
+    routes is asserted at the engine level — the enumeration stage rescores
+    both forms identically.)"""
+    points, id_lists, radii, keys = _mk(seed=4)
+    for model in (HOST_WINS, DEV_WINS):
+        auto = PallasBackend(cost_model=model)
+        got = auto.self_join_blocks(points, id_lists, radii, keys=keys)
+        for i, (y, ids) in enumerate(zip(got, id_lists)):
+            pts = points[ids]
+            diff = pts[:, None] - pts[None, :]
+            dist = np.sqrt((diff * diff).sum(-1))
+            exact = dist <= radii[i]
+            if y.dist is not None:           # host route: exact f64 block
+                a_got = y.dist <= radii[i]
+                np.testing.assert_array_equal(a_got, exact,
+                                              err_msg=f"subset {i}")
+            else:                            # device route: fp32 + slack
+                a_got = unpack_join_mask(y.mask, y.n).astype(bool)
+                assert (a_got | ~exact).all(), f"subset {i}: dropped pair"
+                extra = a_got & ~exact
+                if extra.any():
+                    assert dist[extra].min() <= radii[i] + 2 * y.slack + 1e-6
+    assert PallasBackend(cost_model=DEV_WINS).self_join_blocks(
+        points, id_lists, radii, keys=keys)[0].mask is not None
+
+
+def test_calibrated_cost_model_memoized():
+    from repro.core.backend import calibrate_cost_model
+    m1 = calibrate_cost_model(6)
+    m2 = calibrate_cost_model(6)
+    assert m1 is m2
+    assert m1.dev_fixed_s > 0 and m1.host_cell_s > 0
+
+
+# ------------------------------------------------------------- prune tier
+def _boundary_corpus(seed=7, n_subsets=5, d=8, r=2.0):
+    """Subsets whose pair distances straddle r at +/- a few bf16 ulps —
+    the adversarial regime for the coarse tier."""
+    rng = np.random.default_rng(seed)
+    points = []
+    id_lists = []
+    for s in range(n_subsets):
+        base = rng.uniform(-1, 1, d)
+        base /= np.linalg.norm(base)
+        anchor = rng.uniform(-r, r, d)
+        rows = [anchor]
+        for k in range(-6, 7, 2):
+            rows.append(anchor + base * (r * (1.0 + k * 2.0 ** -9)))
+        start = len(points)
+        points.extend(rows)
+        id_lists.append(np.arange(start, start + len(rows), dtype=np.int64))
+    points = np.asarray(points)
+    radii = [r] * n_subsets
+    keys = [ids.tobytes() for ids in id_lists]
+    return points, id_lists, radii, keys
+
+
+@pytest.mark.parametrize("prune_dtype", ["bf16", "int8"])
+def test_prune_tier_forced_on_bit_identical(prune_dtype):
+    points, id_lists, radii, keys = _boundary_corpus()
+    off = PallasBackend(route="device", prune_tier="off")
+    on = PallasBackend(route="device", prune_tier="on",
+                       prune_dtype=prune_dtype)
+    want = off.self_join_blocks(points, id_lists, radii, keys=keys)
+    got = on.self_join_blocks(points, id_lists, radii, keys=keys)
+    assert on.stats.prune_tier_dispatches > 0
+    assert on.stats.t_prune_s > 0.0
+    for i, (y, x) in enumerate(zip(got, want)):
+        assert y.n == x.n and y.slack == x.slack, f"subset {i}"
+        if y.mask is None:
+            # pruned: the fp32 join must have been provably empty — the
+            # coarse count is at or below the live diagonal, and so is the
+            # fp32 count the off-route measured.
+            n_live = y.n if y.n_eligible is None else y.n_eligible
+            assert y.join_count <= n_live, f"subset {i}"
+            assert x.join_count <= n_live, f"subset {i}"
+        else:
+            np.testing.assert_array_equal(y.mask, x.mask,
+                                          err_msg=f"subset {i}")
+            assert y.join_count == x.join_count, f"subset {i}"
+
+
+def test_prune_tier_forced_on_filtered_parity():
+    points, id_lists, radii, keys = _boundary_corpus(seed=9)
+    rng = np.random.default_rng(1)
+    eligible = rng.random(len(points)) < 0.6
+    off = PallasBackend(route="device", prune_tier="off")
+    on = PallasBackend(route="device", prune_tier="on")
+    want = off.self_join_blocks(points, id_lists, radii, keys=keys,
+                                eligible=eligible)
+    got = on.self_join_blocks(points, id_lists, radii, keys=keys,
+                              eligible=eligible)
+    for i, (y, x) in enumerate(zip(got, want)):
+        assert y.n_eligible == x.n_eligible, f"subset {i}"
+        if y.mask is not None:
+            np.testing.assert_array_equal(y.mask, x.mask,
+                                          err_msg=f"subset {i}")
+            assert y.join_count == x.join_count
+        else:
+            assert y.join_count <= (y.n_eligible
+                                    if y.n_eligible is not None else y.n)
+
+
+def test_prune_auto_off_on_cpu():
+    """route-independent: prune_tier="auto" resolves to off on non-TPU
+    backends without triggering a calibration."""
+    be = PallasBackend(route="device")
+    points, id_lists, radii, keys = _mk(seed=11)
+    be.self_join_blocks(points, id_lists, radii, keys=keys)
+    assert be.stats.prune_tier_dispatches == 0
+    assert be._model is None                # no calibration was forced
+
+
+# ------------------------------------------------- eligible-dense packing
+def test_eligible_dense_pack_low_selectivity_parity():
+    points, id_lists, radii, keys = _mk(seed=13, n=600,
+                                        sizes=(80, 90, 70, 85, 75))
+    rng = np.random.default_rng(2)
+    eligible = rng.random(600) < 0.10       # far below the 0.25 threshold
+    fold = PallasBackend(route="device", elig_pack_threshold=0.0)
+    dense = PallasBackend(route="device", elig_pack_threshold=0.25)
+    want = fold.self_join_blocks(points, id_lists, radii, keys=keys,
+                                 eligible=eligible)
+    got = dense.self_join_blocks(points, id_lists, radii, keys=keys,
+                                 eligible=eligible)
+    packed = sum(v[0] for v in dense.stats.bin_points.values())
+    packed_fold = sum(v[0] for v in fold.stats.bin_points.values())
+    assert packed < packed_fold             # tiles actually packed denser
+    for i, (y, x) in enumerate(zip(got, want)):
+        el = eligible[id_lists[i]]
+        rows = np.flatnonzero(el)
+        assert y.n == x.n == len(id_lists[i])
+        assert y.n_eligible == x.n_eligible == len(rows)
+        assert y.rows is not None
+        np.testing.assert_array_equal(y.rows, rows, err_msg=f"subset {i}")
+        # the dense mask over packed rows == the folded mask restricted to
+        # eligible rows/cols
+        a_fold = unpack_join_mask(x.mask, x.n).astype(bool)
+        a_fold = a_fold[np.ix_(rows, rows)]
+        a_dense = unpack_join_mask(y.mask, len(rows)).astype(bool)
+        np.testing.assert_array_equal(a_dense, a_fold, err_msg=f"subset {i}")
+        assert y.join_count == int(a_dense.sum())
+
+
+def test_eligible_dense_zero_selectivity():
+    points, id_lists, radii, keys = _mk(seed=14, sizes=(30, 25))
+    eligible = np.zeros(len(points), dtype=bool)
+    be = PallasBackend(route="device")
+    blocks = be.self_join_blocks(points, id_lists, radii, keys=keys,
+                                 eligible=eligible)
+    for b in blocks:
+        assert b.n_eligible == 0 and b.join_count == 0
+
+
+# --------------------------------------------------------- shard placement
+def test_balance_order_levels_slabs():
+    from repro.core.device_plane import balance_order
+    rng = np.random.default_rng(3)
+    for trial in range(10):
+        n_shards = int(rng.choice([2, 4, 8]))
+        s = n_shards * int(rng.integers(1, 6))
+        lens = rng.integers(0, 500, s)
+        perm = balance_order(lens, n_shards)
+        assert sorted(perm.tolist()) == list(range(s))
+        slabs = lens[perm].reshape(n_shards, -1).sum(axis=1)
+        # snake dealing keeps the heaviest and lightest slab within one
+        # max-length of each other
+        assert slabs.max() - slabs.min() <= lens.max(), \
+            f"trial {trial}: {slabs}"
+
+
+def test_placement_parity_single_device():
+    """placement only permutes tile slots; blocks come back in task order
+    and bit-identical to placement="none"."""
+    points, id_lists, radii, keys = _mk(seed=15)
+    a = PallasBackend(route="device", placement="sorted")
+    b = PallasBackend(route="device", placement="none")
+    ba = a.self_join_blocks(points, id_lists, radii, keys=keys)
+    bb = b.self_join_blocks(points, id_lists, radii, keys=keys)
+    for i, (y, x) in enumerate(zip(ba, bb)):
+        assert y.join_count == x.join_count, f"subset {i}"
+        np.testing.assert_array_equal(y.mask, x.mask, err_msg=f"subset {i}")
+
+
+# ----------------------------------------------------------- stats plumbing
+def test_bin_points_accumulates_per_class():
+    be = PallasBackend(route="device", bin_strategy="pow2")
+    points, id_lists, radii, keys = _mk(seed=16)
+    be.self_join_blocks(points, id_lists, radii, keys=keys)
+    assert be.stats.bin_points
+    tot_valid = sum(v for v, _ in be.stats.bin_points.values())
+    assert tot_valid == be.stats.points_packed
+    tot_pad = sum(p for _, p in be.stats.bin_points.values())
+    assert tot_pad == be.stats.points_padded

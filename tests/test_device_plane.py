@@ -84,8 +84,10 @@ def test_backend_plane_route_parity(ds, plane):
                 for n in (30, 12, 25)]
     radii = [2.0, float("inf"), 1.5]
     keys = [i.tobytes() for i in id_lists]
-    single = PallasBackend(interpret=True)
-    routed = PallasBackend(interpret=True, plane=plane)
+    # route="device": the test exercises the plane route; auto cost-model
+    # routing would host-route these thin interpret-mode bins.
+    single = PallasBackend(interpret=True, route="device")
+    routed = PallasBackend(interpret=True, plane=plane, route="device")
     b1 = single.self_join_blocks(ds.points, id_lists, radii, keys=keys)
     b2 = routed.self_join_blocks(ds.points, id_lists, radii, keys=keys)
     for x, y in zip(b1, b2):
@@ -121,8 +123,8 @@ def test_budget_demotes_sharded_bin_to_single_device(ds):
                 for n in (20, 22, 21)]
     radii = [2.0, 2.0, 2.0]
     be = PallasBackend(interpret=True, plane=TwoShards(),
-                       max_block_bytes=4 << 10)
-    ref = PallasBackend(interpret=True)
+                       max_block_bytes=4 << 10, route="device")
+    ref = PallasBackend(interpret=True, route="device")
     got = be.self_join_blocks(ds.points, id_lists, radii)
     want = ref.self_join_blocks(ds.points, id_lists, radii)
     for x, y in zip(want, got):
@@ -147,11 +149,18 @@ def test_engine_mesh_plumbs_plane_and_stats(ds, plane):
     eng_p = NKSEngine(ds, m=2, n_scales=4, seed=0, mesh=plane)
     assert eng.plane is None and eng_p.plane is plane
     queries = random_queries(ds, 2, 6, seed=5)
+    # the string spec resolves to a plane-bound backend on a mesh engine
+    assert eng_p._resolve_backend("pallas").plane is plane
     r1 = eng.query_batch(queries, k=2, tier="exact", backend="pallas")
     r2 = eng_p.query_batch(queries, k=2, tier="exact", backend="pallas")
     for a, b in zip(r1, r2):
         assert [(c.ids, c.diameter) for c in a.candidates] == \
                [(c.ids, c.diameter) for c in b.candidates]
+    # sharded-dispatch accounting needs the device route pinned: on this
+    # host-platform mesh the cost model (rightly) routes every bin to the
+    # exact host path, which never touches the plane.
+    eng_p.query_batch(queries, k=2, tier="exact",
+                      backend=PallasBackend(plane=plane, route="device"))
     st = eng_p.last_batch_stats
     assert st.sharded_dispatches > 0
     assert len(st.shard_dispatches) == 1

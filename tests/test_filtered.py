@@ -165,7 +165,10 @@ def test_eligibility_fold_no_new_d2h():
     keys = [ids.tobytes() for ids in id_lists]
     eligible = rng.random(500) < 0.4
 
-    be = PallasBackend()
+    # route="device": this test asserts the *device* fold's transfer
+    # contract; auto cost-model routing may legitimately send thin bins to
+    # the host path, which has no D2H at all.
+    be = PallasBackend(route="device")
     plain = be.self_join_blocks(points, id_lists, radii, keys=keys)
     h2d0, d2h0 = be.stats.h2d_bytes, be.stats.d2h_bytes
     assert d2h0 > 0

@@ -265,3 +265,99 @@ def test_pairwise_l2_join_batched_masked_eligibility_fold():
         got = unpack_join_mask(np.asarray(m_xla)[si], p).astype(bool)
         np.testing.assert_array_equal(got, ref, err_msg=f"subset {si}")
         assert int(np.asarray(c_xla)[si]) == int(ref.sum())
+
+
+# ------------------------------------------------------------- cascade tier 0
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("s,p,d", [(4, 37, 8), (6, 64, 16), (3, 130, 5)])
+def test_join_batched_counts_superset_of_f64(s, p, d, dtype):
+    """Safety contract of the coarse prune tier: at the error-widened coarse
+    radius, the low-precision count can never miss a pair the exact join at
+    the base radius would find. (Coarse count <= diagonal bound therefore
+    proves the fp32 join empty.)"""
+    rng = np.random.default_rng(s * 10 + p + d)
+    x = rng.uniform(-20, 20, (s, p, d)).astype(np.float32)
+    lens = rng.integers(1, p + 1, size=s).astype(np.int32)
+    lens[-1] = 0
+    radii = rng.uniform(1.0, 25.0, size=s).astype(np.float32)
+    # Coarse widening mirrors the backend: bf16 coordinate rounding on top of
+    # the fp32-identity slack, times (1 + eps) headroom.
+    norms = np.sqrt((x.astype(np.float64) ** 2).sum(-1)).max()
+    rc = ((radii + 2 * 2.0 ** -8 * norms) * 1.05).astype(np.float32)
+    cnt = np.asarray(ops.pairwise_l2_join_batched_counts(
+        jnp.asarray(x), lens, rc, dtype=dtype, impl="xla"))
+    for si in range(s):
+        n = int(lens[si])
+        pts = x[si, :n].astype(np.float64)
+        d2 = ((pts[:, None] - pts[None, :]) ** 2).sum(-1)
+        exact = int((np.sqrt(d2) <= radii[si]).sum())
+        assert cnt[si] >= exact, f"subset {si}: {cnt[si]} < {exact}"
+
+
+def test_join_batched_counts_pallas_matches_xla():
+    """The Mosaic bf16 lowering and the XLA lowering agree bit-for-bit on
+    counts (same bf16 rounding, same fp32 accumulation order contract)."""
+    rng = np.random.default_rng(11)
+    s, p, d = 5, 70, 12
+    x = rng.uniform(-10, 10, (s, p, d)).astype(np.float32)
+    lens = np.array([70, 33, 16, 1, 0], np.int32)
+    radii = np.array([8.0, np.inf, 4.0, 1.0, 2.0], np.float32)
+    c_xla = ops.pairwise_l2_join_batched_counts(
+        jnp.asarray(x), lens, radii, dtype="bf16", impl="xla")
+    c_pl = ops.pairwise_l2_join_batched_counts(
+        jnp.asarray(x), lens, radii, dtype="bf16", bm=32, bn=32,
+        impl="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(c_pl), np.asarray(c_xla))
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_join_batched_counts_eligibility_fold(dtype):
+    """Folded counts equal the eligible-pair count of the folded masked join
+    — the prune tier sees the same filtered world as tier 1."""
+    from repro.core.subset_search import pack_join_mask
+    rng = np.random.default_rng(13)
+    s, p, d = 4, 45, 7
+    x = rng.uniform(-5, 5, (s, p, d)).astype(np.float32)
+    lens = np.array([45, 20, 3, 0], np.int32)
+    radii = np.array([4.0, 2.0, np.inf, 1.0], np.float32)
+    el = rng.random((s, p)) < 0.5
+    elig = jnp.asarray(pack_join_mask(el))
+    cnt = np.asarray(ops.pairwise_l2_join_batched_counts(
+        jnp.asarray(x), lens, radii, elig, dtype=dtype, impl="xla"))
+    cnt_plain = np.asarray(ops.pairwise_l2_join_batched_counts(
+        jnp.asarray(x), lens, radii, dtype=dtype, impl="xla"))
+    for si in range(s):
+        n = int(lens[si])
+        assert cnt[si] <= cnt_plain[si]
+        if n and np.isinf(radii[si]):
+            assert cnt[si] == int(el[si, :n].sum()) ** 2
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_join_batched_counts_adversarial_boundary(dtype):
+    """Seeded adversarial construction for the cascade error bound: pairs
+    placed within r*(1 +/- eps) of the threshold, where bf16's 8-bit mantissa
+    (or int8's 7-bit grid) rounds distances across the boundary. Every pair
+    at true distance <= r must be counted at the widened coarse radius; pairs
+    just outside may be over-counted (settled later by the float64 rescore)
+    but never under-counted."""
+    d = 8
+    for seed, r in ((0, 1.0), (1, 7.3), (2, 123.0)):
+        rng = np.random.default_rng(seed)
+        base = rng.uniform(-1, 1, d)
+        base /= np.linalg.norm(base)
+        pts = [rng.uniform(-r, r, d).astype(np.float32)]
+        # straddle the threshold at +/- k ulps of the bf16 grid
+        for k in (-4, -1, 0, 1, 4):
+            delta = r * (1.0 + k * 2.0 ** -9)
+            pts.append((pts[0] + base * delta).astype(np.float32))
+        x = np.stack(pts)[None].astype(np.float32)     # (1, 6, d)
+        lens = np.array([x.shape[1]], np.int32)
+        pf = x[0].astype(np.float64)
+        d2 = ((pf[:, None] - pf[None, :]) ** 2).sum(-1)
+        exact = int((np.sqrt(d2) <= r).sum())
+        norms = np.sqrt((pf ** 2).sum(-1)).max()
+        rc = np.array([(r + 2 * 2.0 ** -8 * norms) * 1.05], np.float32)
+        cnt = int(np.asarray(ops.pairwise_l2_join_batched_counts(
+            jnp.asarray(x), lens, rc, dtype=dtype, impl="xla"))[0])
+        assert cnt >= exact, f"seed={seed} r={r}: {cnt} < {exact}"

@@ -389,3 +389,53 @@ def test_streaming_filtered_interleaving_parity(script):
     np.testing.assert_allclose([c.diameter for c in got.candidates],
                                [c.diameter for c in want.candidates],
                                rtol=1e-9)
+
+
+# ---------------------------------------------------------- cascade tier 0
+@st.composite
+def cascade_instances(draw):
+    """Adversarial-leaning instances for the mixed-precision prune bound:
+    clustered points with pair distances concentrated near the threshold
+    (scaled offsets of +/- a few bf16 ulps), random dtype, random radius
+    scale spanning three orders of magnitude."""
+    rng = np.random.default_rng(draw(st.integers(0, 10_000)))
+    d = draw(st.integers(2, 16))
+    n = draw(st.integers(2, 24))
+    r = draw(st.floats(0.5, 500.0))
+    dtype = draw(st.sampled_from(["bf16", "int8"]))
+    base = rng.uniform(-1, 1, d)
+    base /= np.linalg.norm(base)
+    anchor = rng.uniform(-r, r, d).astype(np.float32)
+    pts = [anchor]
+    for _ in range(n - 1):
+        if rng.random() < 0.5:
+            # boundary pair: distance r * (1 + k * 2^-9), k in [-8, 8]
+            k = rng.integers(-8, 9)
+            pts.append((anchor + base * (r * (1.0 + k * 2.0 ** -9)))
+                       .astype(np.float32))
+        else:
+            pts.append(rng.uniform(-2 * r, 2 * r, d).astype(np.float32))
+    return np.stack(pts), np.float32(r), dtype
+
+
+@given(inst=cascade_instances())
+@settings(deadline=None)
+def test_cascade_coarse_count_never_undercounts(inst):
+    """Tier-0 safety: the low-precision count at the error-widened coarse
+    radius dominates the exact float64 count at the base radius — so a
+    coarse count at the diagonal bound proves the fp32 join empty, and the
+    cascade can never drop a result (the float64 rescore settles the
+    over-counted boundary pairs)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    x, r, dtype = inst
+    n, d = x.shape
+    pf = x.astype(np.float64)
+    d2 = ((pf[:, None] - pf[None, :]) ** 2).sum(-1)
+    exact = int((np.sqrt(d2) <= r).sum())
+    norms = np.sqrt((pf ** 2).sum(-1)).max()
+    rc = np.array([(r + 2 * 2.0 ** -8 * norms) * 1.05], np.float32)
+    cnt = int(np.asarray(ops.pairwise_l2_join_batched_counts(
+        jnp.asarray(x[None]), np.array([n], np.int32), rc,
+        dtype=dtype, impl="xla"))[0])
+    assert cnt >= exact
