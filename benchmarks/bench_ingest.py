@@ -121,6 +121,9 @@ def main(fast: bool = False, mesh: int = 0, mix: int = 10,
         out = {
             "qps_static": qps_static,
             "qps_sustained": n_queries / t_total,
+            # Ingest tax: fraction of static query throughput lost to the
+            # live mix (0 = churn is free, 1 = queries fully starved).
+            "ingest_tax": round(1.0 - (n_queries / t_total) / qps_static, 4),
             "qps_query_phase": n_queries / t_query if t_query else 0.0,
             "inserted_points_per_s": stream_total / t_insert if t_insert else 0.0,
             "deleted_points_per_s": deleted / t_delete if t_delete else 0.0,
@@ -148,6 +151,12 @@ def main(fast: bool = False, mesh: int = 0, mix: int = 10,
         "mix": mix, "inserted_points": stream_total,
         "tiers": {tier: run_tier(tier) for tier in ("approx", "exact")},
     }
+    # How much worse the approx tier's ingest tax is than the exact tier's:
+    # the batched suspect re-verification (IndexDelta.verify_suspects) should
+    # keep this near zero — both tiers share the same delta maintenance.
+    results["ingest_tax_delta_approx_vs_exact"] = round(
+        results["tiers"]["approx"]["ingest_tax"]
+        - results["tiers"]["exact"]["ingest_tax"], 4)
     with open(OUT, "w") as f:
         json.dump(results, f, indent=2)
     print(f"# wrote {os.path.abspath(OUT)}")

@@ -1,0 +1,189 @@
+"""Serving-runtime throughput + latency under Poisson arrivals.
+
+The ISSUE-7 serving question: what does the async runtime (admission queue,
+coalesced batches, off-thread compaction) buy over the synchronous
+one-request-at-a-time loop, and what latency does a client actually see
+under open-loop load? The workload is a 1:``--mix`` insert:query op stream
+(default 1:10, same mix as bench_ingest) drawn from the same flickr-like
+generator as the resident corpus:
+
+  * **sync leg** — ops run back-to-back against a fresh engine (the
+    ``launch/serve.py`` default path): per-op service latency, closed-loop
+    QPS. A synchronous loop has no queue, so Poisson arrivals would only
+    add idle time — its QPS *is* its service rate.
+  * **runtime leg** — the same op sequence submitted open-loop on a Poisson
+    arrival schedule at ``--rate-factor``× the measured sync rate
+    (saturating: the queue builds, coalescing kicks in). Latency here is
+    submit→resolve (queue wait included), QPS is completions over the span
+    from first submit to last resolve.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--fast]
+
+Writes ``BENCH_serving.json``; CI gates ``qps_sync``,
+``qps_sustained_runtime`` (higher-better) and ``p99_ms_runtime``
+(lower-better) against the committed ``BENCH_serving_baseline.json`` —
+see ``check_regression.py``. The acceptance bar from ISSUE 7:
+``runtime_vs_sync_qps >= 1`` on the fast (approx) tier — coalescing must at
+least pay for the queue it adds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT = "BENCH_serving.json"
+
+
+def _percentiles(lat_s) -> dict:
+    import numpy as np
+    lat = np.asarray(lat_s) * 1e3
+    return {"p50_ms": round(float(np.percentile(lat, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat, 99)), 3)}
+
+
+def main(fast: bool = False, mix: int = 10, rate_factor: float = 1.5,
+         n_ops: int | None = None, tier: str = "approx") -> dict:
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.core.types import make_dataset
+    from repro.data.flickr_like import flickr_like_dataset
+    from repro.data.synthetic import random_queries
+    from repro.serve.engine import NKSEngine
+    from repro.serve.runtime import RuntimeConfig, ServingRuntime
+
+    n0 = 1_500 if fast else 6_000
+    n_ops = n_ops or (33 * (mix + 1) if fast else 100 * (mix + 1))
+    insert_batch = 5
+    k = 2
+
+    n_inserts = n_ops // (mix + 1)
+    full = flickr_like_dataset(n=n0 + n_inserts * insert_batch, d=16, u=30,
+                               t=3, n_clusters=12, seed=8)
+    ds0 = make_dataset(full.points[:n0],
+                       [full.kw.row(i).tolist() for i in range(n0)],
+                       n_keywords=full.n_keywords)
+    queries = random_queries(ds0, 2, n_ops, seed=3)
+
+    # One op per arrival: every (mix+1)-th is an insert batch, the rest are
+    # single queries — the bench_ingest 1:mix op mix, serialized per-request
+    # the way a frontend would see it.
+    ops = []
+    ins = 0
+    for i in range(n_ops):
+        if i % (mix + 1) == mix and ins < n_inserts:
+            lo = n0 + ins * insert_batch
+            ops.append(("insert", full.points[lo:lo + insert_batch],
+                        [full.kw.row(j).tolist()
+                         for j in range(lo, lo + insert_batch)]))
+            ins += 1
+        else:
+            ops.append(("query", queries[i]))
+
+    def fresh_engine():
+        return NKSEngine(ds0, m=2, n_scales=5, seed=0,
+                         build_exact=False, build_approx=True,
+                         compact_min=max(64, n_inserts * insert_batch // 2),
+                         compact_ratio=0.05)
+
+    # ---------------------------------------------------------------- sync
+    engine = fresh_engine()
+    engine.query_batch(queries[:8], k=k, tier=tier)         # warm
+    lat_sync = []
+    t0 = time.perf_counter()
+    for op in ops:
+        t1 = time.perf_counter()
+        if op[0] == "query":
+            engine.query(op[1], k=k, tier=tier)
+        else:
+            engine.insert(op[1], op[2])
+        lat_sync.append(time.perf_counter() - t1)
+    sync_wall = time.perf_counter() - t0
+    qps_sync = n_ops / sync_wall
+    sync_out = {"qps": qps_sync, **_percentiles(lat_sync),
+                "compactions": engine.ingest.compactions}
+
+    # -------------------------------------------------------------- runtime
+    # Open-loop Poisson arrivals at rate_factor x the sync service rate: the
+    # queue builds, so coalescing has material batches to work with.
+    rate = qps_sync * rate_factor
+    arrivals = np.cumsum(
+        np.random.default_rng(5).exponential(1.0 / rate, n_ops))
+    engine = fresh_engine()
+    engine.query_batch(queries[:8], k=k, tier=tier)         # warm
+    rt = ServingRuntime(engine, RuntimeConfig(
+        max_queue=max(1024, n_ops), max_batch=32, batch_window_s=0.0,
+        tier=tier, k=k))
+    tickets = []
+    t0 = time.perf_counter()
+    for op, at in zip(ops, arrivals):
+        lag = at - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        if op[0] == "query":
+            tickets.append(rt.submit({"op": "query", "keywords": op[1],
+                                      "k": k, "tier": tier}))
+        else:
+            tickets.append(rt.submit({"op": "insert", "points": op[1],
+                                      "keywords": op[2]}))
+    results = [t.result(120) for t in tickets]
+    rt_wall = time.perf_counter() - t0
+    rt.close()
+
+    ok = [r for r in results if r.ok]
+    qps_rt = len(ok) / rt_wall
+    runtime_out = {
+        "qps_sustained": qps_rt,
+        **_percentiles([r.latency_s for r in ok]),
+        "offered_rate": rate,
+        "completed": len(ok),
+        "rejected": rt.stats.rejected_full,
+        "errors": rt.stats.errors,
+        "degraded": rt.stats.degraded_queries,
+        "mean_batch": round(rt.stats.mean_batch, 2),
+        "bg_compactions": rt.stats.bg_compactions,
+    }
+
+    tier_out = {
+        # flat gate keys (check_regression compares per-tier flat metrics)
+        "qps_sync": qps_sync,
+        "qps_sustained_runtime": qps_rt,
+        "p99_ms_runtime": runtime_out["p99_ms"],
+        "runtime_vs_sync_qps": round(qps_rt / qps_sync, 3),
+        "sync": sync_out,
+        "runtime": runtime_out,
+    }
+    emit(f"serving.sync.{tier}", 1e6 / qps_sync, f"mix=1:{mix}")
+    emit(f"serving.runtime.{tier}", 1e6 / qps_rt,
+         f"mean_batch={runtime_out['mean_batch']} "
+         f"p99={runtime_out['p99_ms']}ms")
+
+    results_json = {
+        "n0": n0, "fast": fast, "mix": mix, "k": k, "n_ops": n_ops,
+        "insert_batch": insert_batch, "rate_factor": rate_factor,
+        "arrival_process": "poisson",
+        "tiers": {tier: tier_out},
+    }
+    with open(OUT, "w") as f:
+        json.dump(results_json, f, indent=2)
+    print(f"# wrote {os.path.abspath(OUT)}")
+    return results_json
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("BENCH_FAST", "") == "1")
+    ap.add_argument("--mix", type=int, default=10,
+                    help="queries per insert op (1:N op mix)")
+    ap.add_argument("--rate-factor", type=float, default=1.5,
+                    help="offered Poisson arrival rate as a multiple of the "
+                         "measured sync service rate")
+    ap.add_argument("--n-ops", type=int, default=None)
+    ap.add_argument("--tier", default="approx",
+                    choices=["approx", "exact"])
+    args = ap.parse_args()
+    main(fast=args.fast, mix=args.mix, rate_factor=args.rate_factor,
+         n_ops=args.n_ops, tier=args.tier)

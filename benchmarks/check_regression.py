@@ -19,6 +19,10 @@ values are recorded but too noisy to gate at fast-profile batch sizes),
 plus a hard failure when the bench recorded
 ``d2h_match_at_full_selectivity: false`` — the eligibility fold must never
 add readback traffic, regardless of throughput.
+Serving bench (ISSUE 7): per tier, sync and runtime sustained QPS
+(higher-better, ``--threshold``) and runtime p99 latency (lower-better,
+``--serving-latency-threshold``), plus a hard failure when the async
+runtime's QPS drops materially below the synchronous loop's.
 
 The sharded (``--mesh N``) extras are deliberately NOT gated: the
 forced-8-device run's top-level tier metrics still measure single-device
@@ -48,20 +52,31 @@ GATED = ("batch_pallas_qps", "batch_numpy_qps", "loop_qps", "batch_auto_qps")
 # several-x run to run on shared runners, far beyond the 40% threshold's
 # intent.
 GATED_FILTERED = ("unfiltered_qps", "sweep_geomean_qps")
+# Serving bench (ISSUE 7): sustained throughput through the async runtime
+# and the synchronous reference, plus tail latency. ``p99_ms_runtime`` is
+# LOWER-better — compare() inverts its ratio so one threshold governs both
+# directions (a ratio of 0.5 always means "twice as bad as baseline").
+GATED_SERVING = ("qps_sync", "qps_sustained_runtime")
+GATED_SERVING_LOWER = ("p99_ms_runtime",)
 
 
 def compare(fresh: dict, baseline: dict, threshold: float,
-            metrics=GATED) -> tuple[list[tuple], list[tuple]]:
+            metrics=GATED, lower_better=()) -> tuple[list[tuple], list[tuple]]:
     """Returns (rows, regressions); each row is
-    (tier, metric, base, fresh, ratio, regressed)."""
+    (tier, metric, base, fresh, ratio, regressed). ``ratio`` is
+    fresh/baseline for higher-better metrics and baseline/fresh for
+    ``lower_better`` ones, so regression is always ratio < 1 - threshold."""
     rows, regressions = [], []
     for tier, base_metrics in baseline.get("tiers", {}).items():
         fresh_metrics = fresh.get("tiers", {}).get(tier, {})
-        for metric in metrics:
+        for metric in (*metrics, *lower_better):
             if metric not in base_metrics or metric not in fresh_metrics:
                 continue
             b, f = float(base_metrics[metric]), float(fresh_metrics[metric])
-            ratio = f / b if b else float("inf")
+            if metric in lower_better:
+                ratio = b / f if f else float("inf")
+            else:
+                ratio = f / b if b else float("inf")
             regressed = ratio < 1.0 - threshold
             row = (tier, metric, b, f, ratio, regressed)
             rows.append(row)
@@ -111,6 +126,14 @@ def main(argv=None) -> int:
     ap.add_argument("--filtered-fresh", default="BENCH_filtered.json")
     ap.add_argument("--filtered-baseline",
                     default="BENCH_filtered_baseline.json")
+    ap.add_argument("--serving-fresh", default="BENCH_serving.json")
+    ap.add_argument("--serving-baseline",
+                    default="BENCH_serving_baseline.json")
+    ap.add_argument("--serving-latency-threshold", type=float, default=0.60,
+                    help="maximum tolerated p99 inflation, as 1 - base/fresh "
+                         "(0.60 fails past 2.5x baseline — open-loop tail "
+                         "latency on shared runners wobbles more than "
+                         "throughput)")
     ap.add_argument("--threshold", type=float, default=0.40,
                     help="maximum tolerated fractional QPS drop")
     ap.add_argument("--require-fresh", action="store_true",
@@ -171,6 +194,32 @@ def main(argv=None) -> int:
                 print(f"FAIL: {tier}: eligibility fold added D2H traffic "
                       f"(d2h_match_at_full_selectivity=false)",
                       file=sys.stderr)
+                failures += 1
+
+    pair = _load_pair(args.serving_fresh, args.serving_baseline,
+                      args.require_fresh, baseline_required=False,
+                      regen_hint="python -m benchmarks.bench_serving --fast")
+    if isinstance(pair, int):
+        return pair
+    if pair is not None:
+        fresh_s, base_s = pair
+        rows, regressions = compare(fresh_s, base_s, args.threshold,
+                                    metrics=GATED_SERVING)
+        lat_rows, lat_regressions = compare(
+            fresh_s, base_s, args.serving_latency_threshold,
+            metrics=(), lower_better=GATED_SERVING_LOWER)
+        compared += 1
+        print(f"\n== serving runtime ({args.serving_fresh} vs "
+              f"{args.serving_baseline})")
+        _print_rows(rows + lat_rows)
+        failures += len(regressions) + len(lat_regressions)
+        for tier, m in fresh_s.get("tiers", {}).items():
+            # Contract, not a perf gate: the async runtime must at least pay
+            # for the queue it adds (ISSUE 7 acceptance bar).
+            ratio = m.get("runtime_vs_sync_qps")
+            if ratio is not None and ratio < 1.0 - args.threshold:
+                print(f"FAIL: {tier}: runtime QPS fell to {ratio:.2f}x the "
+                      f"synchronous loop (must stay ~>= 1)", file=sys.stderr)
                 failures += 1
 
     if not compared:

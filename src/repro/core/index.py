@@ -229,16 +229,6 @@ class IndexDelta:
         return mat
 
     # ------------------------------------------------------------ query side
-    def _bucket_has_live_kw(self, scale: int, bucket: int, v_kw: int) -> bool:
-        """Does bulk bucket ``bucket`` still hold a live point tagged v_kw?"""
-        hi = self.index.structures[scale]
-        pts = hi.table.row(int(bucket))
-        vpts = self.corpus.bulk.ikp.row(int(v_kw))
-        inter = pts[sorted_member(pts, vpts)]
-        if not len(inter):
-            return False
-        return bool((~self.corpus.tombstoned(inter)).any())
-
     def _delta_buckets_with(self, scale: int, v_kw: int) -> np.ndarray:
         """Buckets at ``scale`` holding >=1 live delta point tagged v_kw."""
         ids = self.corpus.delta_ids_with(v_kw)
@@ -247,22 +237,51 @@ class IndexDelta:
         mat = self.bucket_matrix(scale)
         return np.unique(mat[ids - self.n_bulk])
 
+    def verify_suspects(self, scale: int, keywords) -> int:
+        """Batch-resolve suspect (keyword, bucket) coverage entries at one
+        scale for every keyword in ``keywords``; returns the number of pairs
+        verified.
+
+        This is the coalesced-batch form of the re-verification that
+        :meth:`covering_buckets` used to run inline per query: the
+        keyword's live posting list is materialised *once* and reused across
+        all of its suspect buckets (and, via the batch plan layer, across
+        every query in a coalesced batch that shares the keyword), instead
+        of re-fetching ``ikp.row`` + tombstone mask per (query, bucket).
+        Verdicts are monotone under the grow-only tombstone set, so resolved
+        pairs leave the suspect map exactly as before — dead buckets
+        permanently into ``_dead``, live ones dropped until a later
+        ``retire()`` touches them again."""
+        suspect = self._suspect[scale]
+        if not suspect:
+            return 0
+        hi = self.index.structures[scale]
+        verified = 0
+        for v in {int(v) for v in keywords}:
+            buckets = suspect.get(v)
+            if not buckets:
+                continue
+            vpts = self.corpus.bulk.ikp.row(v)
+            live_v = vpts[~self.corpus.tombstoned(vpts)]
+            newly_dead = {b for b in buckets
+                          if not len(live_v)
+                          or not sorted_member(hi.table.row(int(b)),
+                                               live_v).any()}
+            verified += len(buckets)
+            buckets.clear()                # live-verified; retire() re-adds
+            if newly_dead:
+                self._dead[scale].setdefault(v, set()).update(newly_dead)
+        return verified
+
     def covering_buckets(self, scale: int, query) -> np.ndarray:
         """Buckets containing all query keywords across bulk ∪ delta, live
         points only — the streaming replacement for
         :func:`repro.core.plan.covering_buckets` (same ascending order)."""
+        self.verify_suspects(scale, query)
         per_kw = []
         hi = self.index.structures[scale]
         for v in query:
             kb = hi.khb.row(int(v)).astype(np.int64)
-            suspects = self._suspect[scale].get(int(v))
-            if suspects:
-                newly_dead = {b for b in suspects
-                              if not self._bucket_has_live_kw(scale, b, int(v))}
-                suspects.clear()           # live-verified; retire() re-adds
-                if newly_dead:
-                    self._dead[scale].setdefault(int(v), set()) \
-                        .update(newly_dead)
             dead = self._dead[scale].get(int(v))
             if dead:
                 kb = kb[~sorted_member(

@@ -141,6 +141,12 @@ def plan_scale(index: PromishIndex, scale: int,
     """
     hi = index.structures[scale]
     tasks: list[SubsetTask] = []
+    if delta is not None and len(active):
+        # Resolve suspect (keyword, bucket) coverage once for the whole
+        # coalesced batch: every query sharing a keyword reuses the same
+        # verification pass instead of re-running it per query.
+        delta.verify_suspects(
+            scale, {int(v) for qidx in active for v in queries[qidx]})
     for qidx in active:
         bs = bitsets[qidx]
         if delta is None:

@@ -16,6 +16,12 @@ response reflects every earlier op in the stream, never a partial batch.
      "attrs": {"price": [...]}, "tenant": "acme"}
     {"op": "delete", "ids": [12, 904]}
     {"op": "compact"}
+    {"op": "health"}                                      # runtime/engine state
+    {"op": "snapshot"}                                    # requires --wal
+
+A malformed line or failing op never kills the stream: each bad request gets
+a structured ``{"op": ..., "error": ..., "status": "error"}`` response and
+serving continues.
 
 ``filter`` applies attribute predicates (grammar: ``[attr, op, value]``
 clauses, op in ``< <= > >= == != in between``, conjunction) and tenant
@@ -25,10 +31,18 @@ price/category columns to the demo corpus so filtered requests work out of
 the box; inserts must then carry matching ``attrs`` (and ``tenant`` on a
 multi-tenant corpus).
 
+``--runtime`` routes requests through the fault-tolerant async runtime
+(``serve.runtime``): consecutive queries are admitted together and coalesced
+into batched dispatches; ingest ops are awaited before later requests are
+admitted, preserving the stream contract. Responses gain ``degraded: true``
+when overload shed an exact request to the approx tier. ``--wal DIR``
+attaches the crash-recovery write-ahead log — every ingest ack is then
+durable (README "Serving runtime").
+
 Insert responses carry the assigned stable external ids; every ingest
 response reports the engine's generation/delta/tombstone state. Compaction
 also runs automatically at the ``--compact-ratio`` / ``--compact-min``
-cadence.
+cadence (off-thread under ``--runtime``).
 """
 from __future__ import annotations
 
@@ -52,11 +66,30 @@ def _ingest_state(engine: NKSEngine) -> dict:
     }
 
 
+def _resolve_insert_keywords(engine: NKSEngine, req: dict) -> list:
+    """Tenant-LOCAL keyword ids -> global dictionary slots (same convention
+    as tenant-scoped queries), so an inserted point is reachable by the very
+    queries its tenant will issue and can never land in another tenant's
+    namespace. Per-point tenant lists resolve per row."""
+    keywords = req["keywords"]
+    tenant = req.get("tenant")
+    ns = getattr(engine.dataset, "tenants", None)
+    if tenant is None or ns is None:
+        return keywords
+    if isinstance(tenant, (list, tuple)):
+        return [ns.resolve(t, ks) for t, ks in zip(tenant, keywords)]
+    return [ns.resolve(tenant, ks) for ks in keywords]
+
+
 def handle_request(engine: NKSEngine, req: dict, *, tier: str, k: int) -> dict:
-    """Execute one JSONL op against the engine; returns the JSON response."""
+    """Execute one JSONL op against the engine; returns the JSON response.
+
+    Raises on a bad request — the serving loop wraps this in
+    :func:`handle_request_safe` to produce error envelopes instead."""
     op = req.get("op", "query")
     if op == "query":
-        res = engine.query(req["keywords"], k=req.get("k", k), tier=tier,
+        res = engine.query(req["keywords"], k=req.get("k", k),
+                           tier=req.get("tier", tier),
                            filter=req.get("filter"))
         out = {
             "op": "query",
@@ -72,22 +105,9 @@ def handle_request(engine: NKSEngine, req: dict, *, tier: str, k: int) -> dict:
         pts = np.asarray(req["points"], dtype=np.float32)
         attrs = {name: np.asarray(col)
                  for name, col in (req.get("attrs") or {}).items()} or None
-        tenant = req.get("tenant")
-        keywords = req["keywords"]
-        ns = getattr(engine.dataset, "tenants", None)
-        if tenant is not None and ns is not None:
-            # Same convention as tenant-scoped queries: clients speak
-            # tenant-LOCAL keyword ids; resolve them into the tenant's global
-            # dictionary slots here, so an inserted point is reachable by the
-            # very queries its tenant will issue (and can never land in
-            # another tenant's namespace). Per-point tenant lists resolve
-            # per row.
-            if isinstance(tenant, (list, tuple)):
-                keywords = [ns.resolve(t, ks)
-                            for t, ks in zip(tenant, keywords)]
-            else:
-                keywords = [ns.resolve(tenant, ks) for ks in keywords]
-        ids = engine.insert(pts, keywords, attrs=attrs, tenant=tenant)
+        keywords = _resolve_insert_keywords(engine, req)
+        ids = engine.insert(pts, keywords, attrs=attrs,
+                            tenant=req.get("tenant"))
         return {"op": "insert", "ids": [int(i) for i in ids],
                 **_ingest_state(engine)}
     if op == "delete":
@@ -96,7 +116,122 @@ def handle_request(engine: NKSEngine, req: dict, *, tier: str, k: int) -> dict:
     if op == "compact":
         ran = engine.compact()
         return {"op": "compact", "compacted": ran, **_ingest_state(engine)}
+    if op == "snapshot":
+        return {"op": "snapshot", "snapshot": engine.snapshot(),
+                **_ingest_state(engine)}
+    if op == "health":
+        # Synchronous loop: no queue, never degraded.
+        return {"op": "health", "queue_depth": 0, "degraded": False,
+                "runtime": False,
+                "wal_attached": engine.wal_stats is not None,
+                **_ingest_state(engine)}
     raise ValueError(f"unknown op: {op!r}")
+
+
+def handle_request_safe(engine: NKSEngine, req, *, tier: str, k: int) -> dict:
+    """One request in, one response out — errors become structured envelopes
+    so a malformed request can never kill the stream."""
+    if isinstance(req, dict) and "__parse_error__" in req:
+        return {"op": "parse", "status": "error",
+                "error": req["__parse_error__"]}
+    if not isinstance(req, dict):
+        return {"op": "parse", "status": "error",
+                "error": f"request must be a JSON object, got "
+                         f"{type(req).__name__}"}
+    try:
+        return handle_request(engine, req, tier=tier, k=k)
+    except Exception as e:
+        return {"op": str(req.get("op", "query")), "status": "error",
+                "error": f"{type(e).__name__}: {e}"}
+
+
+# ---------------------------------------------------------------- runtime path
+def _to_runtime_request(engine: NKSEngine, req: dict, *, tier: str,
+                        k: int) -> dict:
+    """Validate/convert a JSONL request into the runtime's structured form
+    (raises on a malformed request — caller wraps)."""
+    op = req.get("op", "query")
+    if op == "query":
+        return {"op": "query",
+                "keywords": [int(v) for v in req["keywords"]],
+                "k": int(req.get("k", k)), "tier": req.get("tier", tier),
+                "filter": req.get("filter")}
+    if op == "insert":
+        attrs = {name: np.asarray(col)
+                 for name, col in (req.get("attrs") or {}).items()} or None
+        return {"op": "insert",
+                "points": np.asarray(req["points"], dtype=np.float32),
+                "keywords": _resolve_insert_keywords(engine, req),
+                "attrs": attrs, "tenant": req.get("tenant")}
+    if op == "delete":
+        return {"op": "delete", "ids": req["ids"]}
+    if op in ("compact", "snapshot", "health"):
+        return {"op": op}
+    raise ValueError(f"unknown op: {op!r}")
+
+
+def _format_runtime_response(req: dict, resp) -> dict:
+    if resp.status != "ok":
+        return {"op": resp.op, "status": resp.status, "error": resp.error}
+    if resp.op == "query":
+        out = {
+            "op": "query",
+            "keywords": [int(v) for v in req["keywords"]],
+            "latency_ms": round(resp.latency_s * 1e3, 2),
+            "results": [{"ids": list(c.ids), "diameter": round(c.diameter, 4)}
+                        for c in resp.payload["candidates"]],
+        }
+        if resp.degraded:
+            out["degraded"] = True
+            out["tier"] = resp.tier
+        if req.get("filter"):
+            out["filter"] = req["filter"]
+        return out
+    return {"op": resp.op, **resp.payload}
+
+
+def serve_with_runtime(runtime, engine: NKSEngine, reqs, *, tier: str, k: int):
+    """Drive the async runtime while preserving the JSONL stream contract:
+    runs of consecutive queries are admitted together (so they coalesce into
+    batched dispatches); an ingest op is awaited before anything later is
+    admitted (its ack orders the stream). Yields one response dict per
+    request, in request order."""
+    def flush(window):
+        for raw, ticket in window:
+            if ticket is None:        # conversion failed; raw is the envelope
+                yield raw
+            else:
+                yield _format_runtime_response(raw, ticket.result())
+    window: list = []
+    for req in reqs:
+        envelope = None
+        rt_req = None
+        if isinstance(req, dict) and "__parse_error__" in req:
+            envelope = {"op": "parse", "status": "error",
+                        "error": req["__parse_error__"]}
+        elif not isinstance(req, dict):
+            envelope = {"op": "parse", "status": "error",
+                        "error": f"request must be a JSON object, got "
+                                 f"{type(req).__name__}"}
+        else:
+            try:
+                rt_req = _to_runtime_request(engine, req, tier=tier, k=k)
+            except Exception as e:
+                envelope = {"op": str(req.get("op", "query")),
+                            "status": "error",
+                            "error": f"{type(e).__name__}: {e}"}
+        if envelope is not None:
+            window.append((envelope, None))
+            continue
+        if rt_req["op"] == "query":
+            window.append((req, runtime.submit(rt_req)))
+            continue
+        # Ingest/health: drain queries first, then await the op's ack before
+        # admitting anything later.
+        yield from flush(window)
+        window = []
+        yield _format_runtime_response(req, runtime.submit(rt_req).result())
+    yield from flush(window)
 
 
 def main():
@@ -125,6 +260,24 @@ def main():
                     help="build a multi-tenant corpus with this many tenants "
                          "(t0, t1, ...), each with a private keyword "
                          "namespace of size --u; implies --attrs")
+    ap.add_argument("--runtime", action="store_true",
+                    help="serve through the async fault-tolerant runtime "
+                         "(admission queue, coalesced batches, off-thread "
+                         "compaction)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="runtime admission-queue bound (backpressure past "
+                         "it)")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="runtime coalesced query batch cap")
+    ap.add_argument("--batch-window-ms", type=float, default=2.0,
+                    help="runtime coalescing window for a young batch head")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request deadline (expired requests get "
+                         "a timeout response)")
+    ap.add_argument("--wal", default=None, metavar="DIR",
+                    help="attach a write-ahead log rooted here: every ingest "
+                         "ack becomes durable; recover with "
+                         "NKSEngine.recover(DIR)")
     args = ap.parse_args()
 
     if args.tenants:
@@ -143,17 +296,43 @@ def main():
                        build_approx=(args.tier != "exact"),
                        compact_ratio=args.compact_ratio,
                        compact_min=args.compact_min)
+    if args.wal:
+        engine.attach_wal(args.wal)
     print(f"serving: corpus N={ds.n} d={ds.dim} U={ds.n_keywords} "
-          f"tier={args.tier}", file=sys.stderr)
+          f"tier={args.tier}"
+          + (f" wal={args.wal}" if args.wal else "")
+          + (" runtime=async" if args.runtime else ""), file=sys.stderr)
 
     if args.requests:
-        reqs = [json.loads(line) for line in open(args.requests) if line.strip()]
+        reqs = []
+        for line in open(args.requests):
+            if not line.strip():
+                continue
+            try:
+                reqs.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                reqs.append({"__parse_error__": f"malformed JSON: {e}"})
     else:
         reqs = [{"keywords": q, "k": args.k} for q in
                 random_queries(ds, 3, args.queries, seed=1)]
 
-    for req in reqs:
-        print(json.dumps(handle_request(engine, req, tier=args.tier, k=args.k)))
+    if args.runtime:
+        from repro.serve.runtime import RuntimeConfig, ServingRuntime
+        runtime = ServingRuntime(engine, RuntimeConfig(
+            max_queue=args.max_queue, max_batch=args.max_batch,
+            batch_window_s=args.batch_window_ms / 1e3,
+            default_deadline_s=args.deadline_s,
+            tier=args.tier, k=args.k))
+        try:
+            for out in serve_with_runtime(runtime, engine, reqs,
+                                          tier=args.tier, k=args.k):
+                print(json.dumps(out), flush=True)
+        finally:
+            runtime.close()
+    else:
+        for req in reqs:
+            print(json.dumps(handle_request_safe(engine, req, tier=args.tier,
+                                                 k=args.k)), flush=True)
 
 
 if __name__ == "__main__":

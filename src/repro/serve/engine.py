@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
 from typing import Sequence
 
@@ -63,6 +64,8 @@ from repro.core.index import IndexDelta, PromishIndex, absorb_into, build_index
 from repro.core.subset_search import enumerate_with_block, local_groups
 from repro.core.types import (Candidate, KeywordDataset, StreamingCorpus,
                               TopK, make_dataset)
+from repro.serve import wal as walmod
+from repro.serve.faults import NO_FAULTS, FaultPlan
 
 # Process-global corpus-generation tokens: every (engine, compaction) pair
 # gets a unique token, so a DistanceBackend shared across engines can never
@@ -276,9 +279,34 @@ class IngestStats:
     points_deleted: int = 0
     compactions: int = 0
     generation: int = 0         # == engine.corpus_generation
+    wal_appends: int = 0        # ops made durable before their ack
+    replayed_ops: int = 0       # ops re-applied by the last recover()
+    snapshots: int = 0          # log-rolling snapshots taken
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+class StaleCompactionError(RuntimeError):
+    """A prepared compaction no longer matches the live streaming state —
+    an ingest op slipped in between prepare and commit. The runtime prevents
+    this by deferring ingest while a rebuild is in flight; hitting it means
+    the caller broke that protocol, so the commit refuses rather than swap
+    in a bulk that silently drops the interleaved ops."""
+
+
+@dataclasses.dataclass
+class PreparedCompaction:
+    """The O(N) half of a compaction, computed off-thread: the folded bulk
+    dataset, freshly built indices, and the external-id remap. ``version``
+    pins the streaming state it was prepared against; commit re-checks it."""
+
+    version: tuple[int, int]            # (corpus rows, tombstones) at prepare
+    bulk: KeywordDataset
+    index_e: PromishIndex | None
+    index_a: PromishIndex | None
+    live: np.ndarray
+    ext: np.ndarray
 
 
 class NKSEngine:
@@ -286,7 +314,8 @@ class NKSEngine:
                  seed: int = 0, build_exact: bool = True, build_approx: bool = True,
                  mesh=None, w0: float | None = None, n_buckets: int | None = None,
                  compact_ratio: float = 0.25, compact_min: int = 4096,
-                 auto_compact: bool = True):
+                 auto_compact: bool = True, faults: FaultPlan | None = None,
+                 _indices: tuple | None = None):
         """``mesh`` attaches a device plane: a jax Mesh (with a ``data``
         axis), an existing :class:`~repro.core.device_plane.DevicePlane`, or
         ``"auto"`` to acquire the serving mesh from the environment
@@ -312,10 +341,16 @@ class NKSEngine:
             self.plane = get_plane(mesh)
         self._build_params = dict(m=m, n_scales=n_scales, seed=seed,
                                   w0=w0, n_buckets=n_buckets)
-        if build_exact:
-            self.index_e = build_index(dataset, exact=True, **self._build_params)
-        if build_approx:
-            self.index_a = build_index(dataset, exact=False, **self._build_params)
+        if _indices is not None:
+            # Recovery path: the snapshot already holds the built structures.
+            self.index_e, self.index_a = _indices
+        else:
+            if build_exact:
+                self.index_e = build_index(dataset, exact=True,
+                                           **self._build_params)
+            if build_approx:
+                self.index_a = build_index(dataset, exact=False,
+                                           **self._build_params)
         # Streaming-ingest state: lazy — a never-mutated engine keeps the
         # frozen KeywordDataset and the classic single-corpus code paths.
         self._view: StreamingCorpus | None = None
@@ -332,6 +367,13 @@ class NKSEngine:
         self.compact_min = int(compact_min)
         self.auto_compact = bool(auto_compact)
         self.ingest = IngestStats()
+        # Durability (attach_wal / recover): every mutating op is appended —
+        # and fsync'd — before its ack. None = volatile engine (the default).
+        self._faults = faults or NO_FAULTS
+        self._wal: walmod.WriteAheadLog | None = None
+        self._wal_root: str | None = None
+        self._wal_epoch = 0
+        self._replaying = False
 
     # ------------------------------------------------------------- streaming
     @property
@@ -416,6 +458,21 @@ class NKSEngine:
         self._ext_append(ext)
         self.ingest.inserts += 1
         self.ingest.points_inserted += len(ids)
+        # Durability point: the op is in memory; make it survive process
+        # death *before* anything downstream (auto-compaction, the ack) runs.
+        self._wal_append({
+            "op": "insert",
+            "points": walmod.encode_array(
+                np.ascontiguousarray(points, np.float32)),
+            "keywords": [[int(v) for v in ks] for ks in keywords],
+            "attrs": ({name: walmod.encode_array(np.asarray(col))
+                       for name, col in attrs.items()}
+                      if attrs is not None else None),
+            "tenant": (walmod.encode_array(tenant)
+                       if isinstance(tenant, np.ndarray) else tenant),
+            "first_ext": int(ext[0]) if len(ext) else int(self._next_ext),
+            "count": len(ext),
+        })
         self._maybe_compact()
         return ext
 
@@ -444,18 +501,22 @@ class NKSEngine:
         self._commit_streaming(view, deltas)
         self.ingest.deletes += 1
         self.ingest.points_deleted += len(ext)
+        self._wal_append({"op": "delete", "ids": [int(i) for i in ext]})
         self._maybe_compact()
         return len(ext)
 
-    def compact(self) -> bool:
-        """Fold the delta into a fresh immutable bulk index (atomic swap).
+    def compact_prepare(self) -> PreparedCompaction | None:
+        """The O(N) half of :meth:`compact`, safe to run off-thread.
 
-        Rebuilds with the constructor's build params over the live points in
-        external-id order, remaps internal ids, bumps ``corpus_generation``
-        (invalidating backend packed-subset/tile caches), and resets the
-        delta. No-op (returns False) when nothing is dirty."""
+        Reads (never mutates) the live streaming view: folds bulk ∪ delta
+        into a fresh frozen dataset and builds the new indices. Serving
+        continues against the old generation the whole time — the swap is
+        :meth:`compact_commit`, a cheap pointer exchange. The caller must
+        hold ingest still between prepare and commit (the runtime defers
+        ingest ops while a rebuild is in flight); commit verifies that via
+        ``version``. Returns None when nothing is dirty."""
         if not self._streaming_dirty():
-            return False
+            return None
         view = self._view
         live = view.live_internal_ids()
         if not len(live):
@@ -463,15 +524,41 @@ class NKSEngine:
             # keep serving from tombstones until something is inserted.
             raise ValueError("compact: corpus would be empty — insert points "
                              "before compacting away the last live one")
-        self._bulk = view.compacted_dataset()
+        version = (view.n, view.n_tombstones)
+        bulk = view.compacted_dataset()
+        # Mid-rebuild fault point: the compacted dataset exists, the new
+        # indices do not — a crash here must leave the old generation fully
+        # intact (nothing has been swapped yet).
+        self._faults.check("compact")
+        index_e = build_index(bulk, exact=True, **self._build_params) \
+            if self.index_e is not None else None
+        index_a = build_index(bulk, exact=False, **self._build_params) \
+            if self.index_a is not None else None
+        return PreparedCompaction(version=version, bulk=bulk,
+                                  index_e=index_e, index_a=index_a, live=live,
+                                  ext=np.ascontiguousarray(self._ext_of[live]))
+
+    def compact_commit(self, prep: PreparedCompaction | None) -> bool:
+        """Atomically swap a prepared compaction in (the double-buffer flip).
+
+        Cheap — pointer swaps plus the generation bump that scopes the
+        backend LRU caches. Raises :class:`StaleCompactionError` when the
+        streaming state moved since prepare (an interleaved ingest op)."""
+        if prep is None:
+            return False
+        if self._view is None or \
+                (self._view.n, self._view.n_tombstones) != prep.version:
+            raise StaleCompactionError(
+                f"streaming state moved since prepare "
+                f"(prepared @ rows,tombstones={prep.version}, live="
+                f"{(self._view.n, self._view.n_tombstones) if self._view is not None else None})")
+        self._bulk = prep.bulk
         if self.index_e is not None:
-            self.index_e = build_index(self._bulk, exact=True,
-                                       **self._build_params)
+            self.index_e = prep.index_e
         if self.index_a is not None:
-            self.index_a = build_index(self._bulk, exact=False,
-                                       **self._build_params)
-        self._ext_buf = np.ascontiguousarray(self._ext_of[live])
-        self._ext_len = len(live)
+            self.index_a = prep.index_a
+        self._ext_buf = prep.ext
+        self._ext_len = len(prep.live)
         # The map is identity iff no id was ever retired: ext values are
         # strictly increasing in [0, _next_ext), so full size == identity.
         # (_next_ext must participate: a compaction that trimmed only
@@ -484,10 +571,25 @@ class NKSEngine:
         self._corpus_token = next(_CORPUS_TOKENS)
         self.ingest.compactions += 1
         self.ingest.generation = self.corpus_generation
+        self._wal_append({"op": "compact",
+                          "generation": self.corpus_generation})
         return True
 
+    def compact(self) -> bool:
+        """Fold the delta into a fresh immutable bulk index (atomic swap).
+
+        Rebuilds with the constructor's build params over the live points in
+        external-id order, remaps internal ids, bumps ``corpus_generation``
+        (invalidating backend packed-subset/tile caches), and resets the
+        delta. No-op (returns False) when nothing is dirty. Synchronous
+        convenience over the prepare/commit split the runtime uses for
+        off-thread rebuilds."""
+        return self.compact_commit(self.compact_prepare())
+
     def _maybe_compact(self) -> None:
-        if not self.auto_compact or self._view is None:
+        if not self.auto_compact or self._view is None or self._replaying:
+            # During WAL replay the logged compact records drive compaction —
+            # the cadence already fired once, at its logged position.
             return
         if self._view.n_tombstones >= self._view.n:
             # Everything is dead: nothing to rebuild from. The delete that
@@ -512,6 +614,165 @@ class NKSEngine:
         stats.delta_points = self.delta_points
         stats.tombstones = self.tombstone_count
         stats.compactions = self.ingest.compactions
+
+    # ------------------------------------------------------------ durability
+    def _wal_append(self, record: dict) -> None:
+        if self._wal is None or self._replaying:
+            return
+        self._wal.append(record)
+        self.ingest.wal_appends += 1
+
+    def _engine_meta(self) -> dict:
+        return {
+            "next_ext": int(self._next_ext),
+            "identity_ids": bool(self._identity_ids),
+            "corpus_generation": int(self.corpus_generation),
+            "compact_ratio": self.compact_ratio,
+            "compact_min": self.compact_min,
+            "auto_compact": self.auto_compact,
+            "build_exact": self.index_e is not None,
+            "build_approx": self.index_a is not None,
+            "ingest": self.ingest.as_dict(),
+        }
+
+    def attach_wal(self, root: str, faults: FaultPlan | None = None) -> None:
+        """Make the engine durable under ``root`` (see ``serve.wal``).
+
+        Writes the genesis snapshot (epoch 0: the current frozen state, so
+        recovery always has a base corpus) and opens the WAL segment; from
+        here every insert/delete/compact is fsync'd before its ack. A dirty
+        engine compacts first — a snapshot is a clean generation boundary."""
+        if self._wal is not None:
+            raise RuntimeError(f"WAL already attached at {self._wal_root}")
+        if faults is not None:
+            self._faults = faults
+        if self._streaming_dirty():
+            self.compact()
+        os.makedirs(root, exist_ok=True)
+        self._wal_root = root
+        self._wal_epoch = 0
+        self._write_snapshot(0)
+        walmod.write_manifest(root, 0)
+        self._wal = walmod.WriteAheadLog(walmod.wal_path(root, 0),
+                                         faults=self._faults)
+
+    def _write_snapshot(self, epoch: int) -> None:
+        walmod.save_snapshot(
+            walmod.snap_dir(self._wal_root, epoch),
+            dataset=self._bulk, index_e=self.index_e, index_a=self.index_a,
+            build_params=self._build_params,
+            engine_meta={**self._engine_meta(),
+                         "ext": walmod.encode_array(
+                             np.ascontiguousarray(self._ext_of))})
+
+    def snapshot(self) -> str:
+        """Roll the log: fold the delta (if dirty), persist the full engine
+        state as the next epoch's snapshot, and start an empty WAL segment.
+        After this, recovery replays nothing — the ack horizon moves from
+        "snapshot + log suffix" to "snapshot". Returns the snapshot dir."""
+        if self._wal is None:
+            raise RuntimeError("snapshot() requires an attached WAL "
+                               "(attach_wal first)")
+        if self._streaming_dirty():
+            self.compact()
+        epoch = self._wal_epoch + 1
+        self._write_snapshot(epoch)
+        self._wal.close()
+        # Ordering: the new (empty) segment must exist before the manifest
+        # names its epoch — recovery reads the manifest first.
+        new_wal = walmod.WriteAheadLog(walmod.wal_path(self._wal_root, epoch),
+                                       faults=self._faults)
+        walmod.write_manifest(self._wal_root, epoch)
+        self._wal = new_wal
+        self._wal_epoch = epoch
+        self.ingest.snapshots += 1
+        walmod.gc_epochs(self._wal_root, epoch)
+        return walmod.snap_dir(self._wal_root, epoch)
+
+    def _replay_record(self, rec: dict) -> None:
+        op = rec["op"]
+        if op == "insert":
+            attrs = rec["attrs"]
+            if attrs is not None:
+                attrs = {name: walmod.decode_array(col)
+                         for name, col in attrs.items()}
+            tenant = rec["tenant"]
+            if isinstance(tenant, dict) and "__nd__" in tenant:
+                tenant = walmod.decode_array(tenant)
+            ext = self.insert(walmod.decode_array(rec["points"]),
+                              rec["keywords"], attrs=attrs, tenant=tenant)
+            if len(ext) != rec["count"] or \
+                    (len(ext) and int(ext[0]) != rec["first_ext"]):
+                raise IOError(
+                    f"WAL replay diverged: insert assigned ids "
+                    f"{int(ext[0]) if len(ext) else None}+{len(ext)}, log "
+                    f"recorded {rec['first_ext']}+{rec['count']}")
+        elif op == "delete":
+            self.delete(rec["ids"])
+        elif op == "compact":
+            self.compact()
+            if self.corpus_generation != rec["generation"]:
+                raise IOError(
+                    f"WAL replay diverged: compact reached generation "
+                    f"{self.corpus_generation}, log recorded "
+                    f"{rec['generation']}")
+        else:
+            raise IOError(f"unknown WAL record op {op!r}")
+
+    @classmethod
+    def recover(cls, root: str, *, mesh=None, verify: bool = True,
+                faults: FaultPlan | None = None) -> "NKSEngine":
+        """Rebuild an engine from its WAL root: latest snapshot + log replay.
+
+        The recovered engine answers **bit-identically** to an uninterrupted
+        engine that executed the same acknowledged op sequence (the snapshot
+        stores the built index structures verbatim, and replay re-runs the
+        deterministic ingest path, including logged compactions at their
+        logged positions). The WAL stays attached — the engine keeps
+        appending to the recovered segment."""
+        man = walmod.read_manifest(root)
+        epoch = int(man["epoch"])
+        snap = walmod.load_snapshot(walmod.snap_dir(root, epoch),
+                                    verify=verify)
+        bp, em = snap["build_params"], snap["engine"]
+        engine = cls(snap["dataset"],
+                     m=bp["m"], n_scales=bp["n_scales"], seed=bp["seed"],
+                     w0=bp["w0"], n_buckets=bp["n_buckets"],
+                     build_exact=em["build_exact"],
+                     build_approx=em["build_approx"], mesh=mesh,
+                     compact_ratio=em["compact_ratio"],
+                     compact_min=em["compact_min"],
+                     auto_compact=em["auto_compact"], faults=faults,
+                     _indices=(snap["index_e"], snap["index_a"]))
+        engine._ext_buf = walmod.decode_array(em["ext"])
+        engine._ext_len = len(engine._ext_buf)
+        engine._next_ext = em["next_ext"]
+        engine._identity_ids = em["identity_ids"]
+        engine.corpus_generation = em["corpus_generation"]
+        for field, value in em["ingest"].items():
+            setattr(engine.ingest, field, value)
+        engine.ingest.replayed_ops = 0
+        engine._wal_root = root
+        engine._wal_epoch = epoch
+        engine._replaying = True
+        try:
+            for rec in walmod.WriteAheadLog.replay(
+                    walmod.wal_path(root, epoch)):
+                engine._replay_record(rec)
+                engine.ingest.replayed_ops += 1
+        finally:
+            engine._replaying = False
+        engine._wal = walmod.WriteAheadLog(walmod.wal_path(root, epoch),
+                                           faults=engine._faults)
+        return engine
+
+    @property
+    def wal_stats(self) -> "walmod.WalStats | None":
+        return self._wal.stats if self._wal is not None else None
+
+    def close(self) -> None:
+        if self._wal is not None:
+            self._wal.close()
 
     @classmethod
     def ingest_embeddings(cls, api, params, batches: Sequence[dict],
@@ -590,6 +851,11 @@ class NKSEngine:
     def query(self, keywords: Sequence[int], k: int = 1,
               tier: str = "approx", filter=None) -> QueryResult:
         t0 = time.perf_counter()
+        # Same API-boundary validation as query_batch: every entry path
+        # (clean per-query searches included) rejects out-of-dictionary
+        # keywords with the same ValueError instead of a numpy IndexError
+        # from inside the search.
+        self._validate_queries([keywords])
         flt = self._resolve_filter(filter)
         if tier in ("exact", "approx") and (self._streaming_dirty()
                                             or flt is not None):

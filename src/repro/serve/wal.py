@@ -1,0 +1,382 @@
+"""Durable ingest: write-ahead log + atomic engine snapshots.
+
+The serving contract (EMBANKS-style durable-on-disk half): **an acknowledged
+write survives process death**. Every mutating op (insert / delete / compact)
+is appended to the WAL — framed, checksummed, fsync'd — *before* the engine
+acknowledges it; :meth:`repro.serve.engine.NKSEngine.recover` replays the log
+on top of the latest snapshot into a state whose answers are bit-identical to
+an uninterrupted run over the same acknowledged op sequence.
+
+Crash semantics fall out of the framing:
+
+  * crash *before* the append completes → the tail record is torn (short or
+    checksum-mismatched); replay stops cleanly at the last whole record. The
+    op was never acknowledged, so losing it is allowed.
+  * crash *after* the fsync, before the ack → the record is durable and
+    replay applies it. The client never saw an ack, so applying it is also
+    allowed (at-least-once on unacknowledged tails, exactly-once on acks).
+
+Record framing: ``<u32 payload_len><u32 crc32(payload)><payload>`` where the
+payload is UTF-8 JSON; numpy arrays ride as ``{"__nd__": dtype, shape, b64}``.
+
+Snapshots roll the log. A snapshot captures the *frozen* engine state — the
+paper's bulk dataset + both index flavours + the external-id map and ingest
+counters — written to a temp dir, fsync'd, and atomically renamed; the root
+``MANIFEST.json`` (also atomically replaced) names the live epoch. A dirty
+engine compacts first (folding the delta), so a snapshot is always a clean
+generation boundary and the fresh WAL segment starts empty:
+
+    <root>/MANIFEST.json      {"epoch": E}
+    <root>/snap-<E>/          snapshot for epoch E (meta.json + .npy leaves,
+                              per-leaf sha256 in the meta manifest)
+    <root>/wal-<E>.log        ops acknowledged since snapshot E
+
+This module also owns the index/dataset serialisation that used to live in
+the seed-era ``core/disk.py`` (retired in this PR): one ``.npy`` per flat
+array + an offsets sidecar per CSR, optionally memory-mapped on load — the
+paper's §IX directory-file layout, now with attrs / tenant columns and the
+engine's streaming counters riding along.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import struct
+import tempfile
+import zlib
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.index import HIStructure, PromishIndex
+from repro.core.types import KeywordDataset, TenantNamespace
+from repro.serve.faults import NO_FAULTS, FaultPlan
+from repro.utils.csr import CSR
+
+_FRAME = struct.Struct("<II")          # (payload_len, crc32)
+
+
+# --------------------------------------------------------------------- arrays
+def encode_array(arr: np.ndarray) -> dict:
+    """JSON-safe numpy array: dtype string + shape + base64 payload."""
+    arr = np.ascontiguousarray(arr)
+    return {"__nd__": arr.dtype.str, "shape": list(arr.shape),
+            "b64": base64.b64encode(arr.tobytes()).decode("ascii")}
+
+
+def decode_array(obj: dict) -> np.ndarray:
+    raw = base64.b64decode(obj["b64"])
+    return np.frombuffer(raw, dtype=np.dtype(obj["__nd__"])) \
+        .reshape(obj["shape"]).copy()
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+# ------------------------------------------------------------------------ WAL
+class TornRecordError(ValueError):
+    """A WAL record failed its length/CRC check mid-stream (not at the tail)."""
+
+
+@dataclasses.dataclass
+class WalStats:
+    appends: int = 0
+    bytes: int = 0
+    replayed: int = 0
+    torn_tail: bool = False     # last replay ended on a torn record
+
+
+class WriteAheadLog:
+    """Append-only framed record log with fsync-before-ack durability.
+
+    ``faults`` injects the ``wal_ack`` crash point *after* the record is
+    durable but before :meth:`append` returns — the kill-between-append-and-
+    ack window the recovery suite exercises.
+    """
+
+    def __init__(self, path: str, faults: FaultPlan | None = None):
+        self.path = path
+        self._faults = faults or NO_FAULTS
+        self._f = open(path, "ab")
+        self.stats = WalStats()
+
+    def append(self, record: dict) -> int:
+        payload = json.dumps(record, separators=(",", ":")).encode("utf-8")
+        frame = _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
+        self._f.write(frame)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self.stats.appends += 1
+        self.stats.bytes += len(frame)
+        # The record is durable from here on; a crash in this window loses
+        # the ack but never the write.
+        self._faults.check("wal_ack")
+        return len(frame)
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    # ------------------------------------------------------------- replay
+    @staticmethod
+    def replay(path: str, stats: WalStats | None = None) -> Iterator[dict]:
+        """Yield whole records in append order; stop cleanly at a torn tail.
+
+        A short or checksum-mismatched record that is *not* the last one in
+        the file raises :class:`TornRecordError` — mid-file corruption is
+        data loss of acknowledged writes and must never be silently skipped.
+        """
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            data = f.read()
+        off, n = 0, len(data)
+        while off < n:
+            if off + _FRAME.size > n:
+                if stats is not None:
+                    stats.torn_tail = True
+                return
+            length, crc = _FRAME.unpack_from(data, off)
+            payload = data[off + _FRAME.size: off + _FRAME.size + length]
+            if len(payload) < length or zlib.crc32(payload) != crc:
+                if off + _FRAME.size + length >= n:
+                    if stats is not None:
+                        stats.torn_tail = True
+                    return
+                raise TornRecordError(
+                    f"corrupt WAL record at byte {off} of {path} "
+                    f"(not at tail — acknowledged data is damaged)")
+            if stats is not None:
+                stats.replayed += 1
+            yield json.loads(payload.decode("utf-8"))
+            off += _FRAME.size + length
+
+
+# ------------------------------------------------------------------ snapshots
+def _save_arr(root: str, name: str, arr: np.ndarray, manifest: dict) -> None:
+    arr = np.ascontiguousarray(arr)
+    np.save(os.path.join(root, f"{name}.npy"), arr)
+    manifest[name] = {"sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+                      "dtype": arr.dtype.str, "shape": list(arr.shape)}
+
+
+def _load_arr(root: str, name: str, manifest: dict, *, mmap: bool,
+              verify: bool) -> np.ndarray:
+    arr = np.load(os.path.join(root, f"{name}.npy"),
+                  mmap_mode="r" if mmap else None)
+    if verify:
+        got = hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+        if got != manifest[name]["sha256"]:
+            raise IOError(f"snapshot leaf {name!r} failed its checksum "
+                          f"(root={root})")
+    return arr
+
+
+def _save_csr(root: str, name: str, csr: CSR, manifest: dict) -> None:
+    _save_arr(root, f"{name}.offsets", csr.offsets, manifest)
+    _save_arr(root, f"{name}.values", csr.values, manifest)
+
+
+def _load_csr(root: str, name: str, manifest: dict, *, mmap: bool,
+              verify: bool) -> CSR:
+    return CSR(offsets=_load_arr(root, f"{name}.offsets", manifest,
+                                 mmap=mmap, verify=verify),
+               values=_load_arr(root, f"{name}.values", manifest,
+                                mmap=mmap, verify=verify))
+
+
+def save_dataset(root: str, dataset: KeywordDataset, manifest: dict) -> dict:
+    """Persist a frozen corpus into ``root``; returns its meta dict."""
+    _save_arr(root, "points", dataset.points, manifest)
+    _save_csr(root, "kw", dataset.kw, manifest)
+    _save_csr(root, "ikp", dataset.ikp, manifest)
+    meta = {"n": dataset.n, "dim": dataset.dim,
+            "n_keywords": dataset.n_keywords,
+            "attrs": sorted(dataset.attrs) if dataset.attrs else [],
+            "tenant_of": dataset.tenant_of is not None, "tenants": None}
+    for name in meta["attrs"]:
+        _save_arr(root, f"attr_{name}", dataset.attrs[name], manifest)
+    if dataset.tenant_of is not None:
+        _save_arr(root, "tenant_of", dataset.tenant_of, manifest)
+    if dataset.tenants is not None:
+        meta["tenants"] = {
+            "names": list(dataset.tenants.names),
+            "kw_offsets": [int(v) for v in dataset.tenants.kw_offsets]}
+    return meta
+
+
+def load_dataset(root: str, meta: dict, manifest: dict, *, mmap: bool,
+                 verify: bool) -> KeywordDataset:
+    attrs = {name: np.asarray(_load_arr(root, f"attr_{name}", manifest,
+                                        mmap=mmap, verify=verify))
+             for name in meta["attrs"]} or None
+    tenant_of = _load_arr(root, "tenant_of", manifest, mmap=mmap,
+                          verify=verify) if meta["tenant_of"] else None
+    tenants = None
+    if meta["tenants"]:
+        tenants = TenantNamespace(
+            names=tuple(meta["tenants"]["names"]),
+            kw_offsets=np.asarray(meta["tenants"]["kw_offsets"], np.int64))
+    return KeywordDataset(
+        points=_load_arr(root, "points", manifest, mmap=mmap, verify=verify),
+        kw=_load_csr(root, "kw", manifest, mmap=mmap, verify=verify),
+        ikp=_load_csr(root, "ikp", manifest, mmap=mmap, verify=verify),
+        n_keywords=int(meta["n_keywords"]), attrs=attrs,
+        tenant_of=tenant_of, tenants=tenants)
+
+
+def save_index(root: str, prefix: str, index: PromishIndex,
+               manifest: dict) -> dict:
+    """Persist one frozen index flavour under ``root`` with ``prefix``."""
+    _save_arr(root, f"{prefix}.z", index.z, manifest)
+    scales = []
+    for hi in index.structures:
+        _save_csr(root, f"{prefix}.s{hi.scale}.table", hi.table, manifest)
+        _save_csr(root, f"{prefix}.s{hi.scale}.khb", hi.khb, manifest)
+        scales.append({"scale": hi.scale, "width": hi.width,
+                       "n_buckets": hi.n_buckets})
+    return {"w0": index.w0, "n_scales": index.n_scales, "exact": index.exact,
+            "p_max": index.p_max, "scales": scales}
+
+
+def load_index(root: str, prefix: str, meta: dict, manifest: dict, *,
+               mmap: bool, verify: bool) -> PromishIndex:
+    structures = []
+    for sc in meta["scales"]:
+        structures.append(HIStructure(
+            scale=sc["scale"], width=sc["width"], n_buckets=sc["n_buckets"],
+            table=_load_csr(root, f"{prefix}.s{sc['scale']}.table", manifest,
+                            mmap=mmap, verify=verify),
+            khb=_load_csr(root, f"{prefix}.s{sc['scale']}.khb", manifest,
+                          mmap=mmap, verify=verify)))
+    return PromishIndex(
+        z=_load_arr(root, f"{prefix}.z", manifest, mmap=mmap, verify=verify),
+        w0=meta["w0"], n_scales=meta["n_scales"], exact=meta["exact"],
+        structures=tuple(structures), p_max=meta["p_max"])
+
+
+def save_snapshot(directory: str, *, dataset: KeywordDataset,
+                  index_e: PromishIndex | None,
+                  index_a: PromishIndex | None,
+                  build_params: dict, engine_meta: dict) -> str:
+    """Atomically write a full engine snapshot to ``directory``.
+
+    Write-to-temp + fsync + rename: a crash mid-snapshot can never leave a
+    half snapshot that recovery would pick up. ``engine_meta`` carries the
+    streaming counters (external-id map, generation, ingest totals) so a
+    recovered engine continues the id sequence exactly.
+    """
+    parent = os.path.dirname(os.path.abspath(directory)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=".tmp-snap-", dir=parent)
+    try:
+        manifest: dict = {}
+        meta = {
+            "format": 1,
+            "dataset": save_dataset(tmp, dataset, manifest),
+            "index_e": (save_index(tmp, "e", index_e, manifest)
+                        if index_e is not None else None),
+            "index_a": (save_index(tmp, "a", index_a, manifest)
+                        if index_a is not None else None),
+            "build_params": build_params,
+            "engine": engine_meta,
+            "leaves": manifest,
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
+        if os.path.exists(directory):
+            shutil.rmtree(directory)
+        os.rename(tmp, directory)
+        _fsync_dir(parent)
+        return directory
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def load_snapshot(directory: str, *, mmap: bool = False,
+                  verify: bool = True) -> dict:
+    """Load a snapshot dir -> {dataset, index_e, index_a, build_params,
+    engine} (indices None when the engine was built without that flavour)."""
+    with open(os.path.join(directory, "meta.json")) as f:
+        meta = json.load(f)
+    manifest = meta["leaves"]
+    out = {
+        "dataset": load_dataset(directory, meta["dataset"], manifest,
+                                mmap=mmap, verify=verify),
+        "index_e": None, "index_a": None,
+        "build_params": meta["build_params"],
+        "engine": meta["engine"],
+    }
+    for flavour in ("e", "a"):
+        imeta = meta[f"index_{flavour}"]
+        if imeta is not None:
+            out[f"index_{flavour}"] = load_index(
+                directory, flavour, imeta, manifest, mmap=mmap, verify=verify)
+    return out
+
+
+# ----------------------------------------------------------------- WAL roots
+def manifest_path(root: str) -> str:
+    return os.path.join(root, "MANIFEST.json")
+
+
+def snap_dir(root: str, epoch: int) -> str:
+    return os.path.join(root, f"snap-{epoch:05d}")
+
+
+def wal_path(root: str, epoch: int) -> str:
+    return os.path.join(root, f"wal-{epoch:05d}.log")
+
+
+def read_manifest(root: str) -> dict:
+    with open(manifest_path(root)) as f:
+        return json.load(f)
+
+
+def write_manifest(root: str, epoch: int) -> None:
+    """Atomically point the root at ``epoch`` (tmp file + rename)."""
+    fd, tmp = tempfile.mkstemp(prefix=".tmp-manifest-", dir=root)
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"epoch": epoch}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, manifest_path(root))
+        _fsync_dir(root)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def gc_epochs(root: str, keep_epoch: int) -> None:
+    """Drop snapshot dirs / WAL segments older than ``keep_epoch`` (run
+    after the manifest swap; a crash before this leaves stale-but-harmless
+    files that the next snapshot sweeps)."""
+    for name in os.listdir(root):
+        for prefix, strip in (("snap-", len("snap-")),
+                              ("wal-", len("wal-"))):
+            if name.startswith(prefix):
+                try:
+                    epoch = int(name[strip:].split(".")[0])
+                except ValueError:
+                    continue
+                if epoch < keep_epoch:
+                    full = os.path.join(root, name)
+                    if os.path.isdir(full):
+                        shutil.rmtree(full, ignore_errors=True)
+                    else:
+                        os.unlink(full)

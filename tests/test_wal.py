@@ -1,0 +1,228 @@
+"""Durability suite: WAL framing, torn tails, kill-after-append, snapshot
+rolling, and the recovery-parity invariant.
+
+The contract under test (README "Serving runtime"): every insert/delete/
+compact is fsync'd to the WAL *before* it is acknowledged, so
+
+  * no acknowledged write is ever lost — ``NKSEngine.recover(root)`` replays
+    the latest snapshot + log suffix to a state whose answers are
+    **bit-identical** to an uninterrupted engine that executed the same
+    acknowledged op sequence;
+  * a crash between the fsync and the ack may re-apply the unacked tail op
+    on recovery (at-least-once below the ack horizon, exactly-once above);
+  * a torn tail (crash mid-append) truncates cleanly — mid-file corruption
+    of acknowledged records is a hard ``TornRecordError``, never a silent
+    skip.
+"""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import random_queries, synthetic_dataset
+from repro.serve import wal as walmod
+from repro.serve.engine import NKSEngine
+from repro.serve.faults import FaultPlan, InjectedCrash
+
+
+def _corpus(n=260, d=6, u=24, seed=3):
+    return synthetic_dataset(n=n, d=d, u=u, t=2, seed=seed)
+
+
+def _stream(rng, n_batches, batch, d, u):
+    out = []
+    for _ in range(n_batches):
+        pts = rng.standard_normal((batch, d)).astype(np.float32)
+        kws = [sorted(rng.choice(u, size=2, replace=False).tolist())
+               for _ in range(batch)]
+        out.append((pts, kws))
+    return out
+
+
+def _answers(engine, queries, k=2):
+    out = []
+    for tier in ("exact", "approx"):
+        for r in engine.query_batch(queries, k=k, tier=tier):
+            out.append([c.key() for c in r.candidates])
+    return out
+
+
+# ------------------------------------------------------------------- framing
+def test_wal_roundtrip_and_stats(tmp_path):
+    path = str(tmp_path / "w.log")
+    log = walmod.WriteAheadLog(path)
+    recs = [{"op": "insert", "i": i, "blob": "x" * i} for i in range(7)]
+    for r in recs:
+        log.append(r)
+    log.close()
+    stats = walmod.WalStats()
+    assert list(walmod.WriteAheadLog.replay(path, stats)) == recs
+    assert stats.replayed == 7 and not stats.torn_tail
+    assert log.stats.appends == 7
+
+
+def test_wal_torn_tail_stops_cleanly(tmp_path):
+    path = str(tmp_path / "w.log")
+    log = walmod.WriteAheadLog(path)
+    for i in range(3):
+        log.append({"i": i})
+    log.close()
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[:-5])        # crash mid-append of record 2
+    stats = walmod.WalStats()
+    assert [r["i"] for r in walmod.WriteAheadLog.replay(path, stats)] == [0, 1]
+    assert stats.torn_tail
+
+
+def test_wal_midfile_corruption_raises(tmp_path):
+    path = str(tmp_path / "w.log")
+    log = walmod.WriteAheadLog(path)
+    for i in range(3):
+        log.append({"i": i, "pad": "p" * 50})
+    log.close()
+    blob = bytearray(open(path, "rb").read())
+    blob[12] ^= 0xFF                          # inside record 0's payload
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(walmod.TornRecordError):
+        list(walmod.WriteAheadLog.replay(path))
+
+
+# ------------------------------------------------------------------ recovery
+def test_recovery_parity_bit_identical(tmp_path):
+    """Crash after a mixed acked op sequence (inserts, deletes, logged
+    auto-compactions): the recovered engine answers bit-identically to an
+    uninterrupted reference on both tiers, and keeps doing so as the
+    stream continues after recovery."""
+    ds = _corpus()
+    rng = np.random.default_rng(11)
+    stream = _stream(rng, 6, 30, ds.dim, ds.n_keywords)
+    queries = random_queries(ds, 2, 6, seed=13)
+
+    wal_eng = NKSEngine(ds, seed=5, compact_min=70, compact_ratio=0.05)
+    wal_eng.attach_wal(str(tmp_path / "wal"))
+    ref_eng = NKSEngine(ds, seed=5, compact_min=70, compact_ratio=0.05)
+    acked = []
+    for i, (pts, kws) in enumerate(stream):
+        ids = wal_eng.insert(pts, kws)
+        acked.append(("insert", pts, kws, ids))
+        if i % 2:
+            dead = [int(ids[0]), int(ids[-1])]
+            wal_eng.delete(dead)
+            acked.append(("delete", dead))
+    assert wal_eng.ingest.compactions >= 1      # cadence actually exercised
+    assert wal_eng.wal_stats.appends == wal_eng.ingest.wal_appends
+    wal_eng.close()                             # simulated process death
+
+    rec = NKSEngine.recover(str(tmp_path / "wal"))
+    for op in acked:                            # reference applies acked ops
+        if op[0] == "insert":
+            ref_ids = ref_eng.insert(op[1], op[2])
+            np.testing.assert_array_equal(ref_ids, op[3])
+        else:
+            ref_eng.delete(op[1])
+    assert rec.ingest.replayed_ops == len(acked) + rec.ingest.compactions
+    assert rec.corpus_generation == ref_eng.corpus_generation
+    assert _answers(rec, queries) == _answers(ref_eng, queries)
+
+    # The stream continues: recovered engine keeps id-sequence + parity.
+    pts, kws = _stream(rng, 1, 25, ds.dim, ds.n_keywords)[0]
+    np.testing.assert_array_equal(rec.insert(pts, kws),
+                                  ref_eng.insert(pts, kws))
+    assert _answers(rec, queries) == _answers(ref_eng, queries)
+    rec.close()
+
+
+def test_kill_between_append_and_ack(tmp_path):
+    """The wal_ack crash window: the op is durable but never acknowledged.
+    Recovery applies it (at-least-once below the ack horizon) and every
+    *acknowledged* op survives — none lost."""
+    ds = _corpus(n=150)
+    rng = np.random.default_rng(7)
+    stream = _stream(rng, 4, 10, ds.dim, ds.n_keywords)
+    queries = random_queries(ds, 2, 5, seed=1)
+
+    faults = FaultPlan(crash={"wal_ack": 3})
+    eng = NKSEngine(ds, seed=2, compact_min=10_000)
+    eng.attach_wal(str(tmp_path / "wal"), faults=faults)
+    eng.insert(*stream[0])
+    eng.insert(*stream[1])
+    with pytest.raises(InjectedCrash):
+        eng.insert(*stream[2])                 # durable, never acked
+    assert faults.fired["wal_ack"] == 1
+
+    rec = NKSEngine.recover(str(tmp_path / "wal"))
+    ref = NKSEngine(ds, seed=2, compact_min=10_000)
+    for pts, kws in stream[:3]:                # acked + the durable tail op
+        ref.insert(pts, kws)
+    assert rec.ingest.replayed_ops == 3
+    assert _answers(rec, queries) == _answers(ref, queries)
+    # No acknowledged write lost: both acked batches are fully live.
+    n_acked = len(stream[0][0]) + len(stream[1][0])
+    assert rec._next_ext >= ds.n + n_acked
+    rec.close()
+
+
+def test_snapshot_rolls_log_and_gcs(tmp_path):
+    ds = _corpus(n=120)
+    rng = np.random.default_rng(3)
+    stream = _stream(rng, 5, 12, ds.dim, ds.n_keywords)
+    queries = random_queries(ds, 2, 5, seed=2)
+    root = str(tmp_path / "wal")
+
+    eng = NKSEngine(ds, seed=9, compact_min=10_000)
+    ref = NKSEngine(ds, seed=9, compact_min=10_000)
+    eng.attach_wal(root)
+    for pts, kws in stream[:3]:
+        eng.insert(pts, kws)
+        ref.insert(pts, kws)
+    snap = eng.snapshot()
+    assert eng.ingest.snapshots == 1
+    for pts, kws in stream[3:]:
+        eng.insert(pts, kws)
+        ref.insert(pts, kws)
+    eng.close()
+
+    assert walmod.read_manifest(root)["epoch"] == 1
+    import os
+    assert not os.path.exists(walmod.snap_dir(root, 0))    # GC'd
+    assert not os.path.exists(walmod.wal_path(root, 0))
+    assert os.path.isdir(snap)
+
+    rec = NKSEngine.recover(root)
+    # The ack horizon moved: only the post-snapshot suffix replays.
+    assert rec.ingest.replayed_ops == 2
+    assert _answers(rec, queries) == _answers(ref, queries)
+    rec.close()
+
+
+def test_recovery_preserves_attrs_and_tenants(tmp_path):
+    from repro.data.synthetic import attach_attrs, synthetic_tenants
+    ds = attach_attrs(synthetic_tenants({"a": 70, "b": 50}, d=5, u=15, t=2,
+                                        seed=6), seed=6)
+    rng = np.random.default_rng(5)
+    pts = rng.standard_normal((8, ds.dim)).astype(np.float32)
+    kws = [ds.tenants.resolve("a", [0, 1]) for _ in range(8)]
+    attrs = {"price": rng.uniform(0, 100, 8),
+             "category": rng.integers(0, 5, 8)}
+    flt = {"tenant": "a", "where": [["price", "<", 200]]}
+
+    eng = NKSEngine(ds, seed=4, compact_min=10_000)
+    eng.attach_wal(str(tmp_path / "wal"))
+    eng.insert(pts, kws, attrs=attrs, tenant="a")
+    ref = NKSEngine(ds, seed=4, compact_min=10_000)
+    ref.insert(pts, kws, attrs=attrs, tenant="a")
+    eng.close()
+
+    rec = NKSEngine.recover(str(tmp_path / "wal"))
+    got = rec.query([0, 1], k=3, tier="exact", filter=flt)
+    want = ref.query([0, 1], k=3, tier="exact", filter=flt)
+    assert [c.key() for c in got.candidates] == \
+        [c.key() for c in want.candidates]
+    rec.close()
+
+
+def test_attach_wal_requires_clean_start(tmp_path):
+    ds = _corpus(n=100)
+    eng = NKSEngine(ds, seed=1)
+    eng.attach_wal(str(tmp_path / "wal"))
+    with pytest.raises(RuntimeError):
+        eng.attach_wal(str(tmp_path / "other"))
+    eng.close()
