@@ -754,16 +754,28 @@ class NKSEngine:
         engine.ingest.replayed_ops = 0
         engine._wal_root = root
         engine._wal_epoch = epoch
+        wal_file = walmod.wal_path(root, epoch)
+        rstats = walmod.WalStats()
         engine._replaying = True
         try:
-            for rec in walmod.WriteAheadLog.replay(
-                    walmod.wal_path(root, epoch)):
+            for rec in walmod.WriteAheadLog.replay(wal_file, rstats):
                 engine._replay_record(rec)
                 engine.ingest.replayed_ops += 1
         finally:
             engine._replaying = False
-        engine._wal = walmod.WriteAheadLog(walmod.wal_path(root, epoch),
-                                           faults=engine._faults)
+        if rstats.torn_tail:
+            # A torn tail is an unacknowledged op and replay skipped it, but
+            # its bytes are still on disk: appending after them would plant a
+            # CRC mismatch mid-file, and the *next* recovery would raise
+            # TornRecordError — losing every write acknowledged after this
+            # recovery. Truncate to the last whole record before reopening.
+            with open(wal_file, "rb+") as f:
+                f.truncate(rstats.valid_bytes)
+                f.flush()
+                os.fsync(f.fileno())
+        engine._wal = walmod.WriteAheadLog(wal_file, faults=engine._faults)
+        engine._wal.stats.replayed = rstats.replayed
+        engine._wal.stats.torn_tail = rstats.torn_tail
         return engine
 
     @property

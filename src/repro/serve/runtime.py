@@ -94,6 +94,7 @@ class RuntimeStats:
     deferred_ingest: int = 0
     bg_compactions: int = 0
     bg_compaction_faults: int = 0
+    bg_compaction_errors: int = 0   # unexpected rebuild exceptions survived
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -184,6 +185,7 @@ class ServingRuntime:
         self._drain = True
         self._crashed: InjectedCrash | None = None
         self._compacting = False
+        self._last_compaction_error: str | None = None
         self._compact_req = threading.Event()
         self._auto_compact_was = engine.auto_compact
         engine.auto_compact = False
@@ -241,6 +243,7 @@ class ServingRuntime:
             "max_queue": self.cfg.max_queue,
             "degraded": self._overloaded(depth),
             "compaction_inflight": self._compacting,
+            "last_compaction_error": self._last_compaction_error,
             "crashed": self._crashed is not None,
             "generation": self.engine.corpus_generation,
             "delta_points": self.engine.delta_points,
@@ -260,8 +263,13 @@ class ServingRuntime:
         self._worker.join(timeout)
         self._compactor.join(timeout)
         self.engine.auto_compact = self._auto_compact_was
-        if not drain:
-            self._fail_pending("rejected", "runtime is shutting down")
+        # Unconditionally resolve whatever the threads left behind. Even a
+        # draining close can strand tickets: ingest deferred behind an
+        # in-flight compaction is flushed back into the queue by the
+        # compactor's finally block *after* the worker has already drained
+        # and exited — a caller blocked in ticket.result() with no timeout
+        # would otherwise hang forever.
+        self._fail_pending("rejected", "runtime is shutting down")
 
     def __enter__(self) -> "ServingRuntime":
         return self
@@ -320,8 +328,13 @@ class ServingRuntime:
                         batch = self._gather_locked()
                 if batch is None:
                     self._exec_ingest(head)
-                else:
+                elif batch:
                     self._exec_query_batch(batch)
+                # else: the batch-window wait inside _gather_locked released
+                # the lock and the compactor flushed deferred ingest to the
+                # queue front — the ingest barrier kept everything, so there
+                # is nothing to dispatch. Go around; the ingest op is now the
+                # head and the next iteration serves it.
         except InjectedCrash as crash:
             # The op in flight died mid-execution: like a real process death
             # its caller gets no ack — resolve it as crashed so waiters
@@ -495,6 +508,14 @@ class ServingRuntime:
             except InjectedCrash as crash:
                 self._die(crash)
                 return
+            except Exception as e:
+                # A real rebuild bug (stale-compaction race, OOM, a
+                # build_index defect) must not kill the compactor thread:
+                # nothing swapped, the old generation keeps serving, and the
+                # next churn trigger retries. Surface it in stats/health so
+                # it cannot fail silently.
+                self.stats.bg_compaction_errors += 1
+                self._last_compaction_error = f"{type(e).__name__}: {e}"
             finally:
                 with self._lock:
                     self._compacting = False

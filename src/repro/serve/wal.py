@@ -93,6 +93,7 @@ class WalStats:
     bytes: int = 0
     replayed: int = 0
     torn_tail: bool = False     # last replay ended on a torn record
+    valid_bytes: int = 0        # byte offset just past the last whole record
 
 
 class WriteAheadLog:
@@ -159,12 +160,22 @@ class WriteAheadLog:
                 stats.replayed += 1
             yield json.loads(payload.decode("utf-8"))
             off += _FRAME.size + length
+            if stats is not None:
+                # Only advanced after the consumer fully processed the
+                # record: recovery truncates a torn tail to this offset.
+                stats.valid_bytes = off
 
 
 # ------------------------------------------------------------------ snapshots
 def _save_arr(root: str, name: str, arr: np.ndarray, manifest: dict) -> None:
     arr = np.ascontiguousarray(arr)
-    np.save(os.path.join(root, f"{name}.npy"), arr)
+    # fsync each leaf: the snapshot's atomicity story is write-to-temp +
+    # fsync + rename, and after gc_epochs drops the prior epoch a
+    # page-cached-only leaf would be the sole copy of acknowledged data.
+    with open(os.path.join(root, f"{name}.npy"), "wb") as f:
+        np.save(f, arr)
+        f.flush()
+        os.fsync(f.fileno())
     manifest[name] = {"sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
                       "dtype": arr.dtype.str, "shape": list(arr.shape)}
 

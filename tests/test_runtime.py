@@ -259,6 +259,99 @@ def test_compaction_defers_ingest_not_queries(engine):
         engine.compact_prepare = orig_prepare
 
 
+def test_worker_survives_empty_coalesce(engine):
+    """The batch-window wait releases the lock; a deferred-ingest flush in
+    that window puts an ingest op at the queue head and the barrier keeps
+    everything — _gather_locked returns []. The worker must treat that as a
+    spurious wakeup, not dispatch an empty batch and die."""
+    with ServingRuntime(engine, RuntimeConfig(batch_window_s=0.0)) as rt:
+        orig = rt._gather_locked
+        calls = {"n": 0}
+
+        def racy_gather():
+            calls["n"] += 1
+            if calls["n"] == 1:
+                return []                       # simulate the lost race
+            return orig()
+        rt._gather_locked = racy_gather
+        r = rt.submit({"op": "query", "keywords": [0, 1], "k": 1}).result(5)
+        assert r.ok                             # worker looped, then served
+        assert calls["n"] >= 2
+        assert rt._worker.is_alive()
+
+
+def test_compactor_survives_unexpected_exception(engine):
+    """A real (non-injected) rebuild exception must not kill the compactor
+    thread: the old generation keeps serving, the error is surfaced in
+    stats/health, and the next churn trigger retries successfully."""
+    engine.compact_min = 40
+    engine.compact_ratio = 0.05
+    rng = np.random.default_rng(12)
+    orig_prepare = engine.compact_prepare
+    state = {"boom": True}
+
+    def buggy_prepare():
+        if state["boom"]:
+            state["boom"] = False
+            raise ValueError("rebuild bug")
+        return orig_prepare()
+    engine.compact_prepare = buggy_prepare
+    try:
+        with ServingRuntime(engine, RuntimeConfig(batch_window_s=0.0)) as rt:
+            def feed():
+                pts = rng.standard_normal((50, engine.dataset.dim)) \
+                    .astype(np.float32)
+                return rt.submit({"op": "insert", "points": pts,
+                                  "keywords": [[0, 1]] * 50}).result(10)
+            assert feed().ok
+            _wait(lambda: rt.stats.bg_compaction_errors == 1)
+            assert rt._compactor.is_alive()     # survived the bug
+            assert engine.corpus_generation == 0        # nothing swapped
+            assert "ValueError" in rt.health()["last_compaction_error"]
+            assert feed().ok                    # serving continues
+            _wait(lambda: rt.stats.bg_compactions == 1)  # retry succeeds
+        assert engine.corpus_generation == 1
+    finally:
+        engine.compact_prepare = orig_prepare
+
+
+def test_close_drain_never_strands_deferred_ingest(engine):
+    """close(drain=True) while a compaction is in flight: the worker drains
+    the queue and exits, then the compactor flushes deferred ingest into a
+    queue nobody serves. Those tickets must still resolve — a caller blocked
+    in result() with no timeout must never hang forever."""
+    engine.compact_min = 40
+    engine.compact_ratio = 0.05
+    rng = np.random.default_rng(15)
+    gate = threading.Event()
+    orig_prepare = engine.compact_prepare
+
+    def slow_prepare():
+        gate.wait(5)
+        return orig_prepare()
+    engine.compact_prepare = slow_prepare
+    try:
+        rt = ServingRuntime(engine, RuntimeConfig(batch_window_s=0.0))
+        pts = rng.standard_normal((50, engine.dataset.dim)) \
+            .astype(np.float32)
+        assert rt.submit({"op": "insert", "points": pts,
+                          "keywords": [[0, 1]] * 50}).result(10).ok
+        _wait(lambda: rt._compacting)           # rebuild gated open
+        parked = rt.submit({"op": "insert", "points": pts[:2],
+                            "keywords": [[0, 1]] * 2})
+        _wait(lambda: rt.stats.deferred_ingest >= 1)
+        closer = threading.Thread(target=rt.close)
+        closer.start()
+        _wait(lambda: not rt._worker.is_alive())    # worker drained + exited
+        gate.set()                              # now the compactor commits
+        closer.join(10)
+        assert not closer.is_alive()
+        r = parked.result(1)                    # resolved, never stranded
+        assert r.status == "rejected"           # unacked: rejection is safe
+    finally:
+        engine.compact_prepare = orig_prepare
+
+
 def test_compaction_crash_leaves_no_torn_generation(tmp_path):
     """InjectedCrash mid-rebuild (after the compacted dataset materialises,
     before the new indices exist): nothing is swapped — the old generation

@@ -160,6 +160,45 @@ def test_kill_between_append_and_ack(tmp_path):
     rec.close()
 
 
+def test_recover_append_recover_after_torn_tail(tmp_path):
+    """Crash mid-append, recover, keep writing, crash again: the first
+    recovery must truncate the torn tail before reopening the segment for
+    append — otherwise the post-recovery acknowledged writes land after the
+    torn bytes and the *second* recovery dies on a mid-file CRC mismatch,
+    losing them."""
+    import os
+    ds = _corpus(n=150)
+    rng = np.random.default_rng(17)
+    stream = _stream(rng, 3, 8, ds.dim, ds.n_keywords)
+    queries = random_queries(ds, 2, 5, seed=4)
+    root = str(tmp_path / "wal")
+
+    eng = NKSEngine(ds, seed=6, compact_min=10_000)
+    eng.attach_wal(root)
+    eng.insert(*stream[0])                     # acked
+    eng.insert(*stream[1])                     # crash tears this one below
+    eng.close()
+    path = walmod.wal_path(root, 0)
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[:-5])          # crash mid-append of op 2
+
+    rec1 = NKSEngine.recover(root)
+    assert rec1.ingest.replayed_ops == 1       # torn op never acked, skipped
+    assert rec1.wal_stats.torn_tail
+    tail = os.path.getsize(path)               # truncated to last whole rec
+    rec1.insert(*stream[2])                    # acked post-recovery
+    assert os.path.getsize(path) > tail        # appended after clean tail
+    rec1.close()
+
+    rec2 = NKSEngine.recover(root)             # must NOT TornRecordError
+    assert rec2.ingest.replayed_ops == 2
+    ref = NKSEngine(ds, seed=6, compact_min=10_000)
+    ref.insert(*stream[0])
+    ref.insert(*stream[2])
+    assert _answers(rec2, queries) == _answers(ref, queries)
+    rec2.close()
+
+
 def test_snapshot_rolls_log_and_gcs(tmp_path):
     ds = _corpus(n=120)
     rng = np.random.default_rng(3)
