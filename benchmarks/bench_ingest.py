@@ -145,11 +145,62 @@ def main(fast: bool = False, mesh: int = 0, mix: int = 10,
              f"mix=1:{mix} compactions={engine.ingest.compactions}")
         return out
 
+    def run_wal_leg() -> dict:
+        """Durable-ingest throughput: per-op fsync vs WAL group commit.
+
+        Both modes append the identical op sequence to a fresh WAL (small
+        ops, the regime where the fsync barrier dominates the absorb cost);
+        ``group`` wraps each round in ``engine.ingest_group()`` so the
+        round's acks share one barrier. Recovery equivalence is the WAL
+        suite's job — this leg measures what the coalesced barrier buys.
+        """
+        import shutil
+        import tempfile
+
+        op = max(1, ib // 20)          # small durable ops: fsync-bound
+        out: dict = {"op_points": op}
+        for mode in ("per_op", "group"):
+            root = tempfile.mkdtemp(prefix="nks-walbench-")
+            try:
+                engine = NKSEngine(ds0, m=2, n_scales=5, seed=0,
+                                   build_approx=False, auto_compact=False)
+                engine.attach_wal(root)
+                t0 = time.perf_counter()
+                for r in range(rounds):
+                    lo = n0 + r * ib
+                    pts = full.points[lo:lo + ib]
+                    kws = [full.kw.row(i).tolist()
+                           for i in range(lo, lo + ib)]
+                    if mode == "group":
+                        with engine.ingest_group():
+                            for j in range(0, ib, op):
+                                engine.insert(pts[j:j + op], kws[j:j + op])
+                    else:
+                        for j in range(0, ib, op):
+                            engine.insert(pts[j:j + op], kws[j:j + op])
+                dt = time.perf_counter() - t0
+                st = engine.wal_stats
+                out[mode] = {
+                    "points_per_s": stream_total / dt,
+                    "ops_per_s": st.appends / dt,
+                    "fsyncs": st.fsyncs,
+                    "group_commit_batch": st.group_commit_batch,
+                }
+                engine.close()
+                emit(f"ingest.wal_{mode}", 1e6 * dt / st.appends,
+                     f"fsyncs={st.fsyncs}")
+            finally:
+                shutil.rmtree(root, ignore_errors=True)
+        out["group_commit_speedup"] = round(
+            out["group"]["points_per_s"] / out["per_op"]["points_per_s"], 3)
+        return out
+
     results: dict = {
         "n0": n0, "d": ds0.dim, "fast": fast, "mesh": mesh if mesh > 1 else 1,
         "k": k, "rounds": rounds, "insert_batch": ib, "query_batch": qb,
         "mix": mix, "inserted_points": stream_total,
         "tiers": {tier: run_tier(tier) for tier in ("approx", "exact")},
+        "wal": run_wal_leg(),
     }
     # How much worse the approx tier's ingest tax is than the exact tier's:
     # the batched suspect re-verification (IndexDelta.verify_suspects) should

@@ -23,6 +23,11 @@ Serving bench (ISSUE 7): per tier, sync and runtime sustained QPS
 (higher-better, ``--threshold``) and runtime p99 latency (lower-better,
 ``--serving-latency-threshold``), plus a hard failure when the async
 runtime's QPS drops materially below the synchronous loop's.
+Size sweep (ISSUE 8): per store mode, the engine QPS at the largest size
+swept — warn-only until ``BENCH_size_baseline.json`` is committed.
+
+Each section runs through one shared ``_run_gate`` helper, which owns the
+warn-until-baseline-committed / warn-on-missing-fresh semantics.
 
 The sharded (``--mesh N``) extras are deliberately NOT gated: the
 forced-8-device run's top-level tier metrics still measure single-device
@@ -58,6 +63,10 @@ GATED_FILTERED = ("unfiltered_qps", "sweep_geomean_qps")
 # directions (a ratio of 0.5 always means "twice as bad as baseline").
 GATED_SERVING = ("qps_sync", "qps_sustained_runtime")
 GATED_SERVING_LOWER = ("p99_ms_runtime",)
+# Out-of-core size sweep (ISSUE 8): engine QPS at the largest size swept,
+# keyed by store mode ("ram"/"disk"). Warn-only until a baseline is
+# committed (baseline_required=False), like the filtered/serving gates were.
+GATED_SIZE = ("qps_exact", "qps_approx")
 
 
 def compare(fresh: dict, baseline: dict, threshold: float,
@@ -90,6 +99,42 @@ def _print_rows(rows: list[tuple]) -> None:
     for tier, metric, b, f, ratio, regressed in rows:
         flag = "  << REGRESSION" if regressed else ""
         print(f"{tier:<8}{metric:<22}{b:>12.1f}{f:>12.1f}{ratio:>8.2f}{flag}")
+
+
+def _run_gate(title: str, fresh_path: str, baseline_path: str, *,
+              require_fresh: bool, threshold: float,
+              baseline_required: bool, regen_hint: str,
+              metrics=GATED, lower_better=(), lower_threshold: float = 0.0,
+              require_rows: bool = False, contracts=None
+              ) -> "tuple[int | None, int | None]":
+    """One fresh-vs-baseline gate section: load the pair (warning until the
+    baseline is committed unless ``baseline_required``), compare the gated
+    metrics, print the table, run the per-tier ``contracts(fresh) -> int``
+    hook. Returns ``(exit_code, failures)`` — a non-None exit code
+    propagates immediately; ``failures`` is None when the gate was skipped
+    (missing file with warn semantics)."""
+    pair = _load_pair(fresh_path, baseline_path, require_fresh,
+                      baseline_required, regen_hint)
+    if isinstance(pair, int):
+        return pair, None
+    if pair is None:
+        return None, None
+    fresh, baseline = pair
+    rows, regressions = compare(fresh, baseline, threshold, metrics=metrics)
+    if lower_better:
+        lrows, lregs = compare(fresh, baseline, lower_threshold,
+                               metrics=(), lower_better=lower_better)
+        rows, regressions = rows + lrows, regressions + lregs
+    if require_rows and not rows:
+        print("ERROR: no comparable metrics between fresh and baseline",
+              file=sys.stderr)
+        return 2, None
+    print(f"\n== {title} ({fresh_path} vs {baseline_path})")
+    _print_rows(rows)
+    failures = len(regressions)
+    if contracts is not None:
+        failures += contracts(fresh)
+    return None, failures
 
 
 def _load_pair(fresh_path: str, baseline_path: str, require_fresh: bool,
@@ -129,6 +174,8 @@ def main(argv=None) -> int:
     ap.add_argument("--serving-fresh", default="BENCH_serving.json")
     ap.add_argument("--serving-baseline",
                     default="BENCH_serving_baseline.json")
+    ap.add_argument("--size-fresh", default="BENCH_size.json")
+    ap.add_argument("--size-baseline", default="BENCH_size_baseline.json")
     ap.add_argument("--serving-latency-threshold", type=float, default=0.60,
                     help="maximum tolerated p99 inflation, as 1 - base/fresh "
                          "(0.60 fails past 2.5x baseline — open-loop tail "
@@ -141,86 +188,78 @@ def main(argv=None) -> int:
                          "file is missing")
     args = ap.parse_args(argv)
 
-    failures = 0
-    compared = 0
-
-    pair = _load_pair(args.fresh, args.baseline, args.require_fresh,
-                      baseline_required=True,
-                      regen_hint="python -m benchmarks.bench_batch_engine --fast")
-    if isinstance(pair, int):
-        return pair
-    if pair is not None:
-        rows, regressions = compare(*pair, args.threshold)
-        if not rows:
-            print("ERROR: no comparable metrics between fresh and baseline",
-                  file=sys.stderr)
-            return 2
-        compared += 1
-        print(f"== batch pipeline ({args.fresh} vs {args.baseline})")
-        _print_rows(rows)
-        failures += len(regressions)
-        fresh_b = pair[0]
-        for tier, m in fresh_b.get("tiers", {}).items():
+    def batch_contracts(fresh: dict) -> int:
+        bad = 0
+        for tier, m in fresh.get("tiers", {}).items():
             # Hard failure regardless of throughput: the mixed-precision
             # prune tier / cost-model routing changed the result set. This
             # is a correctness contract, not a perf gate.
             if m.get("cascade_result_parity") is False:
                 print(f"FAIL: {tier}: cascade changed the result set "
                       f"(cascade_result_parity=false)", file=sys.stderr)
-                failures += 1
+                bad += 1
             binning = m.get("binning") or {}
             q = (binning.get("quantile") or {}).get("padded_cell_ratio")
             p = (binning.get("pow2") or {}).get("padded_cell_ratio")
             if q is not None and p is not None and q > p:
                 print(f"WARNING: {tier}: quantile binning padded more than "
                       f"pow2 ({q:.4f} > {p:.4f})", file=sys.stderr)
+        return bad
 
-    pair = _load_pair(args.filtered_fresh, args.filtered_baseline,
-                      args.require_fresh, baseline_required=False,
-                      regen_hint="python -m benchmarks.bench_filtered --fast")
-    if isinstance(pair, int):
-        return pair
-    if pair is not None:
-        fresh_f, base_f = pair
-        rows, regressions = compare(fresh_f, base_f, args.threshold,
-                                    metrics=GATED_FILTERED)
-        compared += 1
-        print(f"\n== filtered sweep ({args.filtered_fresh} vs "
-              f"{args.filtered_baseline})")
-        _print_rows(rows)
-        failures += len(regressions)
-        for tier, m in fresh_f.get("tiers", {}).items():
+    def filtered_contracts(fresh: dict) -> int:
+        bad = 0
+        for tier, m in fresh.get("tiers", {}).items():
             if m.get("d2h_match_at_full_selectivity") is False:
                 print(f"FAIL: {tier}: eligibility fold added D2H traffic "
                       f"(d2h_match_at_full_selectivity=false)",
                       file=sys.stderr)
-                failures += 1
+                bad += 1
+        return bad
 
-    pair = _load_pair(args.serving_fresh, args.serving_baseline,
-                      args.require_fresh, baseline_required=False,
-                      regen_hint="python -m benchmarks.bench_serving --fast")
-    if isinstance(pair, int):
-        return pair
-    if pair is not None:
-        fresh_s, base_s = pair
-        rows, regressions = compare(fresh_s, base_s, args.threshold,
-                                    metrics=GATED_SERVING)
-        lat_rows, lat_regressions = compare(
-            fresh_s, base_s, args.serving_latency_threshold,
-            metrics=(), lower_better=GATED_SERVING_LOWER)
-        compared += 1
-        print(f"\n== serving runtime ({args.serving_fresh} vs "
-              f"{args.serving_baseline})")
-        _print_rows(rows + lat_rows)
-        failures += len(regressions) + len(lat_regressions)
-        for tier, m in fresh_s.get("tiers", {}).items():
+    def serving_contracts(fresh: dict) -> int:
+        bad = 0
+        for tier, m in fresh.get("tiers", {}).items():
             # Contract, not a perf gate: the async runtime must at least pay
             # for the queue it adds (ISSUE 7 acceptance bar).
             ratio = m.get("runtime_vs_sync_qps")
             if ratio is not None and ratio < 1.0 - args.threshold:
                 print(f"FAIL: {tier}: runtime QPS fell to {ratio:.2f}x the "
                       f"synchronous loop (must stay ~>= 1)", file=sys.stderr)
-                failures += 1
+                bad += 1
+        return bad
+
+    gates = (
+        dict(title="batch pipeline", fresh_path=args.fresh,
+             baseline_path=args.baseline, baseline_required=True,
+             regen_hint="python -m benchmarks.bench_batch_engine --fast",
+             metrics=GATED, require_rows=True, contracts=batch_contracts),
+        dict(title="filtered sweep", fresh_path=args.filtered_fresh,
+             baseline_path=args.filtered_baseline, baseline_required=False,
+             regen_hint="python -m benchmarks.bench_filtered --fast",
+             metrics=GATED_FILTERED, contracts=filtered_contracts),
+        dict(title="serving runtime", fresh_path=args.serving_fresh,
+             baseline_path=args.serving_baseline, baseline_required=False,
+             regen_hint="python -m benchmarks.bench_serving --fast",
+             metrics=GATED_SERVING, lower_better=GATED_SERVING_LOWER,
+             lower_threshold=args.serving_latency_threshold,
+             contracts=serving_contracts),
+        dict(title="out-of-core size sweep", fresh_path=args.size_fresh,
+             baseline_path=args.size_baseline, baseline_required=False,
+             regen_hint="python -m benchmarks.fig9_size --fast --store disk",
+             metrics=GATED_SIZE),
+    )
+
+    failures = 0
+    compared = 0
+    for gate in gates:
+        code, gate_failures = _run_gate(
+            require_fresh=args.require_fresh, threshold=args.threshold,
+            **gate)
+        if code is not None:
+            return code
+        if gate_failures is not None:
+            compared += 1
+            failures += gate_failures
 
     if not compared:
         # Matches the historical missing-fresh semantics: the bench steps

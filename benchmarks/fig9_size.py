@@ -1,26 +1,169 @@
-"""Fig. 9 — query time vs dataset size N (25-d synthetic, q=5, top-1).
-ProMiSH linear in N; tree times out beyond small N."""
+"""Fig. 9 — query time vs dataset size N, through the real serving engine.
+
+The paper's size sweep (25-d corpus, top-1: ProMiSH linear in N, the tree
+baseline times out beyond small N), upgraded from the per-query search
+sketch to the batched engine — and to the out-of-core store. The corpus is
+the clustered flickr-like generator (queries sampled from real tag sets) so
+the filtered leg has attribute-space locality for the zone maps to exploit:
+
+    PYTHONPATH=src python -m benchmarks.fig9_size [--fast] \
+        [--store disk|ram] [--sizes N,N,...] [--store-dir DIR]
+
+``--store ram`` builds the index in memory (synopses attached); ``--store
+disk`` builds the columnar bulk store on disk (``repro.core.store``) and
+opens the engine over memory-mapped leaves with a resident budget of 1/4 the
+store's point bytes — the corpus is deliberately >= 4x larger than the hot
+tier, so the sweep exercises the mmap cold path. Every size also runs a
+filtered batch against a spatially-correlated attribute so the per-bucket
+zone maps have something to prune; the trajectory records the
+``buckets_pruned_zonemap`` / ``cold_bytes_read`` counters alongside QPS.
+
+Writes ``BENCH_size.json``; the ``tiers`` entry (keyed by store mode, at the
+largest size swept) feeds ``check_regression.py``'s size gate. The non-fast
+sweep reaches 1M points.
+"""
 from __future__ import annotations
 
-from benchmarks.common import emit, promish_suite
-from repro.data.synthetic import random_queries, synthetic_dataset
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
 
-SIZES = (2_000, 10_000, 30_000, 100_000)
+OUT = "BENCH_size.json"
+SIZES = (2_000, 10_000, 100_000, 1_000_000)
+FAST_SIZES = (2_000, 10_000)
 
 
-def main(fast: bool = False):
-    sizes = SIZES[:2] if fast else SIZES
+def _sized_dataset(n: int):
+    """25-d clustered corpus (the flickr-like generator, dictionary scaled
+    with N) with one spatially-correlated attribute: ``price`` tracks
+    coordinate 0, which is near-constant within a cluster — so buckets
+    (spatial cells) carry tight price zone maps and a threshold filter can
+    prune whole buckets. A uniform corpus would leave zone maps vacuous;
+    attribute-space locality is the precondition for any zone map to pay."""
+    import numpy as np
+
+    from repro.data.flickr_like import flickr_like_dataset
+
+    ds = flickr_like_dataset(n=n, d=25, u=max(100, n // 100), t=3,
+                             n_clusters=64, seed=n)
+    price = (ds.points[:, 0] / 2.55).astype(np.float64)  # ~[0, 100]
+    return dataclasses.replace(ds, attrs={"price": price})
+
+
+def _point_queries(ds, n_queries: int, seed: int) -> list[list[int]]:
+    """Queries sampled from real points' tag sets (the NKS workload shape:
+    keywords that actually co-occur, so covering buckets exist at every N)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(ds.n, size=n_queries, replace=False)
+    return [sorted(set(ds.kw.row(int(i)).tolist()))[:3] for i in idx]
+
+
+def _open_engine(ds, store: str, store_dir: str | None):
+    """Returns (engine, meta) for one sweep point; meta records the storage
+    footprint (and, in disk mode, the budget the hot tier was capped at)."""
+    from repro.core import store as storemod
+    from repro.serve.engine import NKSEngine
+
+    if store == "ram":
+        engine = NKSEngine(ds, m=2, n_scales=5, seed=0, synopsis=True)
+        return engine, {"resident": True}, None
+    tmp = store_dir or tempfile.mkdtemp(prefix="nks-size-")
+    t0 = time.perf_counter()
+    storemod.build_store(os.path.join(tmp, f"store-{ds.n}"), ds,
+                         m=2, n_scales=5, seed=0)
+    build_s = time.perf_counter() - t0
+    root = os.path.join(tmp, f"store-{ds.n}")
+    point_bytes = ds.points.nbytes
+    budget = max(1 << 20, point_bytes // 4)
+    engine = NKSEngine.from_store(root, mmap=True,
+                                  resident_budget_bytes=budget)
+    meta = {
+        "resident": False,
+        "store_bytes": storemod.store_nbytes(root),
+        "point_bytes": point_bytes,
+        "resident_budget_bytes": budget,
+        "corpus_over_budget": round(point_bytes / budget, 2),
+        "build_store_s": round(build_s, 3),
+    }
+    return engine, meta, (None if store_dir else tmp)
+
+
+def main(fast: bool = False, store: str = "ram",
+         sizes: tuple[int, ...] | None = None,
+         store_dir: str | None = None) -> dict:
+    from benchmarks.common import emit
+
+    sizes = sizes or (FAST_SIZES if fast else SIZES)
+    k, q = 1, 3
+    n_queries = 4 if fast else 16
+    flt = {"where": [["price", "<", 30.0]]}
+
+    points: dict[str, dict] = {}
+    last: dict = {}
     for n in sizes:
-        ds = synthetic_dataset(n=n, d=25, u=1_000, t=1, seed=n)
-        queries = random_queries(ds, 5, 3 if fast else 5, seed=n)
-        res = promish_suite(ds, queries, k=1, run_tree=(n <= 10_000),
-                            tree_budget=100_000)
-        emit(f"fig9.promish_e.n{n}", res["promish_e"] * 1e6, "d=25")
-        emit(f"fig9.promish_a.n{n}", res["promish_a"] * 1e6, "d=25")
-        if "tree" in res:
-            emit(f"fig9.vbrtree.n{n}", res["tree"] * 1e6,
-                 f"timeouts={res['tree_timeouts']}")
+        ds = _sized_dataset(n)
+        queries = _point_queries(ds, n_queries, seed=n + 1)
+        engine, meta, cleanup = _open_engine(ds, store, store_dir)
+        try:
+            row: dict = dict(meta)
+            for tier in ("exact", "approx"):
+                engine.query_batch(queries, k=k, tier=tier)   # warm
+                t0 = time.perf_counter()
+                engine.query_batch(queries, k=k, tier=tier)
+                dt = time.perf_counter() - t0
+                row[f"qps_{tier}"] = n_queries / dt
+                row[f"us_per_query_{tier}"] = 1e6 * dt / n_queries
+                emit(f"fig9.engine_{tier}.{store}.n{n}",
+                     1e6 * dt / n_queries, f"d=25 B={n_queries}")
+            # Filtered batch: the zone-map counters are the point — on a
+            # synopsized engine a spatial-slab predicate must prune buckets.
+            engine.query_batch(queries, k=k, tier="approx", filter=flt)
+            st = engine.last_batch_stats
+            row["filtered"] = {
+                "selectivity": st.filter_selectivity,
+                **st.tiering,
+            }
+            points[str(n)] = row
+            last = row
+        finally:
+            if cleanup is not None:
+                shutil.rmtree(cleanup, ignore_errors=True)
+
+    results = {
+        "fast": fast, "store": store, "sizes": list(sizes),
+        "k": k, "q": q, "batch": n_queries,
+        "points": points,
+        # Gate shape: one "tier" per store mode, metrics at the largest
+        # size swept (the size axis itself is the trajectory above).
+        "tiers": {store: {
+            "qps_exact": last.get("qps_exact"),
+            "qps_approx": last.get("qps_approx"),
+        }},
+    }
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {os.path.abspath(OUT)}")
+    return results
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("BENCH_FAST", "") == "1")
+    ap.add_argument("--store", choices=("ram", "disk"), default="ram")
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated size override")
+    ap.add_argument("--store-dir", default=None,
+                    help="build disk stores here (kept) instead of a "
+                         "per-size tmpdir (removed)")
+    args = ap.parse_args()
+    main(fast=args.fast, store=args.store,
+         sizes=tuple(int(s) for s in args.sizes.split(","))
+         if args.sizes else None,
+         store_dir=args.store_dir)

@@ -92,6 +92,12 @@ class BackendStats:
     host_routed_subsets: int = 0           # subsets served by host routing
     t_host_s: float = 0.0                  # wall inside host-routed bins
     bin_points: dict = dataclasses.field(default_factory=dict)
+    # Out-of-core accounting: bytes gathered out of a memory-mapped corpus
+    # (the cold tier under the packed-row/tile LRU). Each counted gather is
+    # an upper bound on the pages faulted in — rows already resident in the
+    # page cache cost nothing at runtime but are still counted, so the
+    # number reads as "bytes served from below the hot tier".
+    cold_bytes_read: int = 0
 
     def ensure_shards(self, n: int) -> None:
         for lst in (self.shard_dispatches, self.shard_valid_cells,
@@ -149,6 +155,13 @@ class DistanceBackend(abc.ABC):
 
     def __init__(self) -> None:
         self.stats = BackendStats()
+
+    def _note_cold_read(self, points: np.ndarray, n_rows: int) -> None:
+        """Count a row gather against the cold tier when ``points`` is a
+        memory-mapped store leaf (resident corpora cost nothing)."""
+        if isinstance(points, np.memmap):
+            self.stats.cold_bytes_read += \
+                int(n_rows) * int(points.shape[1]) * points.itemsize
 
     @abc.abstractmethod
     def pairwise(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -360,6 +373,7 @@ class NumpyBackend(DistanceBackend):
         out = []
         for ids, r in zip(id_lists, radii):
             pts = points[ids]
+            self._note_cold_read(points, len(ids))
             dist = self.pairwise(pts, pts)
             n_elig = None
             if eligible is None:
@@ -538,6 +552,7 @@ class PallasBackend(DistanceBackend):
                 self.stats.cache_hits += 1
                 return hit
         rows = np.ascontiguousarray(points[ids], dtype=np.float32)
+        self._note_cold_read(points, len(ids))
         payload = (rows, self._slack(rows))
         if key is not None:
             self.stats.cache_misses += 1
@@ -776,6 +791,7 @@ class PallasBackend(DistanceBackend):
             dist = self._cache_get(ck) if ck is not None else None
             if dist is None:
                 pts = points[ids]
+                self._note_cold_read(points, len(ids))
                 dist = np.sqrt(_sq_dists_f64(np.asarray(pts, np.float64)))
                 if ck is not None:
                     self.stats.cache_misses += 1
@@ -899,6 +915,7 @@ class PallasBackend(DistanceBackend):
                 if elig_dense:
                     rows = np.ascontiguousarray(
                         points[ids[row_lists[i]]], dtype=np.float32)
+                    self._note_cold_read(points, len(row_lists[i]))
                     slacks[i] = self._slack(rows)
                 else:
                     rows, slacks[i] = self._subset_rows(points, ids, key)

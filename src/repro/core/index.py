@@ -25,6 +25,111 @@ from repro.utils.csr import CSR, csr_from_pairs, ragged_arange, sorted_member
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketSynopsis:
+    """Per-bucket summary table of one scale's hashtable (zone maps).
+
+    Everything here is a *conservative superset* of the bucket's bulk
+    membership, so consulting it can only ever skip work, never answers:
+
+      * ``radius`` — an upper bound on the distance from the bucket's points
+        to their centroid (f64 max, rounded *up* into f32). ``2 * radius``
+        bounds the diameter of any subset drawn from the bucket, letting the
+        dispatcher substitute an infinite pruning radius (the all-pairs-join
+        fast path) when the bound already beats the live ``r_k``. The
+        centroid itself is a build-time intermediate and is not retained —
+        persisting it per scale would rival the corpus itself in size.
+      * ``attr_min`` / ``attr_max`` — per numeric attribute column, the
+        bucket's value range; a conjunctive :class:`~repro.core.filters.Filter`
+        clause provably empty against the range prunes the bucket before any
+        eligibility bitmask (or the bucket's member list) is materialised.
+      * ``tenant_min`` / ``tenant_max`` — same idea for tenant-scoped queries.
+
+    Empty buckets carry ``radius = 0`` and inverted ranges (min=+inf,
+    max=-inf), which every prune rule rejects harmlessly.
+    """
+
+    counts: np.ndarray                          # (n_buckets,) int32
+    radius: np.ndarray                          # (n_buckets,) float32, >= true
+    attr_min: dict                              # name -> (n_buckets,) float64
+    attr_max: dict                              # name -> (n_buckets,) float64
+    tenant_min: np.ndarray | None = None        # (n_buckets,) int32
+    tenant_max: np.ndarray | None = None
+
+    def nbytes(self) -> int:
+        total = self.counts.nbytes + self.radius.nbytes
+        total += sum(a.nbytes for a in self.attr_min.values())
+        total += sum(a.nbytes for a in self.attr_max.values())
+        if self.tenant_min is not None:
+            total += self.tenant_min.nbytes + self.tenant_max.nbytes
+        return total
+
+
+def build_synopsis(dataset: KeywordDataset, table: CSR, n_buckets: int, *,
+                   chunk: int = 1 << 21) -> BucketSynopsis:
+    """Build the per-bucket synopsis of one scale's hashtable.
+
+    Two vectorised ``reduceat`` passes over the member array (chunked so the
+    d-dimensional gather never materialises more than ~``chunk`` rows): one
+    for per-bucket centroids (sums / counts), one for the max distance to the
+    centroid. Restricting the reduceat starts to *nonempty* buckets makes
+    consecutive segments exactly bucket boundaries — empty buckets between
+    two nonempty ones contribute no entries to ``table.values``, so the
+    slice between their offsets is precisely the selected buckets' members.
+    """
+    counts = np.diff(table.offsets).astype(np.int64)
+    radius = np.zeros(n_buckets, dtype=np.float32)
+    nonempty = np.flatnonzero(counts > 0)
+    pts = dataset.points
+    if len(nonempty):
+        csum = np.cumsum(counts[nonempty])
+        b0 = 0
+        while b0 < len(nonempty):
+            base = int(csum[b0 - 1]) if b0 else 0
+            b1 = int(np.searchsorted(csum, base + chunk, side="left")) + 1
+            b1 = min(max(b1, b0 + 1), len(nonempty))
+            sel = nonempty[b0:b1]
+            lo = int(table.offsets[sel[0]])
+            hi = int(table.offsets[sel[-1] + 1])
+            rows = pts[table.values[lo:hi]].astype(np.float64)
+            starts = (table.offsets[sel] - lo).astype(np.int64)
+            cent = np.add.reduceat(rows, starts, axis=0) \
+                / counts[sel][:, None]
+            ent = np.repeat(np.arange(len(sel)), counts[sel])
+            diff = rows - cent[ent]
+            dist = np.sqrt(np.einsum("ij,ij->i", diff, diff))
+            rmax = np.maximum.reduceat(dist, starts).astype(np.float32)
+            # Round up so the f32 bound still dominates the f64 max.
+            radius[sel] = np.nextafter(rmax, np.float32(np.inf))
+            b0 = b1
+
+    def _minmax(col: np.ndarray, lo_fill, hi_fill, dtype):
+        vals = col[table.values]
+        amin = np.full(n_buckets, lo_fill, dtype=dtype)
+        amax = np.full(n_buckets, hi_fill, dtype=dtype)
+        if len(nonempty):
+            starts = table.offsets[nonempty].astype(np.int64)
+            amin[nonempty] = np.minimum.reduceat(vals, starts)
+            amax[nonempty] = np.maximum.reduceat(vals, starts)
+        return amin, amax
+
+    attr_min: dict = {}
+    attr_max: dict = {}
+    for name, col in (dataset.attrs or {}).items():
+        if not np.issubdtype(np.asarray(col).dtype, np.number):
+            continue                      # categorical strings: no zone map
+        attr_min[name], attr_max[name] = _minmax(
+            np.asarray(col, dtype=np.float64), np.inf, -np.inf, np.float64)
+    tenant_min = tenant_max = None
+    if dataset.tenant_of is not None:
+        tenant_min, tenant_max = _minmax(
+            dataset.tenant_of.astype(np.int32),
+            np.iinfo(np.int32).max, np.iinfo(np.int32).min, np.int32)
+    return BucketSynopsis(counts=counts.astype(np.int32), radius=radius,
+                          attr_min=attr_min, attr_max=attr_max,
+                          tenant_min=tenant_min, tenant_max=tenant_max)
+
+
+@dataclasses.dataclass(frozen=True)
 class HIStructure:
     """Hashtable + keyword->bucket inverted index at one scale."""
 
@@ -33,9 +138,13 @@ class HIStructure:
     n_buckets: int
     table: CSR      # bucket -> point ids (a point appears once per distinct bucket)
     khb: CSR        # keyword -> bucket ids containing >=1 point with that keyword
+    synopsis: BucketSynopsis | None = None      # zone maps (out-of-core builds)
 
     def nbytes(self) -> int:
-        return self.table.nbytes() + self.khb.nbytes()
+        total = self.table.nbytes() + self.khb.nbytes()
+        if self.synopsis is not None:
+            total += self.synopsis.nbytes()
+        return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,7 +174,8 @@ class PromishIndex:
 
 
 def _build_scale(dataset: KeywordDataset, projected: np.ndarray, scale: int,
-                 width: float, n_buckets: int, exact: bool) -> HIStructure:
+                 width: float, n_buckets: int, exact: bool,
+                 synopsis: bool = False) -> HIStructure:
     n = dataset.n
     if exact:
         keys2 = proj.bin_keys_overlapping(projected, width)
@@ -94,7 +204,9 @@ def _build_scale(dataset: KeywordDataset, projected: np.ndarray, scale: int,
     kws = dataset.kw.values[idx].astype(np.int64)
     khb = csr_from_pairs(kws, bk_rep.astype(np.int32),
                          dataset.n_keywords, dedup=True)
-    return HIStructure(scale=scale, width=width, n_buckets=n_buckets, table=table, khb=khb)
+    syn = build_synopsis(dataset, table, n_buckets) if synopsis else None
+    return HIStructure(scale=scale, width=width, n_buckets=n_buckets,
+                       table=table, khb=khb, synopsis=syn)
 
 
 # Shared CSR row-slicing gather index; now lives in ``repro.utils.csr``.
@@ -105,7 +217,7 @@ def build_index(dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
                 w0: float | None = None, exact: bool = True,
                 buckets_per_point: float = 1.0,
                 n_buckets: int | None = None,
-                seed: int = 0) -> PromishIndex:
+                seed: int = 0, synopsis: bool = False) -> PromishIndex:
     """Build a ProMiSH index (paper defaults: m=2, L=5, w0=pMax/2^L).
 
     ``buckets_per_point`` sizes the hashtable: n_buckets ~= N * factor
@@ -114,6 +226,11 @@ def build_index(dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
     independently of N — a streaming engine passes both so the bucket ids
     of points absorbed later, and of every rebuild at compaction, stay
     comparable with a fresh build over the same corpus.
+
+    ``synopsis=True`` additionally builds the per-bucket
+    :class:`BucketSynopsis` tables (zone maps + bounding radii) consumed by
+    the out-of-core planner; compaction rebuilds them automatically because
+    the flag rides in the engine's pinned build params.
     """
     rng = np.random.default_rng(seed)
     z = proj.sample_unit_vectors(rng, m, dataset.dim)
@@ -128,7 +245,8 @@ def build_index(dataset: KeywordDataset, *, m: int = 2, n_scales: int = 5,
         width = w0 * (2.0 ** s)
         # Fewer, larger buckets are expected at coarse scales; halve the table.
         nb = max(64, n_buckets >> s) if not exact else n_buckets
-        structures.append(_build_scale(dataset, projected, s, width, nb, exact))
+        structures.append(_build_scale(dataset, projected, s, width, nb,
+                                       exact, synopsis=synopsis))
     return PromishIndex(z=z, w0=float(w0), n_scales=n_scales, exact=exact,
                         structures=tuple(structures), p_max=p_max)
 

@@ -30,14 +30,25 @@ class PlanStats:
     buckets_selected: int = 0
     duplicate_subsets: int = 0
     filtered_subsets: int = 0      # pruned: no point satisfied the predicate
+    buckets_pruned_zonemap: int = 0  # zone map proved no eligible bulk member
 
 
 @dataclasses.dataclass(frozen=True)
 class SubsetTask:
-    """One covering-bucket subset F' queued for search on behalf of a query."""
+    """One covering-bucket subset F' queued for search on behalf of a query.
+
+    ``diam_ub`` bounds the diameter of any subset drawn from the source
+    bucket (``2 * synopsis radius``; +inf without a synopsis or when delta
+    members ride along). When the bound already beats the query's live
+    ``r_k`` every pair joins, so the dispatcher can substitute an infinite
+    pruning radius — the all-ones-mask fast path that skips the device —
+    without changing any result (enumeration settles membership in float64
+    at the live radius either way).
+    """
 
     qidx: int            # position in the batch
     f_ids: np.ndarray    # sorted unique point ids of F'
+    diam_ub: float = float("inf")
 
 
 def query_bitset(dataset: KeywordDataset, query: Sequence[int]) -> np.ndarray:
@@ -112,7 +123,8 @@ def plan_scale(index: PromishIndex, scale: int,
                stats: PlanStats | None = None,
                delta=None,
                eligible: np.ndarray | None = None,
-               ctx: BatchPlanContext | None = None) -> list[SubsetTask]:
+               ctx: BatchPlanContext | None = None,
+               zone=None) -> list[SubsetTask]:
     """Collect every subset to search at ``scale`` for the active queries.
 
     ``explored`` maps query index -> Algorithm-2 hash set (exact set-hash on
@@ -138,8 +150,19 @@ def plan_scale(index: PromishIndex, scale: int,
     (counted in ``PlanStats.filtered_subsets``). Pruning runs after the
     Algorithm-2 dedup, so a fully-ineligible subset is checked once per
     query, not once per covering bucket.
+
+    ``zone`` (a :class:`repro.core.store.ZoneMapPruner`, requires
+    ``eligible``) consults the scale's bucket synopsis *before* the member
+    list is touched: a bucket whose zone map is provably disjoint from the
+    filter — and that has no delta members, which the bulk-built synopsis
+    cannot speak for — is skipped outright (``buckets_pruned_zonemap``),
+    saving the cold-tier gather the other prunes would still pay. Since a
+    zone-rejected bucket's subset is entirely ineligible, the eligibility
+    prune above would have dropped it anyway: results are bit-identical with
+    ``zone`` on or off, only the counters (and cold reads) differ.
     """
     hi = index.structures[scale]
+    syn = getattr(hi, "synopsis", None)
     tasks: list[SubsetTask] = []
     if delta is not None and len(active):
         # Resolve suspect (keyword, bucket) coverage once for the whole
@@ -156,17 +179,28 @@ def plan_scale(index: PromishIndex, scale: int,
         else:
             cover = delta.covering_buckets(scale, queries[qidx])
             d_buckets, d_ids = delta.scale_pairs(scale, bs)
-        for b in cover:
+        rej = zone.reject(syn, cover) \
+            if zone is not None and eligible is not None else None
+        for ci, b in enumerate(cover):
             if stats is not None:
                 stats.buckets_selected += 1
+            dlo = dhi_b = 0
+            if d_buckets is not None and len(d_buckets):
+                dlo, dhi_b = np.searchsorted(d_buckets, [b, b + 1])
+            if rej is not None and rej[ci] and dhi_b == dlo:
+                # The synopsis speaks for the bulk members only; with no
+                # delta members riding along, every point the bucket could
+                # contribute is provably ineligible — skip before the
+                # (possibly cold) member-list gather.
+                if stats is not None:
+                    stats.buckets_pruned_zonemap += 1
+                continue
             pts = hi.table.row(int(b))
             # table rows are sorted unique point ids (CSR contract), so the
             # bitset filter preserves that — no np.unique on the hot path.
             f = np.ascontiguousarray(pts[bs[pts]], dtype=np.int64)
-            if d_buckets is not None and len(d_buckets):
-                lo, hi_b = np.searchsorted(d_buckets, [b, b + 1])
-                if hi_b > lo:
-                    f = np.concatenate([f, d_ids[lo:hi_b]])
+            if dhi_b > dlo:
+                f = np.concatenate([f, d_ids[dlo:dhi_b]])
             if len(f) == 0:
                 continue
             if explored is not None:
@@ -180,7 +214,9 @@ def plan_scale(index: PromishIndex, scale: int,
                 if stats is not None:
                     stats.filtered_subsets += 1
                 continue
-            tasks.append(SubsetTask(qidx=qidx, f_ids=f))
+            diam_ub = 2.0 * float(syn.radius[b]) \
+                if syn is not None and dlo == dhi_b else float("inf")
+            tasks.append(SubsetTask(qidx=qidx, f_ids=f, diam_ub=diam_ub))
     return tasks
 
 

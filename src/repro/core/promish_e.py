@@ -40,6 +40,7 @@ class SearchStats:
     subsets_searched: int = 0
     duplicate_subsets: int = 0
     filtered_subsets: int = 0      # predicate-pruned subsets (filtered NKS)
+    buckets_pruned_zonemap: int = 0  # zone-map-skipped buckets (plan layer)
     candidates_explored: int = 0   # N_p
     scales_visited: int = 0
     fallback: bool = False

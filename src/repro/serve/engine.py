@@ -49,6 +49,7 @@ batch, ``engine.ingest`` the lifetime counters.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import os
@@ -58,6 +59,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import plan, promish_a, promish_e
+from repro.core import store as storemod
 from repro.core.backend import DistanceBackend, get_backend
 from repro.core.filters import Filter
 from repro.core.index import IndexDelta, PromishIndex, absorb_into, build_index
@@ -100,6 +102,9 @@ class ScaleStats:
     dispatches: int = 0          # device/loop distance dispatches this scale
     join_pairs: int = 0
     queries_finished: int = 0
+    # Out-of-core pruning (zone maps / bounding radii; zero without synopses):
+    buckets_pruned_zonemap: int = 0
+    buckets_pruned_radius: int = 0
 
 
 @dataclasses.dataclass
@@ -174,6 +179,14 @@ class PipelineStats:
     host_routed_subsets: int = 0
     bin_occupancy: dict = dataclasses.field(default_factory=dict)
     bin_strategy: str = ""
+    # Out-of-core tiering (ISSUE 8): buckets the planner skipped because the
+    # filter was provably disjoint from their zone maps, subsets dispatched
+    # through the all-ones fast path because their bucket's diameter bound
+    # already beat the live r_k, and bytes gathered from a memory-mapped
+    # (cold-tier) corpus. All zero on a resident engine without synopses.
+    buckets_pruned_zonemap: int = 0
+    buckets_pruned_radius: int = 0
+    cold_bytes_read: int = 0
 
     @property
     def dispatches_per_scale(self) -> list[int]:
@@ -268,6 +281,16 @@ class PipelineStats:
             "d2h_bytes": self.d2h_bytes,
         }
 
+    @property
+    def tiering(self) -> dict:
+        """JSON-ready out-of-core tiering summary for the benchmark
+        trajectory."""
+        return {
+            "buckets_pruned_zonemap": self.buckets_pruned_zonemap,
+            "buckets_pruned_radius": self.buckets_pruned_radius,
+            "cold_bytes_read": self.cold_bytes_read,
+        }
+
 
 @dataclasses.dataclass
 class IngestStats:
@@ -315,6 +338,8 @@ class NKSEngine:
                  mesh=None, w0: float | None = None, n_buckets: int | None = None,
                  compact_ratio: float = 0.25, compact_min: int = 4096,
                  auto_compact: bool = True, faults: FaultPlan | None = None,
+                 synopsis: bool = False,
+                 resident_budget_bytes: int | None = None,
                  _indices: tuple | None = None):
         """``mesh`` attaches a device plane: a jax Mesh (with a ``data``
         axis), an existing :class:`~repro.core.device_plane.DevicePlane`, or
@@ -340,7 +365,12 @@ class NKSEngine:
             from repro.core.device_plane import get_plane
             self.plane = get_plane(mesh)
         self._build_params = dict(m=m, n_scales=n_scales, seed=seed,
-                                  w0=w0, n_buckets=n_buckets)
+                                  w0=w0, n_buckets=n_buckets,
+                                  synopsis=synopsis)
+        # Hot-tier budget for out-of-core serving: caps the pallas backend's
+        # packed-tile LRU so a memory-mapped corpus stays within its
+        # configured resident footprint (None = backend default).
+        self.resident_budget_bytes = resident_budget_bytes
         if _indices is not None:
             # Recovery path: the snapshot already holds the built structures.
             self.index_e, self.index_a = _indices
@@ -373,6 +403,7 @@ class NKSEngine:
         self._wal: walmod.WriteAheadLog | None = None
         self._wal_root: str | None = None
         self._wal_epoch = 0
+        self._wal_group = 0         # ingest_group() nesting depth
         self._replaying = False
 
     # ------------------------------------------------------------- streaming
@@ -619,8 +650,34 @@ class NKSEngine:
     def _wal_append(self, record: dict) -> None:
         if self._wal is None or self._replaying:
             return
-        self._wal.append(record)
+        # Inside an ingest_group() the fsync is deferred to the group barrier
+        # (one fsync per batch window); the ack ordering contract moves with
+        # it — callers must not ack grouped ops until the group exits.
+        self._wal.append(record, sync=self._wal_group == 0)
         self.ingest.wal_appends += 1
+
+    @contextlib.contextmanager
+    def ingest_group(self):
+        """Group-commit scope: WAL appends inside the block defer their fsync
+        to one barrier at exit (``WriteAheadLog.sync``), so a run of ingest
+        ops acknowledged together pays a single durability barrier.
+
+        The fsync-before-ack contract is preserved at the group granularity:
+        every record in the group is durable before the ``with`` block
+        returns, so a caller that acks only after the block (the runtime's
+        ingest-run path) never acks a volatile write. Nests harmlessly — only
+        the outermost exit issues the barrier. A volatile engine (no WAL)
+        degrades to a no-op scope."""
+        self._wal_group += 1
+        try:
+            yield self
+        finally:
+            self._wal_group -= 1
+            if self._wal_group == 0 and self._wal is not None \
+                    and not self._replaying:
+                # InjectedCrash from the wal_ack fault point propagates from
+                # here — after the fsync, before any caller could ack.
+                self._wal.sync()
 
     def _engine_meta(self) -> dict:
         return {
@@ -738,6 +795,7 @@ class NKSEngine:
         engine = cls(snap["dataset"],
                      m=bp["m"], n_scales=bp["n_scales"], seed=bp["seed"],
                      w0=bp["w0"], n_buckets=bp["n_buckets"],
+                     synopsis=bp.get("synopsis", False),
                      build_exact=em["build_exact"],
                      build_approx=em["build_approx"], mesh=mesh,
                      compact_ratio=em["compact_ratio"],
@@ -777,6 +835,34 @@ class NKSEngine:
         engine._wal.stats.replayed = rstats.replayed
         engine._wal.stats.torn_tail = rstats.torn_tail
         return engine
+
+    @classmethod
+    def from_store(cls, directory: str, *, mesh=None, mmap: bool = True,
+                   verify: bool = False,
+                   resident_budget_bytes: int | None = None,
+                   **kw) -> "NKSEngine":
+        """Open an engine over an out-of-core bulk store (``core.store``).
+
+        With ``mmap=True`` (the default, and the point) the corpus points,
+        keyword CSRs, and index bucket tables stay on disk as memory-mapped
+        leaves — only touched pages become resident, the per-bucket synopses
+        load eagerly (they are tiny and consulted per plan), and
+        ``resident_budget_bytes`` caps the backend's hot-tier tile cache.
+        Answers are bit-identical to an in-RAM engine built with the store's
+        recorded ``build_params``: the store pins the hash geometry, so
+        streaming absorbs and compactions continue the exact same sequence.
+        """
+        st = storemod.load_store(directory, mmap=mmap, verify=verify)
+        bp = st["build_params"] or {}
+        return cls(st["dataset"],
+                   m=bp.get("m", 2), n_scales=bp.get("n_scales", 5),
+                   seed=bp.get("seed", 0), w0=bp.get("w0"),
+                   n_buckets=bp.get("n_buckets"),
+                   synopsis=bp.get("synopsis", False),
+                   build_exact=st["index_e"] is not None,
+                   build_approx=st["index_a"] is not None,
+                   mesh=mesh, resident_budget_bytes=resident_budget_bytes,
+                   _indices=(st["index_e"], st["index_a"]), **kw)
 
     @property
     def wal_stats(self) -> "walmod.WalStats | None":
@@ -937,10 +1023,22 @@ class NKSEngine:
         if not prepared:
             return 0, 0, 0
         d0 = backend.stats.dispatches
+        # Radius substitution: when the source bucket's diameter bound
+        # already beats the query's live r_k, every pair in the subset joins
+        # — the backend's infinite-radius path synthesizes the identical
+        # all-ones join without touching the (possibly cold) point rows.
+        # Result- and join_count-preserving for both backends.
+        radii = []
+        for t, _ in prepared:
+            r = pqs[t.qidx].kth_diameter()
+            if np.isfinite(r) and t.diam_ub <= r:
+                r = float("inf")
+                stats.buckets_pruned_radius += 1
+            radii.append(r)
         blocks = backend.self_join_blocks(
             self.dataset.points,
             [t.f_ids for t, _ in prepared],
-            [pqs[t.qidx].kth_diameter() for t, _ in prepared],
+            radii,
             keys=[t.f_ids.tobytes() for t, _ in prepared],
             generation=self._corpus_token,
             eligible=eligible)
@@ -992,6 +1090,16 @@ class NKSEngine:
             live = self.dataset.n - self.tombstone_count
             stats.filter_selectivity = round(
                 stats.eligible_points / live, 6) if live else 0.0
+        # Zone-map pruning: with per-bucket synopses built (synopsis=True /
+        # a disk store) and a filter in play, the planner can skip buckets
+        # whose zone maps are provably disjoint from the predicate before
+        # their member lists are gathered. Pure accounting win — results are
+        # bit-identical with the pruner on or off.
+        zone = None
+        if flt is not None and eligible is not None \
+                and index.structures[0].synopsis is not None:
+            zp = storemod.ZoneMapPruner(flt, self.dataset)
+            zone = zp if zp.active else None
         # One BatchPlanContext per batch: keyword masks and covering-bucket
         # selections are memoized for the batch's lifetime (the corpus is
         # frozen while the batch runs).
@@ -1013,19 +1121,23 @@ class NKSEngine:
             t0 = time.perf_counter()
             tasks = plan.plan_scale(index, s, queries, bitsets, active,
                                     explored, pstats, delta=delta,
-                                    eligible=eligible, ctx=pctx)
+                                    eligible=eligible, ctx=pctx, zone=zone)
             stats.t_plan_s += time.perf_counter() - t0
             sstats.buckets_selected = pstats.buckets_selected
             sstats.duplicate_subsets = pstats.duplicate_subsets
             sstats.filtered_subsets = pstats.filtered_subsets
             stats.filtered_subsets += pstats.filtered_subsets
+            sstats.buckets_pruned_zonemap = pstats.buckets_pruned_zonemap
+            stats.buckets_pruned_zonemap += pstats.buckets_pruned_zonemap
             sstats.tasks_planned = len(tasks)
+            pr0 = stats.buckets_pruned_radius
             searched, dispatches, pairs = self._run_tasks(
                 tasks, queries, pqs, backend, stats, eligible=eligible,
                 ctx=pctx, timers=timers)
             sstats.tasks_searched = searched
             sstats.dispatches = dispatches
             sstats.join_pairs = pairs
+            sstats.buckets_pruned_radius = stats.buckets_pruned_radius - pr0
             # Per-query termination, exactly as the per-query searches do it:
             # E: Lemma-2 radius test after the scale; A: first full PQ.
             still = []
@@ -1054,6 +1166,8 @@ class NKSEngine:
         stats.cache_misses = backend.stats.cache_misses - b0.cache_misses
         stats.h2d_bytes = backend.stats.h2d_bytes - b0.h2d_bytes
         stats.d2h_bytes = backend.stats.d2h_bytes - b0.d2h_bytes
+        stats.cold_bytes_read = (backend.stats.cold_bytes_read
+                                 - b0.cold_bytes_read)
         stats.sharded_dispatches = (backend.stats.sharded_dispatches
                                     - b0.sharded_dispatches)
         stats.t_collective_s = backend.stats.t_collective_s - b0.t_collective_s
@@ -1154,7 +1268,14 @@ class NKSEngine:
     def _resolve_backend(self, backend: str | DistanceBackend) -> DistanceBackend:
         """Backend resolution is where the plane plugs in: a string
         ``"pallas"`` on a mesh-attached engine gets the sharded dispatch
-        route; instances pass through untouched (caller's placement wins)."""
-        if backend == "pallas" and self.plane is not None:
-            return get_backend(backend, plane=self.plane)
+        route, and an out-of-core engine's ``resident_budget_bytes`` caps
+        the hot-tier tile LRU; instances pass through untouched (caller's
+        placement — and cache sizing — wins)."""
+        if backend == "pallas":
+            kw = {}
+            if self.plane is not None:
+                kw["plane"] = self.plane
+            if self.resident_budget_bytes is not None:
+                kw["cache_bytes"] = self.resident_budget_bytes
+            return get_backend(backend, **kw)
         return get_backend(backend)

@@ -91,6 +91,7 @@ class RuntimeStats:
     dispatch_failures: int = 0      # batches that exhausted their retries
     single_fallbacks: int = 0       # per-request isolation runs
     ingest_ops: int = 0
+    ingest_runs: int = 0            # multi-op runs group-committed together
     deferred_ingest: int = 0
     bg_compactions: int = 0
     bg_compaction_faults: int = 0
@@ -298,11 +299,11 @@ class ServingRuntime:
         self._queue = keep
 
     def _worker_loop(self) -> None:
-        head: Ticket | None = None
+        run: list[Ticket] | None = None
         batch: list[Ticket] | None = None
         try:
             while True:
-                head = batch = None
+                run = batch = None
                 with self._lock:
                     while not self._queue and not self._stop:
                         self._work.wait(0.05)
@@ -315,19 +316,24 @@ class ServingRuntime:
                     head = self._queue[0]
                     hop = head.request.get("op", "query")
                     if hop in _INGEST_OPS:
-                        self._queue.popleft()
                         if self._compacting:
                             # Park it: the rebuild prepared against the
                             # frozen view; an interleaved mutation would be
                             # silently dropped by the swap.
+                            self._queue.popleft()
                             self._deferred.append(head)
                             self.stats.deferred_ingest += 1
                             continue
-                        batch = None
+                        # A consecutive run of ingest ops at the head shares
+                        # one WAL group commit: every op's record hits the
+                        # log, one fsync makes the run durable, then every
+                        # ack fires. Admission order is preserved — queries
+                        # behind the run still see all of it.
+                        run = self._gather_ingest_locked()
                     else:
                         batch = self._gather_locked()
-                if batch is None:
-                    self._exec_ingest(head)
+                if run is not None:
+                    self._exec_ingest_run(run)
                 elif batch:
                     self._exec_query_batch(batch)
                 # else: the batch-window wait inside _gather_locked released
@@ -338,9 +344,13 @@ class ServingRuntime:
         except InjectedCrash as crash:
             # The op in flight died mid-execution: like a real process death
             # its caller gets no ack — resolve it as crashed so waiters
-            # unblock, then take the whole runtime down.
+            # unblock, then take the whole runtime down. (A grouped ingest
+            # run that crashed at its group barrier may have made records
+            # durable — recovery replays them; the callers never saw an ack,
+            # so at-least-once on unacknowledged writes holds, same as the
+            # per-op fsync window.)
             inflight = batch if batch is not None \
-                else ([head] if head is not None else [])
+                else (run if run is not None else [])
             for t in inflight:
                 if not t.done():
                     self.stats.crashed += 1
@@ -382,6 +392,16 @@ class ServingRuntime:
                 keep.append(t)
         self._queue = keep
         return batch
+
+    def _gather_ingest_locked(self) -> list[Ticket]:
+        """Pop the consecutive ingest run at the queue head (caller holds the
+        lock, head is known to be an ingest op). Capped at ``max_batch`` so a
+        deep write burst cannot starve queries behind it indefinitely."""
+        run: list[Ticket] = []
+        while self._queue and len(run) < self.cfg.max_batch \
+                and self._queue[0].request.get("op", "query") in _INGEST_OPS:
+            run.append(self._queue.popleft())
+        return run
 
     def _batch_key(self, req: dict) -> tuple:
         return (req.get("tier", self.cfg.tier), int(req.get("k", self.cfg.k)),
@@ -443,38 +463,62 @@ class ServingRuntime:
                 op="query", status="ok", tier=eff_tier, degraded=degraded,
                 payload={"candidates": res.candidates}))
 
-    def _exec_ingest(self, ticket: Ticket) -> None:
-        req = ticket.request
+    def _apply_ingest(self, req: dict) -> RuntimeResponse:
+        """Apply one ingest op (caller holds the engine lock — and, for
+        grouped runs, the engine's ``ingest_group`` scope). Builds the
+        response but does NOT resolve it: inside a group the ack must wait
+        for the group's durability barrier. A failed op never reached its
+        WAL append (validation precedes mutation), so rejecting it inside a
+        group leaves the group's durable record set exactly the applied ops."""
         op = req.get("op")
         try:
-            with self._engine_lock:
-                if op == "insert":
-                    ids = self.engine.insert(
-                        req["points"], req["keywords"],
-                        attrs=req.get("attrs"), tenant=req.get("tenant"))
-                    payload = {"ids": [int(i) for i in ids]}
-                elif op == "delete":
-                    payload = {"deleted": self.engine.delete(req["ids"])}
-                elif op == "compact":
-                    payload = {"compacted": self.engine.compact()}
-                elif op == "snapshot":
-                    payload = {"snapshot": self.engine.snapshot()}
-                else:
-                    raise ValueError(f"unknown ingest op {op!r}")
-                payload.update(generation=self.engine.corpus_generation,
-                               delta_points=self.engine.delta_points,
-                               tombstones=self.engine.tombstone_count,
-                               compactions=self.engine.ingest.compactions)
+            if op == "insert":
+                ids = self.engine.insert(
+                    req["points"], req["keywords"],
+                    attrs=req.get("attrs"), tenant=req.get("tenant"))
+                payload = {"ids": [int(i) for i in ids]}
+            elif op == "delete":
+                payload = {"deleted": self.engine.delete(req["ids"])}
+            elif op == "compact":
+                payload = {"compacted": self.engine.compact()}
+            elif op == "snapshot":
+                payload = {"snapshot": self.engine.snapshot()}
+            else:
+                raise ValueError(f"unknown ingest op {op!r}")
+            payload.update(generation=self.engine.corpus_generation,
+                           delta_points=self.engine.delta_points,
+                           tombstones=self.engine.tombstone_count,
+                           compactions=self.engine.ingest.compactions)
         except InjectedCrash:
             raise
         except Exception as e:
-            self.stats.errors += 1
-            ticket._resolve(RuntimeResponse(op=op, status="error",
-                                            error=f"{type(e).__name__}: {e}"))
-            return
-        self.stats.ingest_ops += 1
-        self.stats.completed += 1
-        ticket._resolve(RuntimeResponse(op=op, status="ok", payload=payload))
+            return RuntimeResponse(op=op, status="error",
+                                   error=f"{type(e).__name__}: {e}")
+        return RuntimeResponse(op=op, status="ok", payload=payload)
+
+    def _exec_ingest_run(self, run: list[Ticket]) -> None:
+        """Execute a consecutive ingest run under one WAL group commit.
+
+        Every op in the run appends its WAL record with the fsync deferred;
+        the ``ingest_group`` exit issues one barrier covering all of them,
+        and only then do the acks fire — fsync-before-ack at run
+        granularity. A run of one degrades to exactly the old per-op path
+        (``ingest_group`` around a single append syncs once)."""
+        resolved: list[tuple[Ticket, RuntimeResponse]] = []
+        with self._engine_lock:
+            with self.engine.ingest_group():
+                for t in run:
+                    resolved.append((t, self._apply_ingest(t.request)))
+            # the group barrier has returned: every applied op is durable
+        if len(run) > 1:
+            self.stats.ingest_runs += 1
+        for ticket, resp in resolved:
+            if resp.ok:
+                self.stats.ingest_ops += 1
+                self.stats.completed += 1
+            else:
+                self.stats.errors += 1
+            ticket._resolve(resp)
         self._maybe_trigger_compaction()
 
     # ------------------------------------------------------------- compaction

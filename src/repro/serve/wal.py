@@ -31,17 +31,22 @@ generation boundary and the fresh WAL segment starts empty:
                               per-leaf sha256 in the meta manifest)
     <root>/wal-<E>.log        ops acknowledged since snapshot E
 
-This module also owns the index/dataset serialisation that used to live in
-the seed-era ``core/disk.py`` (retired in this PR): one ``.npy`` per flat
-array + an offsets sidecar per CSR, optionally memory-mapped on load — the
-paper's §IX directory-file layout, now with attrs / tenant columns and the
-engine's streaming counters riding along.
+The index/dataset leaf serialisation (one ``.npy`` per flat array + an
+offsets sidecar per CSR, optionally memory-mapped on load — the paper's §IX
+directory-file layout) now lives in :mod:`repro.core.store`, shared between
+snapshots here and the out-of-core bulk store; this module re-exports the
+helpers for its snapshot trees and keeps the WAL itself.
+
+**Group commit**: ``append(record, sync=False)`` defers the fsync so a run
+of ops acknowledged together (the runtime's ingest batch window) pays one
+barrier — :meth:`WriteAheadLog.sync` — instead of one fsync per op. The
+fsync-before-ack contract is unchanged: the caller must not ack any deferred
+record until ``sync()`` returns.
 """
 from __future__ import annotations
 
 import base64
 import dataclasses
-import hashlib
 import json
 import os
 import shutil
@@ -52,10 +57,12 @@ from typing import Iterator
 
 import numpy as np
 
-from repro.core.index import HIStructure, PromishIndex
-from repro.core.types import KeywordDataset, TenantNamespace
+from repro.core.index import PromishIndex
+from repro.core.store import fsync_dir as _fsync_dir
+from repro.core.store import (load_dataset, load_index, save_dataset,
+                              save_index)
+from repro.core.types import KeywordDataset
 from repro.serve.faults import NO_FAULTS, FaultPlan
-from repro.utils.csr import CSR
 
 _FRAME = struct.Struct("<II")          # (payload_len, crc32)
 
@@ -74,14 +81,6 @@ def decode_array(obj: dict) -> np.ndarray:
         .reshape(obj["shape"]).copy()
 
 
-def _fsync_dir(path: str) -> None:
-    fd = os.open(path, os.O_RDONLY)
-    try:
-        os.fsync(fd)
-    finally:
-        os.close(fd)
-
-
 # ------------------------------------------------------------------------ WAL
 class TornRecordError(ValueError):
     """A WAL record failed its length/CRC check mid-stream (not at the tail)."""
@@ -94,37 +93,81 @@ class WalStats:
     replayed: int = 0
     torn_tail: bool = False     # last replay ended on a torn record
     valid_bytes: int = 0        # byte offset just past the last whole record
+    fsyncs: int = 0             # durability barriers actually issued
+    group_commits: int = 0      # sync() barriers covering >= 1 deferred record
+    group_committed: int = 0    # records made durable by those barriers
+
+    @property
+    def group_commit_batch(self) -> float | None:
+        """Mean records per group-commit barrier (None before the first)."""
+        if not self.group_commits:
+            return None
+        return self.group_committed / self.group_commits
 
 
 class WriteAheadLog:
     """Append-only framed record log with fsync-before-ack durability.
 
     ``faults`` injects the ``wal_ack`` crash point *after* the record is
-    durable but before :meth:`append` returns — the kill-between-append-and-
-    ack window the recovery suite exercises.
+    durable but before the caller could ack it — in :meth:`append` on the
+    per-op path, in :meth:`sync` on the group-commit path (the deferred
+    records become durable there). Either way the kill window the recovery
+    suite exercises sits between durability and ack.
     """
 
     def __init__(self, path: str, faults: FaultPlan | None = None):
         self.path = path
         self._faults = faults or NO_FAULTS
         self._f = open(path, "ab")
+        self._pending = 0           # records written but not yet fsync'd
         self.stats = WalStats()
 
-    def append(self, record: dict) -> int:
+    def append(self, record: dict, *, sync: bool = True) -> int:
+        """Frame + write one record; make it durable unless ``sync=False``.
+
+        ``sync=False`` is the group-commit half: the record is buffered (and
+        flushed to the OS) but the fsync barrier is deferred to the next
+        :meth:`sync`. The caller owns the contract that no deferred record is
+        acknowledged before that barrier returns.
+        """
         payload = json.dumps(record, separators=(",", ":")).encode("utf-8")
         frame = _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
         self._f.write(frame)
         self._f.flush()
-        os.fsync(self._f.fileno())
         self.stats.appends += 1
         self.stats.bytes += len(frame)
-        # The record is durable from here on; a crash in this window loses
-        # the ack but never the write.
-        self._faults.check("wal_ack")
+        if sync:
+            os.fsync(self._f.fileno())
+            self.stats.fsyncs += 1
+            # The record is durable from here on; a crash in this window
+            # loses the ack but never the write.
+            self._faults.check("wal_ack")
+        else:
+            self._pending += 1
         return len(frame)
+
+    def sync(self) -> int:
+        """Group-commit barrier: one fsync covering every deferred append.
+        Returns the number of records it made durable (0 = nothing pending,
+        no fsync issued)."""
+        pending, self._pending = self._pending, 0
+        if not pending:
+            return 0
+        os.fsync(self._f.fileno())
+        self.stats.fsyncs += 1
+        self.stats.group_commits += 1
+        self.stats.group_committed += pending
+        # Durable now — same kill-between-durability-and-ack window as the
+        # per-op path, covering the whole group's acks at once.
+        self._faults.check("wal_ack")
+        return pending
 
     def close(self) -> None:
         if not self._f.closed:
+            if self._pending:
+                # Defensive: a close with deferred records must not leave
+                # them page-cache-only (e.g. snapshot() rolling the segment).
+                self.sync()
             self._f.close()
 
     # ------------------------------------------------------------- replay
@@ -167,114 +210,8 @@ class WriteAheadLog:
 
 
 # ------------------------------------------------------------------ snapshots
-def _save_arr(root: str, name: str, arr: np.ndarray, manifest: dict) -> None:
-    arr = np.ascontiguousarray(arr)
-    # fsync each leaf: the snapshot's atomicity story is write-to-temp +
-    # fsync + rename, and after gc_epochs drops the prior epoch a
-    # page-cached-only leaf would be the sole copy of acknowledged data.
-    with open(os.path.join(root, f"{name}.npy"), "wb") as f:
-        np.save(f, arr)
-        f.flush()
-        os.fsync(f.fileno())
-    manifest[name] = {"sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
-                      "dtype": arr.dtype.str, "shape": list(arr.shape)}
-
-
-def _load_arr(root: str, name: str, manifest: dict, *, mmap: bool,
-              verify: bool) -> np.ndarray:
-    arr = np.load(os.path.join(root, f"{name}.npy"),
-                  mmap_mode="r" if mmap else None)
-    if verify:
-        got = hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
-        if got != manifest[name]["sha256"]:
-            raise IOError(f"snapshot leaf {name!r} failed its checksum "
-                          f"(root={root})")
-    return arr
-
-
-def _save_csr(root: str, name: str, csr: CSR, manifest: dict) -> None:
-    _save_arr(root, f"{name}.offsets", csr.offsets, manifest)
-    _save_arr(root, f"{name}.values", csr.values, manifest)
-
-
-def _load_csr(root: str, name: str, manifest: dict, *, mmap: bool,
-              verify: bool) -> CSR:
-    return CSR(offsets=_load_arr(root, f"{name}.offsets", manifest,
-                                 mmap=mmap, verify=verify),
-               values=_load_arr(root, f"{name}.values", manifest,
-                                mmap=mmap, verify=verify))
-
-
-def save_dataset(root: str, dataset: KeywordDataset, manifest: dict) -> dict:
-    """Persist a frozen corpus into ``root``; returns its meta dict."""
-    _save_arr(root, "points", dataset.points, manifest)
-    _save_csr(root, "kw", dataset.kw, manifest)
-    _save_csr(root, "ikp", dataset.ikp, manifest)
-    meta = {"n": dataset.n, "dim": dataset.dim,
-            "n_keywords": dataset.n_keywords,
-            "attrs": sorted(dataset.attrs) if dataset.attrs else [],
-            "tenant_of": dataset.tenant_of is not None, "tenants": None}
-    for name in meta["attrs"]:
-        _save_arr(root, f"attr_{name}", dataset.attrs[name], manifest)
-    if dataset.tenant_of is not None:
-        _save_arr(root, "tenant_of", dataset.tenant_of, manifest)
-    if dataset.tenants is not None:
-        meta["tenants"] = {
-            "names": list(dataset.tenants.names),
-            "kw_offsets": [int(v) for v in dataset.tenants.kw_offsets]}
-    return meta
-
-
-def load_dataset(root: str, meta: dict, manifest: dict, *, mmap: bool,
-                 verify: bool) -> KeywordDataset:
-    attrs = {name: np.asarray(_load_arr(root, f"attr_{name}", manifest,
-                                        mmap=mmap, verify=verify))
-             for name in meta["attrs"]} or None
-    tenant_of = _load_arr(root, "tenant_of", manifest, mmap=mmap,
-                          verify=verify) if meta["tenant_of"] else None
-    tenants = None
-    if meta["tenants"]:
-        tenants = TenantNamespace(
-            names=tuple(meta["tenants"]["names"]),
-            kw_offsets=np.asarray(meta["tenants"]["kw_offsets"], np.int64))
-    return KeywordDataset(
-        points=_load_arr(root, "points", manifest, mmap=mmap, verify=verify),
-        kw=_load_csr(root, "kw", manifest, mmap=mmap, verify=verify),
-        ikp=_load_csr(root, "ikp", manifest, mmap=mmap, verify=verify),
-        n_keywords=int(meta["n_keywords"]), attrs=attrs,
-        tenant_of=tenant_of, tenants=tenants)
-
-
-def save_index(root: str, prefix: str, index: PromishIndex,
-               manifest: dict) -> dict:
-    """Persist one frozen index flavour under ``root`` with ``prefix``."""
-    _save_arr(root, f"{prefix}.z", index.z, manifest)
-    scales = []
-    for hi in index.structures:
-        _save_csr(root, f"{prefix}.s{hi.scale}.table", hi.table, manifest)
-        _save_csr(root, f"{prefix}.s{hi.scale}.khb", hi.khb, manifest)
-        scales.append({"scale": hi.scale, "width": hi.width,
-                       "n_buckets": hi.n_buckets})
-    return {"w0": index.w0, "n_scales": index.n_scales, "exact": index.exact,
-            "p_max": index.p_max, "scales": scales}
-
-
-def load_index(root: str, prefix: str, meta: dict, manifest: dict, *,
-               mmap: bool, verify: bool) -> PromishIndex:
-    structures = []
-    for sc in meta["scales"]:
-        structures.append(HIStructure(
-            scale=sc["scale"], width=sc["width"], n_buckets=sc["n_buckets"],
-            table=_load_csr(root, f"{prefix}.s{sc['scale']}.table", manifest,
-                            mmap=mmap, verify=verify),
-            khb=_load_csr(root, f"{prefix}.s{sc['scale']}.khb", manifest,
-                          mmap=mmap, verify=verify)))
-    return PromishIndex(
-        z=_load_arr(root, f"{prefix}.z", manifest, mmap=mmap, verify=verify),
-        w0=meta["w0"], n_scales=meta["n_scales"], exact=meta["exact"],
-        structures=tuple(structures), p_max=meta["p_max"])
-
-
+# (leaf I/O — save_dataset/load_dataset/save_index/load_index — lives in
+# repro.core.store, shared with the out-of-core bulk store)
 def save_snapshot(directory: str, *, dataset: KeywordDataset,
                   index_e: PromishIndex | None,
                   index_a: PromishIndex | None,

@@ -82,6 +82,31 @@ def test_mixed_keys_still_parity(engine):
         assert _keys(got.payload["candidates"]) == _keys(want.candidates)
 
 
+def test_consecutive_ingest_ops_coalesce_into_one_run(tmp_path):
+    """Back-to-back ingest ops at the queue head drain as one run behind a
+    single WAL group-commit barrier: every ticket still acks only after the
+    shared fsync, and the run counter proves the coalescing happened."""
+    engine = NKSEngine(_corpus(), seed=3, compact_min=10_000)
+    engine.attach_wal(str(tmp_path / "wal"))
+    rng = np.random.default_rng(4)
+    batches = [(rng.standard_normal((4, engine.dataset.dim))
+                .astype(np.float32), [[0, 1]] * 4) for _ in range(5)]
+    with ServingRuntime(engine, RuntimeConfig(batch_window_s=0.05)) as rt:
+        with rt._engine_lock:                       # stall the worker
+            tickets = [rt.submit({"op": "insert", "points": pts,
+                                  "keywords": kws}) for pts, kws in batches]
+        results = [t.result(10) for t in tickets]
+    assert all(r.ok for r in results)
+    assert rt.stats.ingest_runs >= 1                # multi-op run happened
+    assert rt.stats.ingest_ops == len(batches)
+    st = engine.wal_stats
+    assert st.group_commits >= 1
+    assert st.appends == len(batches)
+    # Coalescing must amortize the barrier: fewer fsyncs than acked ops.
+    assert st.fsyncs < len(batches)
+    engine.close()
+
+
 def test_ingest_barrier_not_reordered(engine):
     """A query admitted after an insert observes it: coalescing never hoists
     a query past an earlier ingest op."""

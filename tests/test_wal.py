@@ -160,6 +160,73 @@ def test_kill_between_append_and_ack(tmp_path):
     rec.close()
 
 
+# -------------------------------------------------------------- group commit
+def test_group_commit_one_fsync_per_group(tmp_path):
+    """``ingest_group()`` coalesces a run of durable ops behind a single
+    fsync barrier: one group of N inserts costs one fsync, the stats expose
+    the amortization, and recovery replays the whole group."""
+    ds = _corpus(n=150)
+    rng = np.random.default_rng(9)
+    stream = _stream(rng, 5, 8, ds.dim, ds.n_keywords)
+    queries = random_queries(ds, 2, 5, seed=2)
+
+    eng = NKSEngine(ds, seed=2, compact_min=10_000)
+    eng.attach_wal(str(tmp_path / "wal"))
+    f0 = eng.wal_stats.fsyncs
+    with eng.ingest_group():
+        for pts, kws in stream:
+            eng.insert(pts, kws)
+    st = eng.wal_stats
+    assert st.fsyncs - f0 == 1                 # the group barrier, nothing else
+    assert st.group_commits == 1
+    assert st.group_committed == len(stream)
+    assert st.group_commit_batch == float(len(stream))
+    # Nested groups share the outermost barrier.
+    tail = _stream(rng, 1, 4, ds.dim, ds.n_keywords)[0]
+    with eng.ingest_group():
+        with eng.ingest_group():
+            eng.insert(*tail)
+        assert eng.wal_stats.group_commits == 1    # inner exit: no barrier yet
+    assert eng.wal_stats.group_commits == 2
+    eng.close()
+
+    rec = NKSEngine.recover(str(tmp_path / "wal"))
+    ref = NKSEngine(ds, seed=2, compact_min=10_000)
+    for pts, kws in stream + [tail]:
+        ref.insert(pts, kws)
+    assert rec.ingest.replayed_ops == len(stream) + 1
+    assert _answers(rec, queries) == _answers(ref, queries)
+    rec.close()
+
+
+def test_group_commit_crash_at_barrier(tmp_path):
+    """A crash at the group's fsync barrier: every record in the group is
+    durable but none was acknowledged — recovery replays them all
+    (at-least-once below the ack horizon, same contract as per-op sync)."""
+    ds = _corpus(n=150)
+    rng = np.random.default_rng(13)
+    stream = _stream(rng, 3, 6, ds.dim, ds.n_keywords)
+    queries = random_queries(ds, 2, 5, seed=3)
+
+    faults = FaultPlan(crash={"wal_ack": 1})
+    eng = NKSEngine(ds, seed=2, compact_min=10_000)
+    eng.attach_wal(str(tmp_path / "wal"), faults=faults)
+    with pytest.raises(InjectedCrash):
+        with eng.ingest_group():
+            for pts, kws in stream:            # deferred: no wal_ack window yet
+                eng.insert(pts, kws)
+    assert faults.fired["wal_ack"] == 1
+    assert eng.wal_stats.fsyncs == 1           # the barrier ran before the kill
+
+    rec = NKSEngine.recover(str(tmp_path / "wal"))
+    ref = NKSEngine(ds, seed=2, compact_min=10_000)
+    for pts, kws in stream:
+        ref.insert(pts, kws)
+    assert rec.ingest.replayed_ops == len(stream)
+    assert _answers(rec, queries) == _answers(ref, queries)
+    rec.close()
+
+
 def test_recover_append_recover_after_torn_tail(tmp_path):
     """Crash mid-append, recover, keep writing, crash again: the first
     recovery must truncate the torn tail before reopening the segment for
