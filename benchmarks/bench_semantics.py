@@ -1,0 +1,101 @@
+"""Flexible-semantics bench (ISSUE 9): what do m-of-k expansion, weighted
+objectives, and scored ranking cost relative to the classic batch?
+
+Times the batched engine on the same query stream under four semantics:
+classic (no ``semantics=``), m-of-k at ``m = |Q| - 1``, weighted keywords,
+and scored top-k — per tier, both backends. Emits the usual CSV rows and
+writes ``BENCH_semantics.json`` for the warn-only regression gate (no
+committed baseline yet; ``check_regression`` skips it until one lands):
+
+    PYTHONPATH=src python -m benchmarks.bench_semantics [--fast]
+
+Numbers of note: ``m_of_k_qps / classic_qps`` is the price of planning the
+subquery expansion (``subqueries`` records the fan-out actually planned);
+``weighted_qps`` isolates the float64 weighted rescore; ``degenerate_parity``
+is a correctness contract, not a perf number — a degenerate semantics object
+must leave the batch bitwise unchanged, and the gate hard-fails on false.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT = "BENCH_semantics.json"
+
+
+def _time(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(fast: bool = False) -> dict:
+    from benchmarks.common import emit
+    from repro.data.flickr_like import flickr_like_dataset
+    from repro.data.synthetic import random_queries
+    from repro.serve.engine import NKSEngine
+
+    n = 1_500 if fast else 6_000
+    batch = 16 if fast else 32
+    ds = flickr_like_dataset(n=n, d=16, u=30, t=3, n_clusters=12, seed=4)
+    engine = NKSEngine(ds, m=2, n_scales=5, seed=0)
+    queries = random_queries(ds, 3, batch, seed=9)
+    k = 2
+    qlen = len(queries[0])
+
+    # semantics under test; weights boost the two lowest keyword ids seen in
+    # the stream so the weighted leg touches a realistic fraction of points
+    boosted = sorted({v for q in queries for v in q})[:2]
+    variants = {
+        "classic": None,
+        "m_of_k": {"m": qlen - 1},
+        "weighted": {"weights": {v: 3.0 for v in boosted}},
+        "scored": {"m": qlen - 1, "score": True},
+    }
+
+    results: dict = {"n": n, "d": ds.dim, "batch": batch, "k": k,
+                     "fast": fast, "tiers": {}}
+    for tier in ("exact", "approx"):
+        tier_res: dict = {}
+        for backend in ("numpy", "pallas"):
+            for name, sem in variants.items():
+                run = lambda: engine.query_batch(  # noqa: E731
+                    queries, k=k, tier=tier, backend=backend, semantics=sem)
+                run()                              # warm-up (compile, LRU)
+                t = _time(run)
+                key = f"{name}_qps" if backend == "numpy" \
+                    else f"{name}_pallas_qps"
+                tier_res[key] = batch / t
+                if backend == "numpy" and name != "classic":
+                    tier_res[f"{name}_subqueries"] = \
+                        engine.last_batch_stats.subqueries
+                emit(f"semantics.{name}.{backend}.{tier}", t / batch * 1e6,
+                     f"B={batch}")
+        # correctness contract: degenerate semantics leave the batch bitwise
+        # unchanged on the same route
+        base = engine.query_batch(queries, k=k, tier=tier, backend="numpy")
+        deg = engine.query_batch(queries, k=k, tier=tier, backend="numpy",
+                                 semantics={"m": qlen, "weights": {}})
+        tier_res["degenerate_parity"] = all(
+            [(c.ids, c.diameter) for c in a.candidates]
+            == [(c.ids, c.diameter) for c in b.candidates]
+            for a, b in zip(base, deg))
+        results["tiers"][tier] = tier_res
+
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {os.path.abspath(OUT)}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("BENCH_FAST", "") == "1")
+    args = ap.parse_args()
+    main(fast=args.fast)

@@ -64,9 +64,15 @@ GATED_FILTERED = ("unfiltered_qps", "sweep_geomean_qps")
 GATED_SERVING = ("qps_sync", "qps_sustained_runtime")
 GATED_SERVING_LOWER = ("p99_ms_runtime",)
 # Out-of-core size sweep (ISSUE 8): engine QPS at the largest size swept,
-# keyed by store mode ("ram"/"disk"). Warn-only until a baseline is
-# committed (baseline_required=False), like the filtered/serving gates were.
+# keyed by store mode ("ram"/"disk"). Armed once ``BENCH_size_baseline.json``
+# was committed (ISSUE 9) — before that the gate warned and skipped.
 GATED_SIZE = ("qps_exact", "qps_approx")
+# Flexible semantics (ISSUE 9): classic vs m-of-k vs weighted vs scored QPS
+# per tier, both backends. Warn-only until a semantics baseline is committed;
+# the ``degenerate_parity`` contract hard-fails regardless.
+GATED_SEMANTICS = ("classic_qps", "m_of_k_qps", "weighted_qps", "scored_qps",
+                   "classic_pallas_qps", "m_of_k_pallas_qps",
+                   "weighted_pallas_qps", "scored_pallas_qps")
 
 
 def compare(fresh: dict, baseline: dict, threshold: float,
@@ -176,6 +182,9 @@ def main(argv=None) -> int:
                     default="BENCH_serving_baseline.json")
     ap.add_argument("--size-fresh", default="BENCH_size.json")
     ap.add_argument("--size-baseline", default="BENCH_size_baseline.json")
+    ap.add_argument("--semantics-fresh", default="BENCH_semantics.json")
+    ap.add_argument("--semantics-baseline",
+                    default="BENCH_semantics_baseline.json")
     ap.add_argument("--serving-latency-threshold", type=float, default=0.60,
                     help="maximum tolerated p99 inflation, as 1 - base/fresh "
                          "(0.60 fails past 2.5x baseline — open-loop tail "
@@ -228,6 +237,19 @@ def main(argv=None) -> int:
                 bad += 1
         return bad
 
+    def semantics_contracts(fresh: dict) -> int:
+        bad = 0
+        for tier, m in fresh.get("tiers", {}).items():
+            # Correctness contract, not a perf gate: a degenerate semantics
+            # object (m = |Q|, unit weights, no scoring) must leave the
+            # batch bitwise unchanged.
+            if m.get("degenerate_parity") is False:
+                print(f"FAIL: {tier}: degenerate semantics changed the "
+                      f"result set (degenerate_parity=false)",
+                      file=sys.stderr)
+                bad += 1
+        return bad
+
     gates = (
         dict(title="batch pipeline", fresh_path=args.fresh,
              baseline_path=args.baseline, baseline_required=True,
@@ -247,6 +269,10 @@ def main(argv=None) -> int:
              baseline_path=args.size_baseline, baseline_required=False,
              regen_hint="python -m benchmarks.fig9_size --fast --store disk",
              metrics=GATED_SIZE),
+        dict(title="flexible semantics", fresh_path=args.semantics_fresh,
+             baseline_path=args.semantics_baseline, baseline_required=False,
+             regen_hint="python -m benchmarks.bench_semantics --fast",
+             metrics=GATED_SEMANTICS, contracts=semantics_contracts),
     )
 
     failures = 0
@@ -260,6 +286,18 @@ def main(argv=None) -> int:
         if gate_failures is not None:
             compared += 1
             failures += gate_failures
+
+    # The degenerate-parity contract is correctness, not perf — enforce it
+    # even while the semantics baseline is uncommitted (the gate above skips
+    # entirely without one).
+    if not os.path.exists(args.semantics_baseline) \
+            and os.path.exists(args.semantics_fresh):
+        with open(args.semantics_fresh) as f:
+            bad = semantics_contracts(json.load(f))
+        if bad:
+            print(f"\nFAIL: {bad} semantics contract(s) violated",
+                  file=sys.stderr)
+            return 1
 
     if not compared:
         # Matches the historical missing-fresh semantics: the bench steps

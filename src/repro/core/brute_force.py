@@ -14,13 +14,18 @@ exact filter object the engine receives.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
+from repro.core import semantics as semantics_mod
 from repro.core.subset_search import is_minimal_candidate, pairwise_l2_numpy
 from repro.core.types import Candidate, KeywordDataset, TopK
+
+if TYPE_CHECKING:
+    from repro.core.semantics import QuerySemantics
 
 
 def set_diameter(ids: Sequence[int], dataset: KeywordDataset) -> float:
@@ -128,3 +133,72 @@ def count_candidates(dataset: KeywordDataset, query: Sequence[int],
     """N_n of eq. 4 (measured, not modelled)."""
     return sum(1 for _ in enumerate_candidates(dataset, query,
                                                eligible=eligible))
+
+
+# ------------------------------------------------------- flexible semantics
+def weighted_set_cost(ids: Sequence[int], dataset: KeywordDataset,
+                      wvec: np.ndarray | None) -> float:
+    """Weighted diameter of a group: ``max sqrt(d2(a,b) * w(a) * w(b))``.
+
+    The canonical arithmetic (difference-based float64 squared distances,
+    weight product applied to the *squared* table, sqrt of the max) matches
+    the fast path's frontier tables exactly — with ``wvec=None`` this is the
+    plain geometric diameter."""
+    ids = [int(i) for i in ids]
+    if len(ids) <= 1:
+        return 0.0
+    pts = dataset.points[np.asarray(ids)].astype(np.float64)
+    diff = pts[:, None, :] - pts[None, :, :]
+    d2 = np.einsum("ijd,ijd->ij", diff, diff)
+    if wvec is not None:
+        d2 = semantics_mod.weighted_pair_sq(d2, wvec[np.asarray(ids)])
+    return float(np.sqrt(d2.max()))
+
+
+def enumerate_candidates_flex(dataset: KeywordDataset, query: Sequence[int],
+                              sem: "QuerySemantics",
+                              eligible: np.ndarray | None = None):
+    """The flexible candidate universe: every distinct id set that is a
+    minimal candidate for *some* keyword subset ``S ⊆ Q`` with ``|S| >= m``
+    (classic minimal candidates when ``m = |Q|``). Yields sorted id tuples,
+    deduped across subqueries — cost and coverage depend only on (ids, Q),
+    never on which subquery produced the set."""
+    seen: set[tuple[int, ...]] = set()
+    for sub in sem.expand_subqueries(query):
+        for ids in enumerate_candidates(dataset, sub, eligible=eligible):
+            if ids not in seen:
+                seen.add(ids)
+                yield ids
+
+
+def search_flex(dataset: KeywordDataset, query: Sequence[int], k: int = 1,
+                *, semantics=None, eligible: np.ndarray | None = None
+                ) -> list[Candidate]:
+    """Flexible-semantics oracle: exhaustive enumeration over the m-of-k
+    candidate universe, weighted costs, optional scored ranking — the ground
+    truth for every ``semantics=...`` differential suite. Returns the top-k
+    as a plain candidate list (scored mode stamps ``Candidate.score``).
+
+    Ranking matches the fast path's queues exactly: ``(cost, |ids|, ids)``
+    ascending, or ``(-score, cost, |ids|, ids)`` in scored mode. With
+    degenerate semantics (``m = |Q|``, unit weights, no scoring) this
+    reduces to :func:`search`'s result set by construction.
+    """
+    sem = semantics_mod.QuerySemantics.coerce(semantics) \
+        or semantics_mod.QuerySemantics()
+    query = sorted(set(int(v) for v in query))
+    wvec = sem.weight_vector(dataset, query)
+    cands = []
+    for ids in enumerate_candidates_flex(dataset, query, sem,
+                                         eligible=eligible):
+        cands.append(Candidate(
+            ids=ids, diameter=weighted_set_cost(ids, dataset, wvec)))
+    if sem.score:
+        cov = sem.coverage_fn(dataset, query)
+        cands = [dataclasses.replace(
+                     c, score=cov(c.ids) / (1.0 + sem.alpha * c.diameter))
+                 for c in cands]
+        cands.sort(key=lambda c: (-c.score, c.diameter, len(c.ids), c.ids))
+    else:
+        cands.sort(key=Candidate.key)
+    return cands[:k]

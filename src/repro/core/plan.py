@@ -84,6 +84,7 @@ class BatchPlanContext:
         self.dataset = dataset
         self._kw_masks: dict[int, np.ndarray] = {}
         self._covers: dict[tuple, np.ndarray] = {}
+        self._khb: dict[tuple, np.ndarray] = {}
 
     def kw_mask(self, v: int) -> np.ndarray:
         m = self._kw_masks.get(v)
@@ -99,11 +100,26 @@ class BatchPlanContext:
             bs |= self.kw_mask(v)
         return bs
 
+    def _khb_row(self, hi, scale: int, v: int) -> np.ndarray:
+        """Per-(scale, keyword) I_khb posting row, read once per batch.
+        Flexible m-of-k queries expand into overlapping keyword subsets, so
+        the same row feeds many subqueries' coverage counts."""
+        key = (id(hi), scale, int(v))
+        row = self._khb.get(key)
+        if row is None:
+            row = self._khb[key] = hi.khb.row(int(v))
+        return row
+
     def covering(self, hi, scale: int, query: Sequence[int]) -> np.ndarray:
         key = (id(hi), scale, tuple(query))
         cover = self._covers.get(key)
         if cover is None:
-            cover = self._covers[key] = covering_buckets(hi, query)
+            # Same counting intersection as ``covering_buckets``, fed from
+            # the memoized khb rows — result-identical, row reads amortised.
+            counts = np.zeros(hi.n_buckets, dtype=np.int32)
+            for v in query:
+                counts[self._khb_row(hi, scale, v)] += 1
+            cover = self._covers[key] = np.flatnonzero(counts == len(query))
         return cover
 
 

@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.core import plan
 from repro.core.index import PromishIndex
-from repro.core.promish_e import SearchStats
+from repro.core.promish_e import SearchStats, _search_flex
+from repro.core.semantics import QuerySemantics
 from repro.core.subset_search import DistanceFn, pairwise_l2_numpy, search_in_subset
 from repro.core.types import KeywordDataset, TopK
 
@@ -29,15 +30,23 @@ from repro.core.types import KeywordDataset, TopK
 def search(dataset: KeywordDataset, index: PromishIndex, query: Sequence[int],
            k: int = 1, distance_fn: DistanceFn = pairwise_l2_numpy,
            stats: SearchStats | None = None,
-           eligible: np.ndarray | None = None) -> TopK:
+           eligible: np.ndarray | None = None,
+           semantics=None) -> TopK:
     """Approximate top-k NKS search. ``eligible`` applies a filtered query's
     point-eligibility mask: every returned candidate is drawn from eligible
     points only (the approx tier's feasibility contract), with the same
-    subset-pruning and group-restriction mechanics as ProMiSH-E."""
+    subset-pruning and group-restriction mechanics as ProMiSH-E.
+    ``semantics`` enables the flexible m-of-k/weighted/scored modes through
+    the shared ``_search_flex`` loop (A semantics: empty queue, no dedup,
+    stop at the first scale that fills it)."""
     if index.exact:
         raise ValueError("ProMiSH-A requires an approximate (disjoint-bin) index")
     query = sorted(set(int(v) for v in query))
     stats = stats if stats is not None else SearchStats()
+    sem = QuerySemantics.coerce(semantics)
+    if sem is not None and not sem.trivial_for(query):
+        return _search_flex(dataset, index, query, k, sem,
+                            distance_fn, stats, eligible, exact=False)
 
     pq = TopK(k, init_full=False)
     bitsets = [plan.query_bitset(dataset, query)]

@@ -10,6 +10,7 @@ the streaming consistency model (README "Streaming ingest") applies: each
 response reflects every earlier op in the stream, never a partial batch.
 
     {"keywords": [3, 7], "k": 2}                          # query (default op)
+    {"keywords": ["3", "7^4"], "m": 1, "score": true}     # flexible semantics
     {"keywords": [3, 7], "filter": {"where": [["price", "<", 50]]}}
     {"keywords": [0, 2], "filter": {"tenant": "acme"}}    # tenant-local kws
     {"op": "insert", "points": [[...]], "keywords": [[...]],
@@ -22,6 +23,12 @@ response reflects every earlier op in the stream, never a partial batch.
 A malformed line or failing op never kills the stream: each bad request gets
 a structured ``{"op": ..., "error": ..., "status": "error"}`` response and
 serving continues.
+
+Flexible query semantics (README "Query semantics") ride on the query op:
+a ``keywords`` entry may be a ``"<id>^<weight>"`` boost string (merged with
+an explicit ``weights`` object — the inline boost wins on conflict), ``m``
+asks for m-of-k partial coverage, and ``score``/``alpha`` switch ranking to
+the blended coverage/cost score — scored result rows gain a ``score`` field.
 
 ``filter`` applies attribute predicates (grammar: ``[attr, op, value]``
 clauses, op in ``< <= > >= == != in between``, conjunction) and tenant
@@ -52,6 +59,7 @@ import sys
 
 import numpy as np
 
+from repro.core.semantics import parse_weighted_keywords
 from repro.data.flickr_like import flickr_like_dataset
 from repro.data.synthetic import random_queries, synthetic_dataset
 from repro.serve.engine import NKSEngine
@@ -81,6 +89,34 @@ def _resolve_insert_keywords(engine: NKSEngine, req: dict) -> list:
     return [ns.resolve(tenant, ks) for ks in keywords]
 
 
+def _parse_query_semantics(req: dict) -> tuple[list[int], dict | None]:
+    """Keyword ids plus the request's semantics wire-dict (or None for a
+    classic request). ``keywords`` entries may use the ``"7^4"`` boost
+    grammar; inline boosts merge over an explicit ``weights`` object and win
+    on conflict. Validation happens in ``QuerySemantics.coerce`` downstream."""
+    kws, boosts = parse_weighted_keywords(req["keywords"])
+    weights = {int(kw): float(w)
+               for kw, w in (req.get("weights") or {}).items()}
+    weights.update(boosts)
+    sem: dict = {}
+    if req.get("m") is not None:
+        sem["m"] = int(req["m"])
+    if weights:
+        sem["weights"] = weights
+    if req.get("score"):
+        sem["score"] = True
+    if req.get("alpha") is not None:
+        sem["alpha"] = float(req["alpha"])
+    return kws, (sem or None)
+
+
+def _result_row(c) -> dict:
+    row = {"ids": list(c.ids), "diameter": round(c.diameter, 4)}
+    if c.score is not None:
+        row["score"] = round(c.score, 6)
+    return row
+
+
 def handle_request(engine: NKSEngine, req: dict, *, tier: str, k: int) -> dict:
     """Execute one JSONL op against the engine; returns the JSON response.
 
@@ -88,15 +124,15 @@ def handle_request(engine: NKSEngine, req: dict, *, tier: str, k: int) -> dict:
     :func:`handle_request_safe` to produce error envelopes instead."""
     op = req.get("op", "query")
     if op == "query":
-        res = engine.query(req["keywords"], k=req.get("k", k),
+        kws, sem = _parse_query_semantics(req)
+        res = engine.query(kws, k=req.get("k", k),
                            tier=req.get("tier", tier),
-                           filter=req.get("filter"))
+                           filter=req.get("filter"), semantics=sem)
         out = {
             "op": "query",
-            "keywords": list(map(int, req["keywords"])),
+            "keywords": kws,
             "latency_ms": round(res.latency_s * 1e3, 2),
-            "results": [{"ids": list(c.ids), "diameter": round(c.diameter, 4)}
-                        for c in res.candidates],
+            "results": [_result_row(c) for c in res.candidates],
         }
         if req.get("filter"):
             out["filter"] = req["filter"]
@@ -152,10 +188,10 @@ def _to_runtime_request(engine: NKSEngine, req: dict, *, tier: str,
     (raises on a malformed request — caller wraps)."""
     op = req.get("op", "query")
     if op == "query":
-        return {"op": "query",
-                "keywords": [int(v) for v in req["keywords"]],
+        kws, sem = _parse_query_semantics(req)
+        return {"op": "query", "keywords": kws,
                 "k": int(req.get("k", k)), "tier": req.get("tier", tier),
-                "filter": req.get("filter")}
+                "filter": req.get("filter"), "semantics": sem}
     if op == "insert":
         attrs = {name: np.asarray(col)
                  for name, col in (req.get("attrs") or {}).items()} or None
@@ -176,10 +212,9 @@ def _format_runtime_response(req: dict, resp) -> dict:
     if resp.op == "query":
         out = {
             "op": "query",
-            "keywords": [int(v) for v in req["keywords"]],
+            "keywords": parse_weighted_keywords(req["keywords"])[0],
             "latency_ms": round(resp.latency_s * 1e3, 2),
-            "results": [{"ids": list(c.ids), "diameter": round(c.diameter, 4)}
-                        for c in resp.payload["candidates"]],
+            "results": [_result_row(c) for c in resp.payload["candidates"]],
         }
         if resp.degraded:
             out["degraded"] = True

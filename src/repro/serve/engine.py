@@ -63,6 +63,7 @@ from repro.core import store as storemod
 from repro.core.backend import DistanceBackend, get_backend
 from repro.core.filters import Filter
 from repro.core.index import IndexDelta, PromishIndex, absorb_into, build_index
+from repro.core.semantics import QuerySemantics
 from repro.core.subset_search import enumerate_with_block, local_groups
 from repro.core.types import (Candidate, KeywordDataset, StreamingCorpus,
                               TopK, make_dataset)
@@ -187,6 +188,9 @@ class PipelineStats:
     buckets_pruned_zonemap: int = 0
     buckets_pruned_radius: int = 0
     cold_bytes_read: int = 0
+    # Flexible semantics (ISSUE 9): planned subqueries after m-of-k
+    # expansion (== batch_size on a classic batch — one subquery per query).
+    subqueries: int = 0
 
     @property
     def dispatches_per_scale(self) -> list[int]:
@@ -947,7 +951,8 @@ class NKSEngine:
         return [ns.resolve(flt.tenant, q) for q in queries]
 
     def query(self, keywords: Sequence[int], k: int = 1,
-              tier: str = "approx", filter=None) -> QueryResult:
+              tier: str = "approx", filter=None,
+              semantics=None) -> QueryResult:
         t0 = time.perf_counter()
         # Same API-boundary validation as query_batch: every entry path
         # (clean per-query searches included) rejects out-of-dictionary
@@ -955,15 +960,25 @@ class NKSEngine:
         # from inside the search.
         self._validate_queries([keywords])
         flt = self._resolve_filter(filter)
+        sem = QuerySemantics.coerce(semantics)
+        flex = sem is not None and not sem.trivial_for(
+            sorted(set(int(v) for v in keywords)))
+        if tier == "device" and flex:
+            raise ValueError(
+                "device tier does not support flexible semantics; "
+                "use tier='exact' or 'approx'")
         if tier in ("exact", "approx") and (self._streaming_dirty()
-                                            or flt is not None):
+                                            or flt is not None or flex):
             # The per-query searches walk a frozen index; with a live delta
             # the batched pipeline (a batch of one reproduces them exactly,
             # per the PR-1 parity suite) is the delta-aware path — and the
             # filtered path, which evaluates the predicate once and threads
-            # the eligibility mask through every stage.
+            # the eligibility mask through every stage. Flexible semantics
+            # ride the same batched path (m-of-k expansion, weights, scored
+            # queues live in ``_batch_search``).
             res = self.query_batch([keywords], k=k, tier=tier,
-                                   backend="numpy", filter=flt)[0]
+                                   backend="numpy", filter=flt,
+                                   semantics=sem)[0]
             return dataclasses.replace(res, latency_s=time.perf_counter() - t0)
         if tier == "exact":
             pq = promish_e.search(self.dataset, self.index_e, keywords, k=k)
@@ -1002,7 +1017,9 @@ class NKSEngine:
                    stats: PipelineStats,
                    eligible: np.ndarray | None = None,
                    ctx: "plan.BatchPlanContext | None" = None,
-                   timers: dict | None = None) -> tuple[int, int, int]:
+                   timers: dict | None = None,
+                   weights: "list[np.ndarray | None] | None" = None
+                   ) -> tuple[int, int, int]:
         """Distance stage + enumeration stage for one batch of subset tasks.
 
         ``eligible`` is the batch's predicate mask: keyword groups restrict
@@ -1010,8 +1027,11 @@ class NKSEngine:
         dropped before any pack), and the backend folds the mask into the
         device-side join bitmask. ``ctx`` carries the batch's keyword-mask
         memoization; ``timers`` accumulates the enumeration stage's float64
-        rescore wall time. Returns (tasks_searched, dispatches_issued,
-        join_pairs)."""
+        rescore wall time. ``weights`` maps each task's ``qidx`` to the
+        query's (N,) keyword-weight vector (or None — unweighted): the
+        dispatch/pack stages are weight-blind (the geometric join is a
+        superset of the weighted one), only host settlement consumes it.
+        Returns (tasks_searched, dispatches_issued, join_pairs)."""
         t0 = time.perf_counter()
         prepared = []
         for t in tasks:
@@ -1048,13 +1068,15 @@ class NKSEngine:
             join_pairs += db.join_count
             stats.candidates_explored += enumerate_with_block(
                 t.f_ids, gl, queries[t.qidx], self.dataset, pqs[t.qidx], db,
-                timers=timers)
+                timers=timers,
+                weights=None if weights is None else weights[t.qidx])
         stats.t_enumerate_s += time.perf_counter() - t1
         return len(prepared), backend.stats.dispatches - d0, join_pairs
 
     def _batch_search(self, queries: list[list[int]], k: int, tier: str,
                       backend: DistanceBackend,
-                      flt: "Filter | None" = None
+                      flt: "Filter | None" = None,
+                      sem: "QuerySemantics | None" = None
                       ) -> tuple[list[TopK], PipelineStats]:
         exact = tier == "exact"
         index = self.index_e if exact else self.index_a
@@ -1069,7 +1091,32 @@ class NKSEngine:
                      list(backend.stats.shard_valid_cells),
                      list(backend.stats.shard_total_cells))
         b0_bins = dict(getattr(backend.stats, "bin_points", None) or {})
-        pqs = [TopK(k, init_full=exact) for _ in queries]
+        # Flexible semantics: each query's m-of-k subqueries run the
+        # plan/dispatch/enumerate loop as independent *execution* entries
+        # that share the original query's queue (and weight vector) — the
+        # queue's id-set dedup resolves cross-subquery duplicates, since a
+        # candidate's cost and coverage depend only on (ids, Q). A classic
+        # batch (``sem`` None) expands to itself: one execution entry per
+        # query, plain TopK queues, no weights — every index below then
+        # degenerates to the old per-query one, keeping results
+        # bit-identical.
+        if sem is None:
+            pqs = [TopK(k, init_full=exact) for _ in queries]
+            exec_queries: list[list[int]] = list(queries)
+            exec_orig = list(range(len(queries)))
+            exec_pqs, exec_weights = pqs, None
+        else:
+            pqs = [sem.make_pq(self.dataset, q, k, init_full=exact)
+                   for q in queries]
+            wvecs = [sem.weight_vector(self.dataset, q) for q in queries]
+            exec_queries, exec_orig = [], []
+            for o, q in enumerate(queries):
+                for sub in sem.expand_subqueries(q):
+                    exec_queries.append(sub)
+                    exec_orig.append(o)
+            exec_pqs = [pqs[o] for o in exec_orig]
+            exec_weights = [wvecs[o] for o in exec_orig]
+        stats.subqueries = len(exec_queries)
         # Streaming: plan over bulk ∪ delta, tombstones cleared from every
         # bitset (the subsets the backend packs and the enumeration walks
         # then contain live points only).
@@ -1104,13 +1151,14 @@ class NKSEngine:
         # selections are memoized for the batch's lifetime (the corpus is
         # frozen while the batch runs).
         pctx = plan.BatchPlanContext(self.dataset)
-        bitsets = [pctx.query_bitset(q) for q in queries]
+        bitsets = [pctx.query_bitset(q) for q in exec_queries]
         if delta is not None:
             for bs in bitsets:
                 self._view.mask_tombstones(bs)
         stats.t_plan_s += time.perf_counter() - t0
-        explored = {i: set() for i in range(len(queries))} if exact else None
-        active = list(range(len(queries)))
+        explored = {i: set() for i in range(len(exec_queries))} if exact \
+            else None
+        active = list(range(len(exec_queries)))
         timers = {"rescore_s": 0.0}
 
         for s in range(index.n_scales):
@@ -1119,7 +1167,7 @@ class NKSEngine:
             sstats = ScaleStats(scale=s, active_queries=len(active))
             pstats = plan.PlanStats()
             t0 = time.perf_counter()
-            tasks = plan.plan_scale(index, s, queries, bitsets, active,
+            tasks = plan.plan_scale(index, s, exec_queries, bitsets, active,
                                     explored, pstats, delta=delta,
                                     eligible=eligible, ctx=pctx, zone=zone)
             stats.t_plan_s += time.perf_counter() - t0
@@ -1132,23 +1180,30 @@ class NKSEngine:
             sstats.tasks_planned = len(tasks)
             pr0 = stats.buckets_pruned_radius
             searched, dispatches, pairs = self._run_tasks(
-                tasks, queries, pqs, backend, stats, eligible=eligible,
-                ctx=pctx, timers=timers)
+                tasks, exec_queries, exec_pqs, backend, stats,
+                eligible=eligible, ctx=pctx, timers=timers,
+                weights=exec_weights)
             sstats.tasks_searched = searched
             sstats.dispatches = dispatches
             sstats.join_pairs = pairs
             sstats.buckets_pruned_radius = stats.buckets_pruned_radius - pr0
             # Per-query termination, exactly as the per-query searches do it:
             # E: Lemma-2 radius test after the scale; A: first full PQ.
+            # Termination is a property of the ORIGINAL query's shared queue,
+            # so one decision per original deactivates all its subqueries.
             still = []
+            done_orig: dict[int, bool] = {}
             for qidx in active:
-                if exact:
-                    done = pqs[qidx].kth_diameter() <= index.w0 * (2.0 ** (s - 1))
-                else:
-                    done = pqs[qidx].full()
-                if done:
-                    sstats.queries_finished += 1
-                else:
+                o = exec_orig[qidx]
+                if o not in done_orig:
+                    if exact:
+                        done_orig[o] = pqs[o].kth_diameter() \
+                            <= index.w0 * (2.0 ** (s - 1))
+                    else:
+                        done_orig[o] = pqs[o].full()
+                    if done_orig[o]:
+                        sstats.queries_finished += 1
+                if not done_orig[o]:
                     still.append(qidx)
             active = still
             stats.scales.append(sstats)
@@ -1157,8 +1212,9 @@ class NKSEngine:
             stats.fallback_queries = len(active)
             tasks = plan.fallback_tasks(bitsets, active, eligible=eligible)
             _, stats.fallback_dispatches, _ = self._run_tasks(
-                tasks, queries, pqs, backend, stats, eligible=eligible,
-                ctx=pctx, timers=timers)
+                tasks, exec_queries, exec_pqs, backend, stats,
+                eligible=eligible, ctx=pctx, timers=timers,
+                weights=exec_weights)
         stats.t_rescore_s = timers["rescore_s"]
         stats.t_pack_s = backend.stats.t_pack_s - b0.t_pack_s
         stats.t_dispatch_s = backend.stats.t_dispatch_s - b0.t_dispatch_s
@@ -1197,7 +1253,7 @@ class NKSEngine:
     def query_batch(self, queries: Sequence[Sequence[int]], k: int = 1,
                     tier: str = "approx",
                     backend: str | DistanceBackend = "numpy",
-                    filter=None) -> list[QueryResult]:
+                    filter=None, semantics=None) -> list[QueryResult]:
         """Answer a batch of queries through the staged pipeline.
 
         Bucket selection, Algorithm-2 dedup, and device dispatch are amortised
@@ -1221,8 +1277,24 @@ class NKSEngine:
         On a namespaced multi-tenant corpus a tenant-scoped batch speaks
         tenant-local keyword ids, resolved through the tenant's dictionary
         before planning.
+
+        ``semantics`` (a :class:`~repro.core.semantics.QuerySemantics` or
+        its JSON dict form ``{"m": ..., "weights": {...}, "score": ...,
+        "alpha": ...}``) applies m-of-k partial coverage, per-keyword
+        weights, and scored ranking to the whole batch. Degenerate semantics
+        (full coverage, unit weights, no scoring) are dropped before
+        planning, so results stay bit-identical to a plain call; the device
+        tier rejects non-trivial semantics.
         """
         flt = self._resolve_filter(filter)
+        sem = QuerySemantics.coerce(semantics)
+        if sem is not None and tier == "device":
+            if any(not sem.trivial_for(sorted(set(int(v) for v in q)))
+                   for q in queries):
+                raise ValueError(
+                    "device tier does not support flexible semantics; "
+                    "use tier='exact' or 'approx'")
+            sem = None
         if tier == "device":
             t0 = time.perf_counter()
             stats = PipelineStats(
@@ -1254,9 +1326,21 @@ class NKSEngine:
             raise ValueError(tier)
         t0 = time.perf_counter()
         qlists = self._validate_queries(self._resolve_namespace(queries, flt))
+        if sem is not None:
+            if flt is not None and flt.tenant is not None \
+                    and self.dataset.tenants is not None:
+                # Weight keys speak the same tenant-local ids as the query
+                # keywords — resolve them through the same namespace.
+                ns, tenant = self.dataset.tenants, flt.tenant
+                sem = sem.resolve_keywords(
+                    lambda kw: ns.resolve(tenant, [kw])[0])
+            # Degenerate semantics normalise away entirely: the classic
+            # pipeline below is then byte-for-byte the pre-semantics one.
+            if all(sem.trivial_for(q) for q in qlists):
+                sem = None
         pqs, stats = self._batch_search(qlists, k, tier,
                                         self._resolve_backend(backend),
-                                        flt=flt)
+                                        flt=flt, sem=sem)
         self._record_ingest(stats)
         self.last_batch_stats = stats
         per_q = (time.perf_counter() - t0) / max(len(qlists), 1)

@@ -160,6 +160,16 @@ def _filter_key(flt) -> str:
     return json.dumps(flt, sort_keys=True) if isinstance(flt, dict) else repr(flt)
 
 
+def _semantics_key(sem) -> str:
+    """Canonical batch-key component for the request's flexible semantics:
+    requests may only coalesce into one ``query_batch`` call when their
+    m/weights/score/alpha knobs agree exactly."""
+    if sem is None:
+        return ""
+    return json.dumps(sem, sort_keys=True) if isinstance(sem, dict) \
+        else sem.canonical_key()
+
+
 _INGEST_OPS = frozenset(("insert", "delete", "compact", "snapshot"))
 
 
@@ -405,12 +415,14 @@ class ServingRuntime:
 
     def _batch_key(self, req: dict) -> tuple:
         return (req.get("tier", self.cfg.tier), int(req.get("k", self.cfg.k)),
-                _filter_key(req.get("filter")))
+                _filter_key(req.get("filter")),
+                _semantics_key(req.get("semantics")))
 
     # -------------------------------------------------------------- execution
     def _exec_query_batch(self, batch: list[Ticket]) -> None:
-        tier, k, _ = self._batch_key(batch[0].request)
+        tier, k, _, _ = self._batch_key(batch[0].request)
         flt = batch[0].request.get("filter")
+        sem = batch[0].request.get("semantics")
         degraded = False
         eff_tier = tier
         if tier == "exact" and self.engine.index_a is not None \
@@ -429,7 +441,8 @@ class ServingRuntime:
                 with self._engine_lock:
                     results = self.engine.query_batch(
                         queries, k=k, tier=eff_tier,
-                        backend=self.cfg.backend, filter=flt)
+                        backend=self.cfg.backend, filter=flt,
+                        semantics=sem)
                 break
             except _RETRYABLE as e:
                 self.stats.dispatch_retries += 1

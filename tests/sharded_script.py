@@ -17,7 +17,10 @@ tests/multidev_script.py). Asserts:
      repacking;
   6. filtered queries (attribute predicates, ISSUE 5) are bit-identical
      across the single-device and sharded routes — the packed eligibility
-     words shard with the tile, and the folded masks come back bit-exact.
+     words shard with the tile, and the folded masks come back bit-exact;
+  7. flexible semantics (m-of-k / weighted / scored, ISSUE 9) answer
+     bit-identically on the sharded and single-device routes, and the
+     degenerate case is bit-identical to the classic sharded batch.
 """
 import os
 
@@ -214,6 +217,34 @@ def test_filtered_sharded_parity():
     print("filtered sharded parity ok (backend + engine, 0-100% selectivity)")
 
 
+def test_semantics_sharded_parity():
+    """ISSUE-9 forced-8-device leg: flexible semantics answer bit-identically
+    on the sharded and single-device routes; degenerate semantics are
+    bit-identical to the classic sharded batch."""
+    ds = synthetic_dataset(n=500, d=8, u=20, t=2, seed=3)
+    eng1 = NKSEngine(ds, m=2, n_scales=5, seed=0)
+    eng8 = NKSEngine(ds, m=2, n_scales=5, seed=0, mesh=PLANE.mesh)
+    queries = random_queries(ds, 3, 12, seed=12)
+    for sem in ({"m": 2}, {"weights": {queries[0][0]: 2.5}},
+                {"m": 2, "score": True}):
+        for tier in ("exact", "approx"):
+            r1 = eng1.query_batch(queries, k=2, tier=tier, backend="pallas",
+                                  semantics=sem)
+            r8 = eng8.query_batch(queries, k=2, tier=tier, backend="pallas",
+                                  semantics=sem)
+            for q, a, b in zip(queries, r1, r8):
+                assert [(c.ids, c.diameter, c.score) for c in a.candidates] \
+                    == [(c.ids, c.diameter, c.score) for c in b.candidates], \
+                    f"tier={tier} query={q} sem={sem}"
+    base = eng8.query_batch(queries, k=2, tier="exact", backend="pallas")
+    deg = eng8.query_batch(queries, k=2, tier="exact", backend="pallas",
+                           semantics={"m": 3, "weights": {0: 1.0}})
+    for a, b in zip(base, deg):
+        assert [(c.ids, c.diameter) for c in a.candidates] == \
+               [(c.ids, c.diameter) for c in b.candidates]
+    print("semantics sharded parity ok")
+
+
 def test_pack_groups_on_plane():
     ds = synthetic_dataset(n=300, d=8, u=12, t=2, seed=7)
     query = random_queries(ds, 2, 1, seed=1)[0]
@@ -237,5 +268,6 @@ if __name__ == "__main__":
     test_engine_batch_parity()
     test_device_tier_parity()
     test_filtered_sharded_parity()
+    test_semantics_sharded_parity()
     test_pack_groups_on_plane()
     print("ALL SHARDED OK")

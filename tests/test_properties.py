@@ -391,6 +391,106 @@ def test_streaming_filtered_interleaving_parity(script):
                                rtol=1e-9)
 
 
+# ------------------------------------------- flexible semantics (ISSUE 9)
+@st.composite
+def semantics_instances(draw):
+    """Random corpus x random query x random semantics draw spanning the
+    whole knob space: m over [1, |Q|] or None, weights on a random query
+    subset, scored or not. Trivial draws (m = |Q|, unit weights, no score)
+    are kept in-distribution on purpose — they pin the degeneracy contract."""
+    from repro.core.semantics import QuerySemantics
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    ds = _random_corpus(rng, draw(st.integers(15, 40)),
+                        draw(st.integers(2, 4)), draw(st.integers(4, 7)),
+                        with_attrs=False)
+    populated = np.flatnonzero(np.diff(ds.ikp.offsets) > 0)
+    q = min(draw(st.integers(2, 3)), max(len(populated), 1))
+    query = sorted(rng.choice(populated, size=q, replace=False).tolist())
+    m = draw(st.one_of(st.none(), st.integers(1, q)))
+    weights = {int(v): draw(st.floats(1.0, 8.0))
+               for v in query if draw(st.booleans())}
+    sem = QuerySemantics(m=m, weights=weights or None,
+                         score=draw(st.booleans()),
+                         alpha=draw(st.floats(0.1, 2.0)))
+    return ds, query, sem, seed
+
+
+def _assert_flex_parity(got, want, ds, query, sem):
+    """Non-trivial semantics: exact id-sequence parity with the oracle.
+    Trivial draws go through the untouched classic path, which keeps its
+    historical (arbitrary) equal-diameter tie resolution — there the
+    contract is cost parity + universe membership."""
+    if sem.trivial_for(query):
+        np.testing.assert_allclose([c.diameter for c in got],
+                                   [c.diameter for c in want], rtol=1e-9)
+        universe = set(brute_force.enumerate_candidates(ds, query))
+        for c in got:
+            assert c.ids in universe
+    else:
+        assert [c.ids for c in got] == [c.ids for c in want]
+        np.testing.assert_allclose([c.diameter for c in got],
+                                   [c.diameter for c in want], rtol=1e-9)
+        if sem.score:
+            np.testing.assert_allclose(
+                [c.score for c in got], [c.score for c in want], rtol=1e-9)
+
+
+@given(inst=semantics_instances())
+@settings(deadline=None)
+def test_flex_promish_e_equals_oracle(inst):
+    """Flexible parity, exact tier: for any random (m, weights, score) draw,
+    ProMiSH-E ranks identically to the extended brute-force oracle."""
+    ds, query, sem, seed = inst
+    idx = build_index(ds, m=2, n_scales=4, exact=True, seed=seed % 7)
+    got = promish_e.search(ds, idx, query, k=2, semantics=sem).items
+    want = brute_force.search_flex(ds, query, k=2, semantics=sem)
+    _assert_flex_parity(got, want, ds, query, sem)
+
+
+@given(inst=semantics_instances())
+@settings(deadline=None)
+def test_flex_promish_a_subset_of_feasible(inst):
+    """Flexible containment, approx tier: every candidate is drawn from the
+    m-of-k universe with the exact weighted cost (and score)."""
+    ds, query, sem, seed = inst
+    idx = build_index(ds, m=2, n_scales=4, exact=False, seed=seed % 5)
+    got = promish_a.search(ds, idx, query, k=2, semantics=sem).items
+    wvec = sem.weight_vector(ds, query)
+    feasible = set(brute_force.enumerate_candidates_flex(ds, query, sem))
+    for c in got:
+        assert c.ids in feasible
+        np.testing.assert_allclose(
+            c.diameter, brute_force.weighted_set_cost(c.ids, ds, wvec),
+            rtol=1e-9)
+        if sem.score:
+            cov = sem.coverage_fn(ds, query)
+            np.testing.assert_allclose(
+                c.score, cov(c.ids) / (1.0 + sem.alpha * c.diameter),
+                rtol=1e-9)
+
+
+@given(inst=semantics_instances())
+@settings(deadline=None)
+def test_flex_engine_parity_and_degeneracy(inst):
+    """The batched engine under flexible semantics matches the oracle, and a
+    degenerate semantics object (m = |Q|) is *bit-identical* to the
+    semantics-free batch on the same route — the contract that guards every
+    pre-existing caller."""
+    from repro.serve.engine import NKSEngine
+    ds, query, sem, seed = inst
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=seed % 5)
+    got = eng.query_batch([query], k=2, tier="exact", backend="numpy",
+                          semantics=sem)[0].candidates
+    want = brute_force.search_flex(ds, query, k=2, semantics=sem)
+    _assert_flex_parity(got, want, ds, query, sem)
+    base = eng.query_batch([query], k=2, tier="exact", backend="numpy")[0]
+    deg = eng.query_batch([query], k=2, tier="exact", backend="numpy",
+                          semantics={"m": len(query)})[0]
+    assert [(c.ids, c.diameter) for c in deg.candidates] == \
+        [(c.ids, c.diameter) for c in base.candidates]
+
+
 # ---------------------------------------------------------- cascade tier 0
 @st.composite
 def cascade_instances(draw):

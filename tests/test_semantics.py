@@ -1,0 +1,416 @@
+"""Flexible query semantics (ISSUE 9): m-of-k partial coverage, per-keyword
+weights, scored top-k.
+
+Structure mirrors the repo's differential discipline: unit tests for the
+semantics/queue primitives, then seeded differential suites asserting the
+fast paths (promish_e / promish_a / batched engine on both numpy and pallas
+routes) against the extended brute-force oracle ``search_flex``, and the
+degeneracy contract — ``m = |Q|`` + unit weights + no scoring must be
+*bit-identical* to the classic path on the same route.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import brute_force, promish_a, promish_e
+from repro.core.index import build_index
+from repro.core.semantics import (MAX_SUBQUERIES, QuerySemantics,
+                                  parse_weighted_keywords, weighted_pair_sq)
+from repro.core.types import Candidate, ScoredTopK, TopK, make_dataset
+from repro.serve.engine import NKSEngine
+
+
+def _corpus(seed, n=90, d=4, u=10):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 1000, (n, d)).astype(np.float32)
+    kws = [rng.choice(u, size=rng.integers(1, 4), replace=False).tolist()
+           for _ in range(n)]
+    return make_dataset(pts, kws, n_keywords=u)
+
+
+def _queries(ds, n_queries, qlen, seed):
+    rng = np.random.default_rng(seed)
+    populated = np.flatnonzero(np.diff(ds.ikp.offsets) > 0)
+    return [sorted(rng.choice(populated, size=qlen, replace=False).tolist())
+            for _ in range(n_queries)]
+
+
+# The semantics variants every differential suite sweeps. Weights are keyed
+# by query position (resolved to the drawn keyword ids per query) so each
+# variant is meaningful for any query.
+def _variants(query):
+    q = list(query)
+    return [
+        {"m": max(1, len(q) - 1)},
+        {"m": 1},
+        {"weights": {q[0]: 3.0, q[-1]: 1.5}},
+        {"m": max(1, len(q) - 1), "weights": {q[0]: 2.0}},
+        {"m": 1, "score": True, "alpha": 0.5},
+        {"score": True},
+    ]
+
+
+# --------------------------------------------------------------- unit tests
+def test_semantics_validation_errors():
+    with pytest.raises(ValueError, match="weight"):
+        QuerySemantics(weights={3: 0.5})
+    with pytest.raises(ValueError, match="weight"):
+        QuerySemantics.coerce({"weights": {"3": float("nan")}})
+    with pytest.raises(ValueError, match="m must be"):
+        QuerySemantics(m=0)
+    with pytest.raises(ValueError, match="alpha"):
+        QuerySemantics(alpha=0.0)
+    with pytest.raises(ValueError, match="unknown semantics key"):
+        QuerySemantics.coerce({"mm": 2})
+    with pytest.raises(ValueError, match="dict or QuerySemantics"):
+        QuerySemantics.coerce([2])
+    with pytest.raises(ValueError, match="exceeds"):
+        QuerySemantics(m=5).trivial_for([1, 2])
+    with pytest.raises(ValueError, match="cap"):
+        QuerySemantics(m=1).expand_subqueries(list(range(12)))
+
+
+def test_coerce_and_canonical_key():
+    sem = QuerySemantics.coerce({"m": 2, "weights": {"7": 4}, "score": True})
+    assert sem.m == 2 and sem.weights == {7: 4.0} and sem.score
+    assert QuerySemantics.coerce(None) is None
+    assert QuerySemantics.coerce(sem) is sem
+    # canonical_key is order-insensitive over weights and distinguishes knobs
+    a = QuerySemantics(weights={3: 2.0, 7: 4.0}).canonical_key()
+    b = QuerySemantics(weights={7: 4.0, 3: 2.0}).canonical_key()
+    assert a == b
+    assert QuerySemantics(m=2).canonical_key() != \
+        QuerySemantics(m=1).canonical_key()
+    assert QuerySemantics(score=True, alpha=0.5).canonical_key() != \
+        QuerySemantics(score=True, alpha=1.0).canonical_key()
+
+
+def test_trivial_for():
+    assert QuerySemantics().trivial_for([1, 2, 3])
+    assert QuerySemantics(m=3).trivial_for([1, 2, 3])
+    assert QuerySemantics(weights={9: 4.0}).trivial_for([1, 2])  # off-query
+    assert not QuerySemantics(m=2).trivial_for([1, 2, 3])
+    assert not QuerySemantics(weights={1: 2.0}).trivial_for([1, 2])
+    assert not QuerySemantics(score=True).trivial_for([1, 2])
+
+
+def test_expand_subqueries():
+    assert QuerySemantics().expand_subqueries([3, 1]) == [[1, 3]]
+    subs = QuerySemantics(m=1).expand_subqueries([1, 2, 3])
+    assert subs[0] == [1, 2, 3]                    # largest first
+    assert len(subs) == 7
+    assert [len(s) for s in subs] == sorted([len(s) for s in subs],
+                                            reverse=True)
+    assert len({tuple(s) for s in subs}) == 7      # distinct
+    assert MAX_SUBQUERIES == 512
+
+
+def test_parse_weighted_keywords_grammar():
+    kws, w = parse_weighted_keywords(["3", "7^4", 12, "5^1.5"])
+    assert kws == [3, 7, 12, 5]
+    assert w == {7: 4.0, 5: 1.5}
+    assert parse_weighted_keywords([1, 2]) == ([1, 2], {})
+
+
+def test_resolve_keywords_maps_weight_keys():
+    sem = QuerySemantics(m=1, weights={3: 2.0})
+    out = sem.resolve_keywords(lambda kw: kw + 100)
+    assert out.weights == {103: 2.0} and out.m == 1
+    assert QuerySemantics(m=2).resolve_keywords(lambda kw: kw + 1).m == 2
+
+
+def test_topk_tie_open_admits_equal_cost():
+    strict, open_ = TopK(2, init_full=True), TopK(2, init_full=True,
+                                                  tie_open=True)
+    for pq in (strict, open_):
+        pq.offer(Candidate(ids=(5,), diameter=0.0))
+        pq.offer(Candidate(ids=(9,), diameter=0.0))
+    kth = strict.kth_diameter()
+    assert kth == 0.0
+    assert open_.kth_diameter() == math.nextafter(0.0, math.inf)
+    # an equal-cost candidate with a better id tie-break must displace (9,)
+    open_.offer(Candidate(ids=(2,), diameter=0.0))
+    assert [c.ids for c in open_.items] == [(2,), (5,)]
+
+
+def test_scored_topk_ranks_by_score_and_bounds_cost():
+    cov = lambda ids: float(len(ids))              # noqa: E731
+    pq = ScoredTopK(2, total_weight=3.0, alpha=1.0, coverage=cov,
+                    init_full=True)
+    assert pq.kth_diameter() == float("inf")       # not full yet
+    pq.offer(Candidate(ids=(1, 2, 3), diameter=2.0))   # score 3/(1+2) = 1.0
+    pq.offer(Candidate(ids=(4,), diameter=0.0))        # score 1/(1+0) = 1.0
+    pq.offer(Candidate(ids=(5, 6), diameter=0.5))      # score 2/1.5 ~= 1.33
+    items = pq.items
+    # the 1.0-score tie breaks on diameter: (4,) at cost 0 beats (1,2,3)
+    assert [c.ids for c in items] == [(5, 6), (4,)]
+    assert items[0].score == pytest.approx(2.0 / 1.5)
+    # kth score 1.0 -> cost bound (3.0/1.0 - 1)/1.0 = 2.0 (+ulp tie-opening)
+    assert pq.kth_diameter() == math.nextafter(2.0, math.inf)
+
+
+def test_weighted_set_cost_matches_manual():
+    ds = _corpus(0)
+    wvec = np.ones(ds.n)
+    wvec[[3, 7]] = [2.0, 3.0]
+    ids = [3, 7, 11]
+    pts = ds.points[np.asarray(ids)].astype(np.float64)
+    diff = pts[:, None] - pts[None, :]
+    d2 = (diff * diff).sum(-1)
+    want = float(np.sqrt(weighted_pair_sq(d2, wvec[np.asarray(ids)]).max()))
+    got = brute_force.weighted_set_cost(ids, ds, wvec)
+    assert got == want
+    assert brute_force.weighted_set_cost([5], ds, wvec) == 0.0
+
+
+# ------------------------------------------------- per-query search parity
+def test_promish_e_flex_matches_oracle():
+    """Exact tier == oracle (ids and costs) for every semantics variant."""
+    for seed in (1, 2):
+        ds = _corpus(seed)
+        idx = build_index(ds, m=2, n_scales=4, exact=True, seed=seed)
+        for query in _queries(ds, 2, 3, seed + 50):
+            for var in _variants(query):
+                sem = QuerySemantics.coerce(var)
+                want = brute_force.search_flex(ds, query, k=2, semantics=sem)
+                got = promish_e.search(ds, idx, query, k=2,
+                                       semantics=sem).items
+                assert [c.ids for c in got] == [c.ids for c in want], var
+                np.testing.assert_allclose([c.diameter for c in got],
+                                           [c.diameter for c in want],
+                                           rtol=1e-9)
+                if sem.score:
+                    np.testing.assert_allclose(
+                        [c.score for c in got], [c.score for c in want],
+                        rtol=1e-9)
+
+
+def test_promish_a_flex_candidates_feasible():
+    """Approx tier: every candidate comes from the flexible universe with
+    the exact weighted cost (and score, when scoring)."""
+    seed = 3
+    ds = _corpus(seed)
+    idx = build_index(ds, m=2, n_scales=4, exact=False, seed=seed)
+    for query in _queries(ds, 2, 3, seed + 50):
+        for var in _variants(query):
+            sem = QuerySemantics.coerce(var)
+            wvec = sem.weight_vector(ds, query)
+            universe = set(brute_force.enumerate_candidates_flex(
+                ds, sorted(query), sem))
+            got = promish_a.search(ds, idx, query, k=2, semantics=sem).items
+            for c in got:
+                assert c.ids in universe, var
+                np.testing.assert_allclose(
+                    c.diameter,
+                    brute_force.weighted_set_cost(c.ids, ds, wvec),
+                    rtol=1e-9)
+                if sem.score:
+                    cov = sem.coverage_fn(ds, query)
+                    np.testing.assert_allclose(
+                        c.score,
+                        cov(c.ids) / (1.0 + sem.alpha * c.diameter),
+                        rtol=1e-9)
+
+
+def test_degenerate_semantics_bit_identical_per_query():
+    """m = |Q|, unit weights, no scoring: promish_e/a results are bitwise
+    equal to a semantics-free run (the degeneracy contract)."""
+    seed = 4
+    ds = _corpus(seed)
+    degenerate = [None,
+                  {"m": 3},
+                  {"weights": {0: 1.0}},
+                  {"m": 3, "weights": {999: 7.0}, "alpha": 2.0}]
+    for exact, mod in ((True, promish_e), (False, promish_a)):
+        idx = build_index(ds, m=2, n_scales=4, exact=exact, seed=seed)
+        for query in _queries(ds, 2, 3, seed + 60):
+            base = mod.search(ds, idx, query, k=2).items
+            for var in degenerate:
+                got = mod.search(ds, idx, query, k=2, semantics=var).items
+                assert [(c.ids, c.diameter) for c in got] == \
+                    [(c.ids, c.diameter) for c in base], var
+
+
+# ------------------------------------------------------------ engine parity
+def test_engine_flex_matches_oracle():
+    ds = _corpus(5)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=5)
+    queries = _queries(ds, 3, 3, 77)
+    for var in _variants(queries[0]):
+        sem = QuerySemantics.coerce(var)
+        res = eng.query_batch(queries, k=2, tier="exact", backend="numpy",
+                              semantics=sem)
+        for q, r in zip(queries, res):
+            want = brute_force.search_flex(ds, q, k=2, semantics=sem)
+            assert [c.ids for c in r.candidates] == [c.ids for c in want], var
+            np.testing.assert_allclose([c.diameter for c in r.candidates],
+                                       [c.diameter for c in want], rtol=1e-9)
+
+
+def test_engine_degenerate_bit_identical_per_route():
+    """On each backend route, a degenerate semantics batch is bitwise equal
+    to the classic batch (same route)."""
+    ds = _corpus(6)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=6)
+    queries = _queries(ds, 3, 3, 88)
+    for backend in ("numpy", "pallas"):
+        base = eng.query_batch(queries, k=2, tier="exact", backend=backend)
+        got = eng.query_batch(queries, k=2, tier="exact", backend=backend,
+                              semantics={"m": 3, "weights": {0: 1.0}})
+        for b, g in zip(base, got):
+            assert [(c.ids, c.diameter) for c in g.candidates] == \
+                [(c.ids, c.diameter) for c in b.candidates]
+
+
+def test_engine_backend_parity_flex():
+    """numpy and pallas routes agree on flexible batches (ids exactly,
+    costs to settlement tolerance)."""
+    ds = _corpus(7)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=7)
+    queries = _queries(ds, 3, 3, 99)
+    for var in ({"m": 2}, {"weights": {queries[0][0]: 2.5}},
+                {"m": 2, "score": True}):
+        a = eng.query_batch(queries, k=2, tier="exact", backend="numpy",
+                            semantics=var)
+        b = eng.query_batch(queries, k=2, tier="exact", backend="pallas",
+                            semantics=var)
+        for ra, rb in zip(a, b):
+            assert [c.ids for c in ra.candidates] == \
+                [c.ids for c in rb.candidates], var
+            np.testing.assert_allclose([c.diameter for c in ra.candidates],
+                                       [c.diameter for c in rb.candidates],
+                                       rtol=1e-9)
+
+
+def test_engine_query_scored_and_subquery_stats():
+    ds = _corpus(8)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=8)
+    query = _queries(ds, 1, 3, 111)[0]
+    res = eng.query(query, k=2, tier="exact",
+                    semantics={"m": 1, "score": True})
+    assert res.candidates and all(c.score is not None
+                                  for c in res.candidates)
+    scores = [c.score for c in res.candidates]
+    assert scores == sorted(scores, reverse=True)
+    # one 3-kw query at m=2 plans C(3,3) + C(3,2) = 4 subqueries
+    eng.query_batch([query], k=1, tier="exact", backend="numpy",
+                    semantics={"m": 2})
+    assert eng.last_batch_stats.subqueries == 4
+    # classic batch: one subquery per query
+    eng.query_batch([query], k=1, tier="exact", backend="numpy")
+    assert eng.last_batch_stats.subqueries == 1
+
+
+def test_engine_device_tier_rejects_flex():
+    ds = _corpus(9)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=9)
+    query = _queries(ds, 1, 2, 5)[0]
+    with pytest.raises(ValueError, match="device tier"):
+        eng.query(query, tier="device", semantics={"m": 1})
+    # degenerate semantics on the device tier are fine (classic path)
+    eng.query(query, tier="device", semantics={"m": 2})
+
+
+def test_engine_approx_flex_feasible():
+    ds = _corpus(10)
+    eng = NKSEngine(ds, m=2, n_scales=4, build_exact=False, build_approx=True,
+                    seed=10)
+    query = _queries(ds, 1, 3, 6)[0]
+    sem = QuerySemantics(m=2)
+    universe = set(brute_force.enumerate_candidates_flex(ds, query, sem))
+    res = eng.query(query, k=2, tier="approx", semantics=sem)
+    for c in res.candidates:
+        assert c.ids in universe
+
+
+# -------------------------------------------------------- runtime & launcher
+def test_runtime_batch_key_separates_semantics():
+    from repro.serve.runtime import _semantics_key
+    assert _semantics_key(None) == ""
+    a = _semantics_key({"m": 2, "weights": {"3": 2.0}})
+    b = _semantics_key({"weights": {"3": 2.0}, "m": 2})
+    assert a == b                                   # key-order insensitive
+    assert _semantics_key({"m": 1}) != _semantics_key({"m": 2})
+    assert _semantics_key(QuerySemantics(m=2)) == \
+        QuerySemantics(m=2).canonical_key()
+
+
+def test_launcher_grammar_and_score_rows():
+    from repro.launch.serve import (_to_runtime_request, handle_request_safe)
+    ds = _corpus(11, n=200)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=11)
+    query = _queries(ds, 1, 3, 7)[0]
+    kw_wire = [str(query[0]), f"{query[1]}^3", query[2]]
+
+    out = handle_request_safe(eng, {"keywords": kw_wire, "m": 1,
+                                    "score": True, "k": 2},
+                              tier="exact", k=1)
+    assert out["keywords"] == query
+    assert out["results"] and all("score" in r for r in out["results"])
+
+    # classic rows carry no score field
+    classic = handle_request_safe(eng, {"keywords": query}, tier="exact", k=1)
+    assert all("score" not in r for r in classic["results"])
+
+    # oracle agreement through the launcher surface
+    sem = {"m": 1, "score": True,
+           "weights": {query[1]: 3.0}}
+    want = brute_force.search_flex(ds, query, k=2,
+                                   semantics=sem)
+    assert [r["ids"] for r in out["results"]] == \
+        [list(c.ids) for c in want]
+
+    # runtime conversion embeds the parsed semantics
+    rt = _to_runtime_request(eng, {"keywords": kw_wire, "m": 1,
+                                   "alpha": 0.5}, tier="exact", k=1)
+    assert rt["keywords"] == query
+    assert rt["semantics"] == {"m": 1, "weights": {query[1]: 3.0},
+                               "alpha": 0.5}
+    assert _to_runtime_request(eng, {"keywords": query}, tier="exact",
+                               k=1)["semantics"] is None
+
+    # invalid semantics become an error envelope, never a crash
+    bad = handle_request_safe(eng, {"keywords": query, "m": 99},
+                              tier="exact", k=1)
+    assert bad["status"] == "error" and "exceeds" in bad["error"]
+
+
+def test_launcher_explicit_weights_merge_with_boosts():
+    from repro.launch.serve import _parse_query_semantics
+    kws, sem = _parse_query_semantics(
+        {"keywords": ["3^4", 7], "weights": {"3": 2.0, "7": 1.5}})
+    assert kws == [3, 7]
+    assert sem == {"weights": {3: 4.0, 7: 1.5}}    # inline boost wins
+
+
+def test_runtime_end_to_end_semantics():
+    """Semantics survive the async runtime: coalescing keys keep mixed
+    batches apart and scored rows round-trip."""
+    from repro.serve.runtime import RuntimeConfig, ServingRuntime
+    ds = _corpus(12, n=200)
+    eng = NKSEngine(ds, m=2, n_scales=4, seed=12)
+    queries = _queries(ds, 2, 3, 8)
+    rt = ServingRuntime(eng, RuntimeConfig(tier="exact", k=2))
+    try:
+        t1 = rt.submit({"op": "query", "keywords": queries[0],
+                        "semantics": {"m": 1, "score": True}})
+        t2 = rt.submit({"op": "query", "keywords": queries[1]})
+        r1, r2 = t1.result(), t2.result()
+    finally:
+        rt.close()
+    assert r1.status == "ok" and r2.status == "ok"
+    assert all(c.score is not None for c in r1.payload["candidates"])
+    assert all(c.score is None for c in r2.payload["candidates"])
+    want = brute_force.search_flex(ds, queries[0], k=2,
+                                   semantics={"m": 1, "score": True})
+    assert [c.ids for c in r1.payload["candidates"]] == \
+        [c.ids for c in want]
+
+
+def test_semantics_module_has_no_heavy_imports():
+    """semantics.py is imported by the launcher's request path — keep it
+    free of jax/pallas imports (numpy-only)."""
+    import repro.core.semantics as mod
+    src = open(mod.__file__).read()
+    assert "import jax" not in src
