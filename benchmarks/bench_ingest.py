@@ -9,8 +9,12 @@ insert:query op mix), sprinkles deletes (~10% of each absorbed batch a round
 later), and lets auto-compaction fire at the configured cadence:
 
     PYTHONPATH=src python -m benchmarks.bench_ingest [--fast] [--mesh N]
+                                                     [--pipeline]
 
-Writes ``BENCH_ingest.json``. Numbers of note: ``qps_sustained`` vs
+Writes ``BENCH_ingest.json``. ``--pipeline`` adds a document-ingestion leg
+(``tiers.pipeline``): raw documents under a Poisson arrival process drain
+through the ``data/ingest.py`` job-queue worker pipeline, recording docs/s
+plus retry/reclaim counts with armed transient faults. Numbers of note: ``qps_sustained`` vs
 ``qps_static`` (the ingest tax on query throughput), ``compactions`` /
 ``generation`` (the cadence actually exercised), and the exact tier's
 ``cache_hit_rate`` under churn — the retention fix means absorbs must NOT
@@ -30,7 +34,7 @@ OUT = "BENCH_ingest.json"
 
 def main(fast: bool = False, mesh: int = 0, mix: int = 10,
          insert_batch: int | None = None, query_batch: int | None = None,
-         rounds: int | None = None) -> dict:
+         rounds: int | None = None, pipeline: bool = False) -> dict:
     if mesh > 1 and "xla_force_host_platform_device_count" \
             not in os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = (
@@ -195,6 +199,74 @@ def main(fast: bool = False, mesh: int = 0, mix: int = 10,
             out["group"]["points_per_s"] / out["per_op"]["points_per_s"], 3)
         return out
 
+    def run_pipeline_leg() -> dict:
+        """Document-ingestion pipeline under a Poisson arrival process.
+
+        Raw ``flickr_like`` documents arrive with exponential inter-arrival
+        gaps (materialised up front as per-job ``not_before`` instants), a
+        worker fleet drains the persistent job queue through the embed +
+        WAL-group-committed insert stages, and a pair of armed transient
+        faults forces the retry path so the recorded retry counts are
+        non-trivial. ``docs_per_s`` is completion throughput including the
+        arrival pacing — it tracks the offered rate while the pipeline
+        keeps up, and sags below it when ingest is the bottleneck.
+        """
+        import shutil
+        import tempfile
+
+        from repro.data.ingest import (IngestPipeline, JobStore,
+                                       ProjectionEmbedder,
+                                       corpus_from_documents,
+                                       flickr_like_documents)
+        from repro.serve.faults import FaultPlan
+
+        n_docs = 400 if fast else 2_000
+        n_seed = 200 if fast else 600
+        workers, batch_docs = 4, 32
+        arrival_rate = n_docs / (1.5 if fast else 6.0)   # docs/s offered
+        d_raw = 32
+        docs, vocab = flickr_like_documents(n_seed + n_docs, d_raw=d_raw,
+                                            u=30, t=3, seed=7)
+        embedder = ProjectionEmbedder(ds0.dim, vocab, d_raw=d_raw, seed=7)
+        seed_ds, _ = corpus_from_documents(docs[:n_seed], embedder)
+        rng = np.random.default_rng(12)
+        offsets = np.cumsum(rng.exponential(1.0 / arrival_rate, n_docs))
+        root = tempfile.mkdtemp(prefix="nks-ingestbench-")
+        try:
+            store = JobStore(os.path.join(root, "jobs.jsonl"), lease_s=5.0,
+                             backoff_s=0.005, max_attempts=8)
+            engine = NKSEngine(seed_ds, m=2, n_scales=5, seed=0,
+                               build_approx=False, auto_compact=False)
+            engine.attach_wal(os.path.join(root, "wal"))
+            faults = FaultPlan(transient={"insert": 4, "embed": 9})
+            pipe = IngestPipeline(store, engine, embedder, workers=workers,
+                                  batch_docs=batch_docs, faults=faults)
+            store.add(docs[n_seed:],
+                      not_before=store.clock() + offsets)
+            report = pipe.run(timeout_s=60.0 + float(offsets[-1]))
+            wal_st = engine.wal_stats
+            engine.close()
+            store.close()
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+        out = {
+            "docs_per_s": report["docs_per_s"],
+            "arrival_rate_offered": round(arrival_rate, 2),
+            "docs": n_docs, "workers": workers, "batch_docs": batch_docs,
+            "drained": report["drained"],
+            "docs_done": report["docs_done"],
+            "failed": report["docs_failed"],
+            "retries": report["retries"],
+            "reclaims": report["reclaims"],
+            "wall_s": round(report["wall_s"], 3),
+            "wal_fsyncs": wal_st.fsyncs,
+            "transient_faults_fired": sum(faults.fired.values()),
+        }
+        emit("ingest.pipeline", 1e6 / max(report["docs_per_s"], 1e-9),
+             f"workers={workers} offered={arrival_rate:.0f}/s "
+             f"retries={report['retries']}")
+        return out
+
     results: dict = {
         "n0": n0, "d": ds0.dim, "fast": fast, "mesh": mesh if mesh > 1 else 1,
         "k": k, "rounds": rounds, "insert_batch": ib, "query_batch": qb,
@@ -202,6 +274,8 @@ def main(fast: bool = False, mesh: int = 0, mix: int = 10,
         "tiers": {tier: run_tier(tier) for tier in ("approx", "exact")},
         "wal": run_wal_leg(),
     }
+    if pipeline:
+        results["tiers"]["pipeline"] = run_pipeline_leg()
     # How much worse the approx tier's ingest tax is than the exact tier's:
     # the batched suspect re-verification (IndexDelta.verify_suspects) should
     # keep this near zero — both tiers share the same delta maintenance.
@@ -226,7 +300,12 @@ if __name__ == "__main__":
     ap.add_argument("--insert-batch", type=int, default=None)
     ap.add_argument("--query-batch", type=int, default=None)
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="add the document-ingestion pipeline leg: Poisson "
+                         "document arrivals through the job-queue worker "
+                         "pipeline (data/ingest.py), recording docs/s and "
+                         "retry counts")
     args = ap.parse_args()
     main(fast=args.fast, mesh=args.mesh, mix=args.mix,
          insert_batch=args.insert_batch, query_batch=args.query_batch,
-         rounds=args.rounds)
+         rounds=args.rounds, pipeline=args.pipeline)

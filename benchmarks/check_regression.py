@@ -68,11 +68,16 @@ GATED_SERVING_LOWER = ("p99_ms_runtime",)
 # was committed (ISSUE 9) — before that the gate warned and skipped.
 GATED_SIZE = ("qps_exact", "qps_approx")
 # Flexible semantics (ISSUE 9): classic vs m-of-k vs weighted vs scored QPS
-# per tier, both backends. Warn-only until a semantics baseline is committed;
-# the ``degenerate_parity`` contract hard-fails regardless.
+# per tier, both backends. Hard gate since ``BENCH_semantics_baseline.json``
+# was committed (ISSUE 10); the ``degenerate_parity`` contract hard-fails
+# on top of the perf thresholds.
 GATED_SEMANTICS = ("classic_qps", "m_of_k_qps", "weighted_qps", "scored_qps",
                    "classic_pallas_qps", "m_of_k_pallas_qps",
                    "weighted_pallas_qps", "scored_pallas_qps")
+# Ingestion pipeline (ISSUE 10): sustained docs/s through the job-queue
+# worker pipeline under a Poisson arrival process, plus the static-mix
+# ingest tiers. Warn-only until ``BENCH_ingest_baseline.json`` is committed.
+GATED_INGEST = ("docs_per_s", "qps_sustained", "qps_static")
 
 
 def compare(fresh: dict, baseline: dict, threshold: float,
@@ -185,6 +190,9 @@ def main(argv=None) -> int:
     ap.add_argument("--semantics-fresh", default="BENCH_semantics.json")
     ap.add_argument("--semantics-baseline",
                     default="BENCH_semantics_baseline.json")
+    ap.add_argument("--ingest-fresh", default="BENCH_ingest.json")
+    ap.add_argument("--ingest-baseline",
+                    default="BENCH_ingest_baseline.json")
     ap.add_argument("--serving-latency-threshold", type=float, default=0.60,
                     help="maximum tolerated p99 inflation, as 1 - base/fresh "
                          "(0.60 fails past 2.5x baseline — open-loop tail "
@@ -270,9 +278,13 @@ def main(argv=None) -> int:
              regen_hint="python -m benchmarks.fig9_size --fast --store disk",
              metrics=GATED_SIZE),
         dict(title="flexible semantics", fresh_path=args.semantics_fresh,
-             baseline_path=args.semantics_baseline, baseline_required=False,
+             baseline_path=args.semantics_baseline, baseline_required=True,
              regen_hint="python -m benchmarks.bench_semantics --fast",
              metrics=GATED_SEMANTICS, contracts=semantics_contracts),
+        dict(title="ingestion pipeline", fresh_path=args.ingest_fresh,
+             baseline_path=args.ingest_baseline, baseline_required=False,
+             regen_hint="python -m benchmarks.bench_ingest --fast --pipeline",
+             metrics=GATED_INGEST),
     )
 
     failures = 0
@@ -286,18 +298,6 @@ def main(argv=None) -> int:
         if gate_failures is not None:
             compared += 1
             failures += gate_failures
-
-    # The degenerate-parity contract is correctness, not perf — enforce it
-    # even while the semantics baseline is uncommitted (the gate above skips
-    # entirely without one).
-    if not os.path.exists(args.semantics_baseline) \
-            and os.path.exists(args.semantics_fresh):
-        with open(args.semantics_fresh) as f:
-            bad = semantics_contracts(json.load(f))
-        if bad:
-            print(f"\nFAIL: {bad} semantics contract(s) violated",
-                  file=sys.stderr)
-            return 1
 
     if not compared:
         # Matches the historical missing-fresh semantics: the bench steps

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.token_pipeline import PipelineConfig, TokenPipeline
 from repro.models.api import count_params, model_api
 from repro.serve.engine import NKSEngine
 from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state

@@ -1,3 +1,17 @@
-"""repro.data — dataset generators and the sharded training pipeline."""
+"""repro.data — dataset generators and the two data pipelines.
+
+Two distinct "pipelines" live here; the names keep them apart:
+
+  * :mod:`repro.data.token_pipeline` — the deterministic *training token*
+    pipeline feeding the embedder trainer (counter-based PRNG, elastic
+    resharding).
+  * :mod:`repro.data.ingest` — the *corpus ingestion* pipeline: raw
+    documents through a persistent job queue, embed workers, and WAL
+    group-committed batch inserts into a live engine.
+"""
 from repro.data.synthetic import synthetic_dataset, random_queries  # noqa: F401
 from repro.data.flickr_like import flickr_like_dataset  # noqa: F401
+from repro.data.ingest import (  # noqa: F401
+    IngestPipeline, IngestWorker, JobStore, ProjectionEmbedder,
+    corpus_from_documents, flickr_like_documents,
+)

@@ -1,4 +1,7 @@
-"""Deterministic, resumable, elastic training data pipeline.
+"""Deterministic, resumable, elastic *training token* pipeline.
+
+(Not corpus ingestion — that is ``repro.data.ingest``, the document ->
+job-queue -> engine path. This module feeds the embedder trainer.)
 
 Counter-based PRNG (Philox) keyed by (seed, step, dp_rank): any batch is a
 pure function of its coordinates, so

@@ -269,6 +269,42 @@ def serve_with_runtime(runtime, engine: NKSEngine, reqs, *, tier: str, k: int):
     yield from flush(window)
 
 
+def _run_ingest_pipeline(target, ds, args) -> dict:
+    """Drive ``--ingest-docs`` raw documents through the job-queue pipeline
+    into ``target`` (engine, or runtime under ``--runtime``). Documents are
+    ``flickr_like`` payloads matched to the serving corpus: same point dim,
+    same (per-tenant) dictionary size, attrs iff the corpus has them."""
+    import os
+    import tempfile
+
+    from repro.data.ingest import (IngestPipeline, JobStore,
+                                   ProjectionEmbedder, flickr_like_documents)
+    tenanted = ds.tenants is not None
+    u = args.u if tenanted else ds.n_keywords
+    d_raw = 4 * ds.dim
+    docs, vocab = flickr_like_documents(
+        args.ingest_docs, d_raw=d_raw, u=u, t=args.t, seed=11,
+        tenants=list(ds.tenants.names) if tenanted else None,
+        with_attrs=bool(ds.attrs))
+    embedder = ProjectionEmbedder(ds.dim, vocab, d_raw=d_raw, seed=11)
+    root = args.ingest_jobs or tempfile.mkdtemp(prefix="nks-ingest-")
+    os.makedirs(root, exist_ok=True)
+    store = JobStore(os.path.join(root, "jobs.jsonl"))
+    pipe = IngestPipeline(store, target, embedder,
+                          workers=args.ingest_workers)
+    outcome = pipe.recover()          # resolve a prior run's open intent
+    if outcome:
+        print(f"ingest: recovered open intent -> {outcome}", file=sys.stderr)
+    store.add(docs)
+    report = pipe.run(timeout_s=max(120.0, args.ingest_docs / 50.0))
+    store.close()
+    print(f"ingest: {report['docs_done']} docs in {report['wall_s']:.2f}s "
+          f"({report['docs_per_s']:.0f} docs/s, "
+          f"retries={report['retries']} reclaims={report['reclaims']} "
+          f"failed={report['docs_failed']}) jobs={root}", file=sys.stderr)
+    return report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20_000)
@@ -313,6 +349,17 @@ def main():
                     help="attach a write-ahead log rooted here: every ingest "
                          "ack becomes durable; recover with "
                          "NKSEngine.recover(DIR)")
+    ap.add_argument("--ingest-docs", type=int, default=0,
+                    help="before serving, run this many flickr_like raw "
+                         "documents through the ingestion job pipeline "
+                         "(data/ingest.py) into the engine — through the "
+                         "admission queue under --runtime, so pipeline "
+                         "batches coalesce with other ingest")
+    ap.add_argument("--ingest-workers", type=int, default=2,
+                    help="ingestion pipeline worker threads")
+    ap.add_argument("--ingest-jobs", default=None, metavar="DIR",
+                    help="persist the ingestion job journal here (reopening "
+                         "resumes unfinished jobs); default: a temp dir")
     args = ap.parse_args()
 
     if args.tenants:
@@ -359,12 +406,16 @@ def main():
             default_deadline_s=args.deadline_s,
             tier=args.tier, k=args.k))
         try:
+            if args.ingest_docs:
+                _run_ingest_pipeline(runtime, ds, args)
             for out in serve_with_runtime(runtime, engine, reqs,
                                           tier=args.tier, k=args.k):
                 print(json.dumps(out), flush=True)
         finally:
             runtime.close()
     else:
+        if args.ingest_docs:
+            _run_ingest_pipeline(engine, ds, args)
         for req in reqs:
             print(json.dumps(handle_request_safe(engine, req, tier=args.tier,
                                                  k=args.k)), flush=True)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import TRAIN_4K
-from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.token_pipeline import PipelineConfig, TokenPipeline
 from repro.launch import shardings as sh
 from repro.launch.mesh import dp_axes, dp_size, make_production_mesh
 from repro.launch.step import make_train_step

@@ -429,6 +429,14 @@ class NKSEngine:
         return self._view is not None and self._view.dirty
 
     @property
+    def next_external_id(self) -> int:
+        """The id the next inserted point will receive. External ids are
+        assigned strictly sequentially, so this horizon lets an ingest
+        pipeline decide after a crash whether an intended batch landed
+        (``data/ingest.py`` reconciliation)."""
+        return int(self._next_ext)
+
+    @property
     def _ext_of(self) -> np.ndarray:
         return self._ext_buf[: self._ext_len]
 

@@ -26,6 +26,20 @@ Named points used by the suite (tests/test_runtime.py, tests/test_wal.py):
   ``wal_ack``       after a WAL record is durably on disk, before the engine
                     acknowledges the op to the caller (crash)
 
+Ingestion-pipeline worker sites (tests/test_ingest_pipeline.py; one per
+state-machine window in ``data/ingest.py``):
+
+  ``claim``         batch leased, nothing embedded — recovery is lease
+                    expiry + reclaim (crash)
+  ``embed``         records exist in worker memory only; the journal still
+                    says claimed — recovery re-embeds deterministically
+                    after the lease expires (crash or transient)
+  ``insert``        insert intent durable, engine untouched — recovery
+                    reverts the intent (id horizon short) (crash/transient)
+  ``ack``           batch past its WAL group-commit barrier but the job
+                    store never heard — recovery acks from the id horizon
+                    without re-inserting (exactly-once) (crash/transient)
+
 Queue overflow is not a fault point: it is the admission queue's designed
 backpressure behaviour, exercised naturally with a small ``max_queue``.
 """

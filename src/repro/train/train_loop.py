@@ -20,7 +20,7 @@ import jax
 import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager, load_checkpoint
-from repro.data.pipeline import TokenPipeline
+from repro.data.token_pipeline import TokenPipeline
 
 
 @dataclasses.dataclass

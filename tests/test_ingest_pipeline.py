@@ -1,0 +1,672 @@
+"""Ingestion pipeline: job state machine, leases, retries, crash recovery.
+
+Three layers of assurance, from fastest to strongest:
+
+  1. deterministic state-machine unit tests (FakeClock drives leases and
+     backoff — no sleeps, every transition and every illegal edge pinned);
+  2. crash-at-each-fault-site recovery differentials: a worker is killed at
+     ``claim``/``embed``/``insert``/``ack``, the *process* is recovered
+     (engine from its WAL, store from its journal), and the drained corpus
+     must match a fresh static build over the same documents — no lost and
+     no duplicated points (at-least-once below the ack horizon, exactly-once
+     above it);
+  3. a hypothesis property over random interleavings of worker crashes vs.
+     job progress, asserting the final corpus is permutation-identical to
+     the no-fault run.
+
+Answer comparisons are doc-id-canonicalized: pipeline insertion order is
+not the reference row order, so external ids are translated to document
+ids before comparing. Equal-diameter ties (several point sets at the same
+cost — common at diameter 0, a single point covering the whole query) are
+legitimately order-dependent, so doc-id sets are compared only at
+unambiguous ranks while the diameter list itself must match exactly.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.data.ingest import (
+    CLAIMED, DONE, EMBEDDED, FAILED, INSERTED, PENDING,
+    EngineSink, IngestPipeline, IngestWorker, IntentBusy, InvalidTransition,
+    JobStore, LeaseLost, ProjectionEmbedder, corpus_from_documents,
+    flickr_like_documents,
+)
+from repro.data.synthetic import random_queries
+from repro.serve.engine import NKSEngine
+from repro.serve.faults import FaultPlan, InjectedCrash, InjectedFault
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+D_RAW, D_OUT, U = 16, 6, 20
+SITES = ("claim", "embed", "insert", "ack")
+
+
+class FakeClock:
+    def __init__(self, t: float = 1000.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+def _docs(n, *, tenants=None, seed=1):
+    return flickr_like_documents(n, d_raw=D_RAW, u=U, t=3, seed=seed,
+                                 tenants=tenants)
+
+
+def _embedder(seed=2):
+    vocab = [f"tag{i:03d}" for i in range(U)]
+    return ProjectionEmbedder(D_OUT, vocab, d_raw=D_RAW, seed=seed)
+
+
+def _engine(ds, **kw):
+    kw.setdefault("compact_min", 10_000)
+    return NKSEngine(ds, m=2, n_scales=4, seed=0, **kw)
+
+
+def _store(path, clk, **kw):
+    kw.setdefault("lease_s", 10.0)
+    kw.setdefault("backoff_s", 0.5)
+    return JobStore(str(path), clock=clk, **kw)
+
+
+def _drive(worker, store, clk, *, limit=500):
+    """Step one worker until the store drains, advancing the fake clock
+    whenever no work is claimable (backoff / lease windows)."""
+    for _ in range(limit):
+        if store.drained():
+            return
+        if not worker.step():
+            clk.advance(5.0)
+    raise AssertionError(f"not drained after {limit} steps: "
+                         f"{store.counts()}")
+
+
+# ----------------------------------------------------- differential helpers
+def _cases(ref_ds, *, tenanted, seed=9):
+    """Query/filter cases: unfiltered global-id queries plus (on tenanted
+    corpora) tenant-scoped local-id queries with an attribute predicate."""
+    cases = [(q, None) for q in random_queries(ref_ds, 2, 8, seed=seed)]
+    if tenanted:
+        cases += [([0, 1], {"tenant": "a"}), ([1, 2], {"tenant": "a"}),
+                  ([0, 2], {"tenant": "b",
+                            "where": [["price", "<", 60.0]]})]
+    return cases
+
+
+def _canon_answers(engine, cases, ext2doc, *, k=2):
+    ext = np.asarray(engine._ext_of)
+    out = []
+    for q, flt in cases:
+        res = engine.query(q, k=k, tier="exact", filter=flt)
+        out.append([(float(c.diameter),
+                     tuple(sorted(ext2doc[int(ext[i])] for i in c.ids)))
+                    for c in res.candidates])
+    return out
+
+
+def _assert_equivalent(got, want):
+    """Exact-tier answers modulo legitimate equal-diameter ties: diameter
+    lists must be identical; doc-id sets must match at every rank whose
+    diameter is unique in the answer and strictly inside the top-k cut."""
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        da, db = [x[0] for x in a], [x[0] for x in b]
+        assert da == db, (da, db)
+        cnt = Counter(da)
+        cutoff = da[-1] if da else None
+        for (d1, ids1), (_, ids2) in zip(a, b):
+            if cnt[d1] == 1 and d1 != cutoff:
+                assert ids1 == ids2, (d1, ids1, ids2)
+
+
+def _assert_corpus_matches(engine, ext2doc, docs_by_id, emb, expected_ids):
+    """The no-lost-no-dup invariant plus per-row bitwise identity: every
+    expected document is in the engine exactly once, and its point row,
+    keyword set, attrs, and tenant are exactly what the embedder says."""
+    ext = [int(e) for e in np.asarray(engine._ext_of)]
+    assert len(ext) == len(set(ext)), "duplicate external ids"
+    got_docs = [ext2doc[e] for e in ext]
+    assert sorted(got_docs) == sorted(expected_ids)   # no lost, no dup
+    ds = engine.dataset
+    ns = ds.tenants
+    pts = np.asarray(ds.points)
+    for row, doc_id in enumerate(got_docs):
+        rec = emb.extract(docs_by_id[doc_id])
+        np.testing.assert_array_equal(pts[row], rec.point)
+        want_kws = (ns.resolve(rec.tenant, rec.keywords) if ns is not None
+                    else rec.keywords)
+        assert sorted(int(v) for v in ds.kw.row(row)) == sorted(want_kws)
+        if rec.attrs is not None:
+            for name, val in rec.attrs.items():
+                assert ds.attr_column(name)[row] == val
+        if ns is not None:
+            assert int(ds.tenant_ids[row]) == ns.id_of(rec.tenant)
+
+
+def _setting(docs, n_seed, emb):
+    """Split docs into a seed corpus (engine build) and a job stream, and
+    return the static reference built over *all* docs."""
+    seed_ds, seed_ids = corpus_from_documents(docs[:n_seed], emb)
+    ref_ds, ref_ids = corpus_from_documents(docs, emb)
+    return seed_ds, seed_ids, ref_ds, {i: d for i, d in enumerate(ref_ids)}
+
+
+# ------------------------------------------------------------ embedder layer
+def test_embedder_deterministic_and_validates():
+    docs, vocab = _docs(5, seed=4)
+    emb = _embedder()
+    r1, r2 = emb.extract(docs[0]), emb.extract(docs[0])
+    np.testing.assert_array_equal(r1.point, r2.point)   # bitwise
+    assert r1.keywords == r2.keywords and r1.point.dtype == np.float32
+    assert r1.keywords == sorted(set(r1.keywords))
+    with pytest.raises(ValueError, match="unknown tag"):
+        emb.extract({"doc_id": "x", "payload": docs[0]["payload"],
+                     "tags": ["not-a-tag"]})
+    with pytest.raises(ValueError, match="no tags"):
+        emb.extract({"doc_id": "x", "payload": docs[0]["payload"],
+                     "tags": []})
+    with pytest.raises(ValueError, match="payload"):
+        emb.extract({"doc_id": "x", "payload": [1.0, 2.0], "tags": ["tag001"]})
+
+
+def test_flickr_like_documents_and_static_corpus():
+    docs, vocab = _docs(40, tenants=("a", "b"), seed=3)
+    assert len(vocab) == U and len(docs) == 40
+    assert all(set(d) == {"doc_id", "payload", "tags", "attrs", "tenant"}
+               for d in docs)
+    assert {d["tenant"] for d in docs} <= {"a", "b"}
+    ds, doc_ids = corpus_from_documents(docs, _embedder())
+    assert ds.n == 40 and ds.dim == D_OUT
+    assert ds.n_keywords == 2 * U                 # private per-tenant slots
+    assert ds.tenants is not None and list(ds.tenants.names) == ["a", "b"]
+    assert set(doc_ids) == {d["doc_id"] for d in docs}
+    assert set(ds.attrs) == {"category", "price"}
+    # mixed tenanted/untenanted input is rejected
+    broken = [dict(docs[0]), dict(docs[1])]
+    del broken[0]["tenant"]
+    with pytest.raises(ValueError, match="mixed tenant"):
+        corpus_from_documents(broken, _embedder())
+
+
+# ------------------------------------------------------------- job store fsm
+def test_jobstore_lifecycle_happy_path(tmp_path):
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk)
+    docs, _ = _docs(5, seed=2)
+    ids = store.add(docs)
+    assert store.counts()[PENDING] == 5 and not store.drained()
+
+    jobs = store.claim("w0", limit=3)
+    assert [j.job_id for j in jobs] == ids[:3]
+    assert all(j.state == CLAIMED and j.attempts == 1 for j in jobs)
+    store.mark_embedded("w0", [j.job_id for j in jobs])
+    assert store.counts()[EMBEDDED] == 3
+
+    intent = store.record_intent("w0", [j.job_id for j in jobs],
+                                 first_ext=100)
+    assert store.counts()[INSERTED] == 3
+    store.ack_intent(intent, [100, 101, 102])
+    assert store.counts() == {PENDING: 2, CLAIMED: 0, EMBEDDED: 0,
+                              INSERTED: 0, DONE: 3, FAILED: 0}
+    assert store.open_intent() is None
+    assert store.ext_map() == {100 + i: docs[i]["doc_id"] for i in range(3)}
+    store.close()
+
+
+def test_jobstore_illegal_edges(tmp_path):
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk)
+    docs, _ = _docs(4, seed=2)
+    ids = store.add(docs)
+    jobs = store.claim("w0", limit=2)
+    jids = [j.job_id for j in jobs]
+
+    # wrong owner / wrong state => LeaseLost
+    with pytest.raises(LeaseLost):
+        store.mark_embedded("w1", jids)
+    with pytest.raises(LeaseLost):
+        store.record_intent("w0", jids, first_ext=0)   # still claimed
+    store.mark_embedded("w0", jids)
+    with pytest.raises(LeaseLost):
+        store.mark_embedded("w0", jids)                # already embedded
+
+    # the intent fence admits one batch at a time
+    i0 = store.record_intent("w0", jids, first_ext=7)
+    more = store.claim("w1", limit=2)
+    store.mark_embedded("w1", [j.job_id for j in more])
+    with pytest.raises(IntentBusy):
+        store.record_intent("w1", [j.job_id for j in more], first_ext=9)
+    with pytest.raises(InvalidTransition):
+        store.ack_intent(i0 + 5, [7, 8])               # not the open intent
+    with pytest.raises(InvalidTransition):
+        store.ack_intent(i0, [7])                      # wrong cardinality
+    store.ack_intent(i0, [7, 8])
+    with pytest.raises(InvalidTransition):
+        store.ack_intent(i0, [7, 8])                   # already resolved
+    # pending jobs are not releasable by a non-owner
+    with pytest.raises(LeaseLost):
+        store.release("w0", [ids[3]], error="nope")
+    store.close()
+
+
+def test_journal_replay_roundtrip(tmp_path):
+    clk = FakeClock()
+    path = tmp_path / "j.jsonl"
+    store = _store(path, clk, max_attempts=4)
+    docs, _ = _docs(6, seed=5)
+    store.add(docs)
+    jobs = store.claim("w0", limit=4)
+    store.mark_embedded("w0", [j.job_id for j in jobs[:3]])
+    store.release("w0", [jobs[3].job_id], error="transient")
+    intent = store.record_intent("w0", [j.job_id for j in jobs[:3]],
+                                 first_ext=50)
+    store.ack_intent(intent, [50, 51, 52])
+    jobs2 = store.claim("w1", limit=1)       # claims job 4 (pending, ready)
+    snap = {j.job_id: (j.state, j.attempts, j.worker, j.not_before, j.ext_id)
+            for j in store.jobs.values()}
+    counts, stats = store.counts(), dataclasses_dict(store.stats)
+
+    re = _store(path, clk, max_attempts=4)
+    assert {j.job_id: (j.state, j.attempts, j.worker, j.not_before, j.ext_id)
+            for j in re.jobs.values()} == snap
+    assert re.counts() == counts
+    assert dataclasses_dict(re.stats) == stats
+    assert re.open_intent() is None
+    # the reopened store keeps allocating fresh ids past the journal's
+    new = re.add([docs[0] | {"doc_id": "doc-new"}])
+    assert new[0] == max(snap) + 1
+    store.close()
+    re.close()
+    assert jobs2[0].state == CLAIMED
+
+
+def dataclasses_dict(dc):
+    import dataclasses
+    return dataclasses.asdict(dc)
+
+
+def test_journal_torn_tail_truncated(tmp_path):
+    clk = FakeClock()
+    path = tmp_path / "j.jsonl"
+    store = _store(path, clk)
+    docs, _ = _docs(3, seed=5)
+    store.add(docs)
+    store.claim("w0", limit=2)
+    store.close()
+    size = os.path.getsize(path)
+    with open(path, "ab") as f:
+        f.write(b'{"t": "claim", "ids": [2], "worker": "w1", "lease')
+    re = _store(path, clk)                   # torn record dropped
+    assert os.path.getsize(path) == size
+    assert re.counts()[CLAIMED] == 2 and re.counts()[PENDING] == 1
+    # a parse-clean tail without its newline is torn too
+    re.close()
+    with open(path, "rb+") as f:
+        f.seek(0, 2)
+        f.write(b'{"t": "release", "retry": [0], "failed": [],'
+                b' "error": "x", "reason": "error", "not_before": 0.0}')
+    re2 = _store(path, clk)
+    assert os.path.getsize(path) == size
+    assert re2.counts()[CLAIMED] == 2
+    re2.close()
+
+
+def test_lease_expiry_reclaim_and_lease_lost(tmp_path):
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk, lease_s=10.0, max_attempts=5)
+    docs, _ = _docs(4, seed=6)
+    store.add(docs)
+    dead = store.claim("w-dead", limit=4)
+    assert store.claim("w-live", limit=4) == []       # lease held
+    clk.advance(10.1)                                 # w-dead "died"
+    alive = store.claim("w-live", limit=4)
+    assert [j.job_id for j in alive] == [j.job_id for j in dead]
+    assert all(j.worker == "w-live" and j.attempts == 2 for j in alive)
+    assert store.stats.reclaims == 4
+    # the zombie's writes bounce: its lease is gone
+    with pytest.raises(LeaseLost):
+        store.mark_embedded("w-dead", [j.job_id for j in dead])
+    with pytest.raises(LeaseLost):
+        store.release("w-dead", [dead[0].job_id], error="late")
+    store.close()
+
+
+def test_retry_backoff_schedule_and_exhaustion(tmp_path):
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk, max_attempts=3, backoff_s=1.0)
+    docs, _ = _docs(1, seed=7)
+    store.add(docs)
+    last_ready = 0.0
+    for attempt in range(1, 4):
+        jobs = store.claim("w0", limit=1)
+        assert jobs and jobs[0].attempts == attempt
+        if attempt < 3:
+            store.release("w0", [0], error="flaky")
+            j = store.jobs[0]
+            assert j.state == PENDING
+            # exponential: now + 1.0 * 2^(attempts-1)
+            assert j.not_before == pytest.approx(
+                clk() + 1.0 * 2.0 ** (attempt - 1))
+            assert store.claim("w0", limit=1) == []   # backoff holds
+            assert j.not_before > last_ready
+            last_ready = j.not_before
+            clk.advance(100.0)
+        else:
+            store.release("w0", [0], error="flaky")
+    j = store.jobs[0]
+    assert j.state == FAILED and "exhausted" in j.error
+    assert store.stats.exhausted == 1 and store.drained()
+    assert store.claim("w0", limit=1) == []           # terminal
+    store.close()
+
+
+def test_poison_doc_fails_without_blocking_batch(tmp_path):
+    """A document the embedder rejects burns its own attempts to terminal
+    ``failed``; the rest of its batch lands normally."""
+    clk = FakeClock()
+    docs, _ = _docs(10, seed=8)
+    docs[4]["tags"] = ["never-a-tag"]
+    emb = _embedder()
+    seed_ds, seed_ids, _, _ = _setting(_docs(8, seed=9)[0], 8, emb)
+    store = _store(tmp_path / "j.jsonl", clk, max_attempts=3)
+    store.add(docs)
+    eng = _engine(seed_ds)
+    w = IngestWorker("w0", store, eng, emb, batch_docs=4)
+    _drive(w, store, clk)
+    counts = store.counts()
+    assert counts[DONE] == 9 and counts[FAILED] == 1
+    assert store.jobs[4].state == FAILED
+    assert "unknown tag" in store.jobs[4].error
+    assert w.stats.embed_failures == 3                # one per attempt
+    assert eng.dataset.n == seed_ds.n + 9
+    eng.close()
+
+
+# --------------------------------------------------- end-to-end differential
+def test_worker_end_to_end_differential(tmp_path):
+    """Pipeline-ingested engine answers filtered multi-tenant queries
+    equivalently to a fresh static engine over the same documents, the
+    corpus is row-for-row bitwise faithful to the embedder, and each batch
+    costs exactly one WAL fsync (the group-commit barrier)."""
+    docs, _ = _docs(80, tenants=("a", "b"), seed=1)
+    emb = _embedder()
+    seed_ds, seed_ids, ref_ds, ref_table = _setting(docs, 20, emb)
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk)
+    store.add(docs[20:])
+    eng = _engine(seed_ds)
+    eng.attach_wal(str(tmp_path / "wal"))
+    f0 = eng.wal_stats.fsyncs
+    w = IngestWorker("w0", store, eng, emb, batch_docs=8)
+    _drive(w, store, clk)
+    assert store.counts()[DONE] == 60
+    assert eng.wal_stats.fsyncs - f0 == w.stats.batches_inserted
+
+    ext2doc = {i: d for i, d in enumerate(seed_ids)}
+    ext2doc.update(store.ext_map())
+    docs_by_id = {d["doc_id"]: d for d in docs}
+    _assert_corpus_matches(eng, ext2doc, docs_by_id, emb,
+                           [d["doc_id"] for d in docs])
+    ref = _engine(ref_ds)
+    cases = _cases(ref_ds, tenanted=True)
+    _assert_equivalent(_canon_answers(eng, cases, ext2doc),
+                       _canon_answers(ref, cases, ref_table))
+    eng.close()
+    store.close()
+
+
+def test_transient_faults_reconcile_in_process(tmp_path):
+    """An ``InjectedFault`` (retryable error, not a death) around the insert
+    window resolves through the same horizon reconciliation as recovery:
+    before the engine touched the batch => reverted + retried; after the
+    barrier => acked exactly-once, no duplicate points."""
+    docs, _ = _docs(30, seed=11)
+    emb = _embedder()
+    seed_ds, seed_ids, ref_ds, ref_table = _setting(docs, 10, emb)
+    for site, field in (("insert", "reconciled_reverted"),
+                        ("ack", "reconciled_applied")):
+        clk = FakeClock()
+        store = _store(tmp_path / f"j-{site}.jsonl", clk, max_attempts=5)
+        store.add(docs[10:])
+        eng = _engine(seed_ds)
+        faults = FaultPlan(transient={site: 2})
+        w = IngestWorker("w0", store, eng, emb, batch_docs=5, faults=faults)
+        _drive(w, store, clk)
+        assert faults.fired[site] == 1
+        assert getattr(w.stats, field) == 1
+        assert store.counts()[DONE] == 20 and store.counts()[FAILED] == 0
+        assert eng.dataset.n == ref_ds.n              # no lost, no dup
+        ext2doc = {i: d for i, d in enumerate(seed_ids)}
+        ext2doc.update(store.ext_map())
+        _assert_corpus_matches(eng, ext2doc, {d["doc_id"]: d for d in docs},
+                               emb, [d["doc_id"] for d in docs])
+        eng.close()
+        store.close()
+
+
+EXPECTED_RECOVERY = {"claim": None, "embed": None,
+                     "insert": "reverted", "ack": "applied"}
+
+
+@pytest.mark.parametrize("site", SITES)
+def test_crash_site_recovery_differential(tmp_path, site):
+    """Kill the worker at each crash site mid-run, then recover the whole
+    process: engine from its WAL, job store from its journal, pipeline
+    startup reconciliation for the open intent. The drained corpus must be
+    indistinguishable from a no-fault build — at-least-once below the ack
+    horizon, exactly-once above it."""
+    docs, _ = _docs(70, tenants=("a", "b"), seed=13)
+    emb = _embedder()
+    seed_ds, seed_ids, ref_ds, ref_table = _setting(docs, 22, emb)
+    clk = FakeClock()
+    jpath, wroot = str(tmp_path / "j.jsonl"), str(tmp_path / "wal")
+    store = _store(jpath, clk, lease_s=10.0)
+    store.add(docs[22:])
+    eng = _engine(seed_ds)
+    eng.attach_wal(wroot)
+
+    faults = FaultPlan(crash={site: 2})    # survive batch 1, die in batch 2
+    w = IngestWorker("w0", store, eng, emb, batch_docs=8, faults=faults)
+    with pytest.raises(InjectedCrash):
+        for _ in range(100):
+            if not w.step():
+                clk.advance(1.0)
+    assert faults.fired[site] == 1
+    # The dead worker cleaned up nothing: its claim (and for insert/ack its
+    # open intent) is still on the books. Simulated process death: abandon
+    # both objects un-closed and rebuild from disk.
+    n_before = int(eng.dataset.n)
+
+    eng2 = NKSEngine.recover(wroot)
+    assert int(eng2.dataset.n) == n_before            # WAL lost nothing
+    store2 = _store(jpath, clk, lease_s=10.0)
+    pipe = IngestPipeline(store2, eng2, emb, workers=1, batch_docs=8)
+    assert pipe.recover() == EXPECTED_RECOVERY[site]
+    assert pipe.recover() is None                     # idempotent
+    if site == "ack":
+        # the crashed batch was past its barrier: acked from the horizon,
+        # not re-inserted
+        assert store2.counts()[DONE] >= 16
+    clk.advance(30.0)                                 # expire dead leases
+    _drive(pipe.workers[0], store2, clk)
+
+    counts = store2.counts()
+    assert counts[FAILED] == 0 and counts[DONE] == 48
+    ext2doc = {i: d for i, d in enumerate(seed_ids)}
+    ext2doc.update(store2.ext_map())
+    docs_by_id = {d["doc_id"]: d for d in docs}
+    _assert_corpus_matches(eng2, ext2doc, docs_by_id, emb,
+                           [d["doc_id"] for d in docs])
+    ref = _engine(ref_ds)
+    cases = _cases(ref_ds, tenanted=True)
+    _assert_equivalent(_canon_answers(eng2, cases, ext2doc),
+                       _canon_answers(ref, cases, ref_table))
+    # ... and the *recovered* state itself recovers: one more round-trip
+    eng2.close()
+    eng3 = NKSEngine.recover(wroot)
+    _assert_equivalent(_canon_answers(eng3, cases, ext2doc),
+                       _canon_answers(ref, cases, ref_table))
+    eng3.close()
+    store2.close()
+
+
+def test_threaded_pipeline_with_fault_plan(tmp_path):
+    """Six workers race the queue while a shared fault plan kills four of
+    them, one per crash site, mid-run (real clock, short leases). The
+    survivors drain the store and the corpus still matches the static
+    reference exactly."""
+    docs, _ = _docs(90, tenants=("a", "b"), seed=17)
+    emb = _embedder()
+    seed_ds, seed_ids, ref_ds, ref_table = _setting(docs, 26, emb)
+    store = JobStore(str(tmp_path / "j.jsonl"), lease_s=0.3,
+                     backoff_s=0.01, max_attempts=10)
+    store.add(docs[26:])
+    eng = _engine(seed_ds)
+    eng.attach_wal(str(tmp_path / "wal"))
+    faults = FaultPlan(crash={"claim": 3, "embed": 5, "insert": 7, "ack": 9})
+    pipe = IngestPipeline(store, eng, emb, workers=6, batch_docs=6,
+                          faults=faults)
+    report = pipe.run(timeout_s=60.0)
+    assert report["drained"], report
+    assert sorted(faults.fired) == sorted(SITES)      # all four deaths fired
+    assert len(report["dead_workers"]) == 4
+    assert report["docs_failed"] == 0
+    assert report["docs_done"] == 64
+    assert report["docs_per_s"] > 0
+
+    ext2doc = {i: d for i, d in enumerate(seed_ids)}
+    ext2doc.update(store.ext_map())
+    _assert_corpus_matches(eng, ext2doc, {d["doc_id"]: d for d in docs},
+                           emb, [d["doc_id"] for d in docs])
+    ref = _engine(ref_ds)
+    cases = _cases(ref_ds, tenanted=True)
+    _assert_equivalent(_canon_answers(eng, cases, ext2doc),
+                       _canon_answers(ref, cases, ref_table))
+    eng.close()
+    store.close()
+
+
+def test_runtime_sink_coalesces_with_admission_queue(tmp_path):
+    """Targeting the serving runtime instead of a bare engine: batches ride
+    the admission queue as insert ops and coalesce into grouped ingest runs
+    exactly like launcher ingests, and the drained corpus matches."""
+    from repro.serve.runtime import RuntimeConfig, ServingRuntime
+
+    docs, _ = _docs(50, seed=19)
+    emb = _embedder()
+    seed_ds, seed_ids, ref_ds, ref_table = _setting(docs, 14, emb)
+    store = JobStore(str(tmp_path / "j.jsonl"), lease_s=5.0, backoff_s=0.01)
+    store.add(docs[14:])
+    eng = _engine(seed_ds)
+    eng.attach_wal(str(tmp_path / "wal"))
+    with ServingRuntime(eng, RuntimeConfig(batch_window_s=0.002)) as rt:
+        pipe = IngestPipeline(store, rt, emb, workers=3, batch_docs=6)
+        report = pipe.run(timeout_s=60.0)
+        assert report["drained"], report
+        assert rt.stats.ingest_ops >= 6               # went through the queue
+    assert store.counts()[DONE] == 36
+    ext2doc = {i: d for i, d in enumerate(seed_ids)}
+    ext2doc.update(store.ext_map())
+    _assert_corpus_matches(eng, ext2doc, {d["doc_id"]: d for d in docs},
+                           emb, [d["doc_id"] for d in docs])
+    ref = _engine(ref_ds)
+    cases = _cases(ref_ds, tenanted=False)
+    _assert_equivalent(_canon_answers(eng, cases, ext2doc),
+                       _canon_answers(ref, cases, ref_table))
+    eng.close()
+    store.close()
+
+
+# ----------------------------------------------------- interleaving property
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=25)
+    @given(st.data())
+    def test_random_crash_interleavings_converge(data):
+        """Random interleavings of worker progress, clock advances, and
+        crashes at random sites: the store always drains and the final
+        corpus is permutation-identical (per-document bitwise) to the
+        no-fault build. Workers are threads of one process here, so a death
+        leaves its lease and intent on the books for *survivors* to reap —
+        the in-process mirror of the recovery differential above."""
+        n_docs = data.draw(st.integers(8, 24), label="n_docs")
+        docs, _ = _docs(n_docs + 6, tenants=("a", "b"),
+                        seed=data.draw(st.integers(0, 50), label="seed"))
+        emb = _embedder()
+        seed_ds, seed_ids, _, _ = _setting(docs, 6, emb)
+        crashes = data.draw(
+            st.lists(st.sampled_from(SITES), max_size=4), label="crashes")
+
+        root = tempfile.mkdtemp(prefix="ingest-prop-")
+        clk = FakeClock()
+        store = _store(os.path.join(root, "j.jsonl"), clk, lease_s=10.0,
+                       backoff_s=0.5, max_attempts=50)
+        store.add(docs[6:])
+        eng = _engine(seed_ds)                        # volatile: no WAL
+        try:
+            plans = [FaultPlan(crash={site: data.draw(
+                st.integers(1, 3), label=f"hit-{i}")})
+                for i, site in enumerate(crashes)]
+            workers, spawned = [], 0
+
+            def spawn():
+                nonlocal spawned
+                plan = plans[spawned] if spawned < len(plans) else None
+                w = IngestWorker(f"w{spawned}", store, eng, emb,
+                                 batch_docs=data.draw(
+                                     st.integers(2, 7),
+                                     label=f"batch-{spawned}"),
+                                 faults=plan or FaultPlan())
+                spawned += 1
+                workers.append(w)
+
+            spawn()
+            for _ in range(60 * (n_docs + 4)):
+                if store.drained():
+                    break
+                act = data.draw(st.integers(0, 6))
+                if act == 0 and len(workers) < 4:
+                    spawn()
+                    continue
+                if act == 1:
+                    clk.advance(data.draw(
+                        st.sampled_from([0.5, 5.0, 20.0])))
+                    continue
+                if not workers:
+                    spawn()
+                w = workers[data.draw(st.integers(0, len(workers) - 1))]
+                try:
+                    if not w.step():
+                        clk.advance(5.0)
+                except InjectedCrash:
+                    workers.remove(w)                 # thread died mid-batch
+            else:
+                # drain deterministically with a fresh clean worker
+                w = IngestWorker("w-final", store, eng, emb, batch_docs=4)
+                _drive(w, store, clk, limit=80 * (n_docs + 4))
+            if not store.drained():
+                w = IngestWorker("w-final", store, eng, emb, batch_docs=4)
+                _drive(w, store, clk, limit=80 * (n_docs + 4))
+
+            assert store.counts()[FAILED] == 0
+            ext2doc = {i: d for i, d in enumerate(seed_ids)}
+            ext2doc.update(store.ext_map())
+            _assert_corpus_matches(
+                eng, ext2doc, {d["doc_id"]: d for d in docs}, emb,
+                [d["doc_id"] for d in docs])
+        finally:
+            eng.close()
+            store.close()

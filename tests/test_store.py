@@ -236,6 +236,60 @@ def test_zone_prune_bit_identical_with_counters(tmp_path):
     assert pruned_total > 0
 
 
+def test_zone_prune_erosion_under_longlived_delta(tmp_path):
+    """Regression pin for the documented zone-map erosion mode: a bucket
+    holding *delta* members cannot be zone-rejected (its synopsis describes
+    only the bulk generation), so a long-lived delta erodes pruning — the
+    counters sag while answers stay bit-identical — and compaction rebuilds
+    the synopses, restoring the prunes. Pins the behavior until incremental
+    synopses land (ROADMAP)."""
+    ds = _spatial_corpus()
+    synop = NKSEngine(ds, synopsis=True, auto_compact=False, **BUILD)
+    plain = NKSEngine(ds, synopsis=False, auto_compact=False, **BUILD)
+    queries = random_queries(ds, 2, 6, seed=2)
+    flt = {"where": [["price", "<", 25.0]]}
+
+    def pruned(eng):
+        total = 0
+        for tier in ("exact", "approx"):
+            eng.query_batch(queries, k=2, tier=tier, filter=flt)
+            total += eng.last_batch_stats.buckets_pruned_zonemap
+        return total
+
+    p_clean = pruned(synop)
+    assert p_clean > 0                       # zone maps prune a clean corpus
+    assert pruned(plain) == 0
+
+    # Insert copies of points from the *ineligible* region (price >= 25 ⇔
+    # coordinate 0 >= 2500): they land in exactly the buckets the zone maps
+    # were rejecting, which must now fall through.
+    rng = np.random.default_rng(8)
+    hot = np.flatnonzero(ds.points[:, 0] >= 2500.0)
+    picks = rng.choice(hot, size=60, replace=False)
+    pts = ds.points[picks]
+    kws = [sorted(int(v) for v in ds.keywords_of(int(i))) for i in picks]
+    attrs = {"price": (pts[:, 0] / 100.0).astype(np.float64)}
+    for eng in (synop, plain):
+        eng.insert(pts, kws, attrs=attrs)
+
+    p_delta = pruned(synop)
+    assert p_delta < p_clean                 # erosion: rejected buckets now
+    assert synop.delta_points == 60          # hold delta members
+    # ... but it is a pure work-skip delta: answers are still bit-identical
+    # to the synopsis-off twin that applied the same ops.
+    assert _answers(synop, queries, filter=flt) == \
+        _answers(plain, queries, filter=flt)
+
+    # Compaction folds the delta into a fresh generation and rebuilds the
+    # synopses: pruning recovers, parity holds.
+    assert synop.compact() and plain.compact()
+    assert synop.delta_points == 0
+    p_compacted = pruned(synop)
+    assert p_compacted > p_delta
+    assert _answers(synop, queries, filter=flt) == \
+        _answers(plain, queries, filter=flt)
+
+
 def _clustered_corpus(n_centers=30, per=8, jitter=2.0, spread=200.0, d=4,
                       u=8, seed=0):
     """Tight clusters far apart: fine-scale buckets isolate a cluster, so

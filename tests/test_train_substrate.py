@@ -8,7 +8,7 @@ import pytest
 
 from repro.ckpt.checkpoint import (CheckpointManager, find_latest,
                                    load_checkpoint, save_checkpoint)
-from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.token_pipeline import PipelineConfig, TokenPipeline
 from repro.train.grad_compress import ef_compress, init_error_buf
 from repro.train.optimizer import (OptimizerConfig, adamw_update,
                                    init_opt_state, lr_at)

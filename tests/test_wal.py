@@ -325,6 +325,61 @@ def test_recovery_preserves_attrs_and_tenants(tmp_path):
     rec.close()
 
 
+def test_group_commit_crash_at_barrier_attrs_tenants(tmp_path):
+    """The crash-at-barrier window with *attributed, tenanted* batches: the
+    whole group is durable-but-unacknowledged, and recovery must replay not
+    just the points but the attribute columns and tenant ids bit-identically
+    — filtered tenant-scoped answers and the raw recovered columns both
+    match a reference engine that applied the same ops."""
+    from repro.data.synthetic import attach_attrs, synthetic_tenants
+    ds = attach_attrs(synthetic_tenants({"a": 70, "b": 50}, d=5, u=15, t=2,
+                                        seed=6), seed=6)
+    rng = np.random.default_rng(21)
+    batches = []
+    for tenant in ("a", "b", "a"):
+        pts = rng.standard_normal((6, ds.dim)).astype(np.float32)
+        kws = [ds.tenants.resolve(tenant, sorted(rng.choice(15, 2,
+                                                            replace=False)))
+               for _ in range(6)]
+        attrs = {"price": rng.uniform(0, 100, 6),
+                 "category": rng.integers(0, 5, 6)}
+        batches.append((tenant, pts, kws, attrs))
+
+    faults = FaultPlan(crash={"wal_ack": 1})
+    eng = NKSEngine(ds, seed=4, compact_min=10_000)
+    eng.attach_wal(str(tmp_path / "wal"), faults=faults)
+    with pytest.raises(InjectedCrash):
+        with eng.ingest_group():
+            for tenant, pts, kws, attrs in batches:
+                eng.insert(pts, kws, attrs=attrs, tenant=tenant)
+    assert faults.fired["wal_ack"] == 1
+    assert eng.wal_stats.fsyncs == 1           # one barrier for the group
+
+    rec = NKSEngine.recover(str(tmp_path / "wal"))
+    ref = NKSEngine(ds, seed=4, compact_min=10_000)
+    for tenant, pts, kws, attrs in batches:
+        ref.insert(pts, kws, attrs=attrs, tenant=tenant)
+    assert rec.ingest.replayed_ops == len(batches)
+
+    # raw recovered state is bit-identical: points, columns, tenant ids
+    np.testing.assert_array_equal(rec.dataset.points, ref.dataset.points)
+    for col in ("price", "category"):
+        np.testing.assert_array_equal(rec.dataset.attr_column(col),
+                                      ref.dataset.attr_column(col))
+    np.testing.assert_array_equal(rec.dataset.tenant_ids,
+                                  ref.dataset.tenant_ids)
+
+    # ... and so are tenant-scoped filtered answers over the replayed delta
+    for flt in ({"tenant": "a", "where": [["price", "<", 60.0]]},
+                {"tenant": "b"},
+                {"tenant": "a", "where": [["category", "in", [0, 1, 2]]]}):
+        got = rec.query([0, 1], k=3, tier="exact", filter=flt)
+        want = ref.query([0, 1], k=3, tier="exact", filter=flt)
+        assert [c.key() for c in got.candidates] == \
+            [c.key() for c in want.candidates]
+    rec.close()
+
+
 def test_attach_wal_requires_clean_start(tmp_path):
     ds = _corpus(n=100)
     eng = NKSEngine(ds, seed=1)
