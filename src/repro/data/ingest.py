@@ -26,7 +26,8 @@ Job lifecycle (every transition is journaled, fsync'd, and replayable)::
     at ``now + backoff_s * 2^(attempts-1)``.
   * **insert** is exactly-once via a durable *intent*: before touching the
     engine the worker journals an intent carrying the engine's
-    ``next_external_id`` horizon, inserts the whole batch as one op inside
+    ``next_external_id`` horizon (sampled inside the store lock, atomically
+    with the fence check), inserts the whole batch as one op inside
     ``NKSEngine.ingest_group()`` (one WAL fsync barrier for the batch), and
     acks only after the barrier. The open intent doubles as the insert
     mutex — at most one batch is ever in flight, so recovery can decide
@@ -102,6 +103,16 @@ class IntentBusy(RuntimeError):
                          f"({'expired' if expired else 'live'})")
         self.intent_id = intent_id
         self.expired = expired
+
+
+class SinkIndeterminate(RuntimeError):
+    """The sink cannot say whether the batch landed (the runtime crashed
+    mid-run, or its ticket never reached a terminal status). The worker must
+    NOT resolve the intent from the current horizon — the op may still land
+    later, and releasing the jobs now would retry a batch that also lands,
+    duplicating it. Leave the intent open; lease expiry (or
+    ``IngestPipeline.recover`` after a restart) reconciles from a horizon
+    that post-dates the op's last possible execution instant."""
 
 
 def flickr_like_documents(n: int, d_raw: int = 32, u: int = 30, t: int = 3, *,
@@ -404,10 +415,14 @@ class JobStore:
                 j.state = EMBEDDED
                 j.lease_until = float(rec["lease_until"])
         elif t == "release":
-            for jid in rec["retry"]:
+            for entry in rec["retry"]:
+                # per-job [jid, not_before] pairs; bare ids (legacy records)
+                # fall back to the record-level value
+                jid, nb = entry if isinstance(entry, list) \
+                    else (entry, rec["not_before"])
                 j = self.jobs[jid]
                 j.state, j.worker = PENDING, None
-                j.not_before = float(rec["not_before"])
+                j.not_before = float(nb)
                 j.error = rec.get("error")
             for jid in rec["failed"]:
                 j = self.jobs[jid]
@@ -424,7 +439,9 @@ class JobStore:
                                   first_ext=int(rec["first_ext"]),
                                   lease_until=float(rec["lease_until"]))
             for jid in self._intent.job_ids:
-                self.jobs[jid].state = INSERTED
+                j = self.jobs[jid]
+                j.state = INSERTED
+                j.lease_until = self._intent.lease_until
             self._next_intent = max(self._next_intent, iid + 1)
             self.stats.intents += 1
         elif t == "ack":
@@ -557,11 +574,9 @@ class JobStore:
                 j.not_before = now if immediate else \
                     now + self.backoff_s * (2.0 ** max(j.attempts - 1, 0))
                 retry.append(j.job_id)
-        not_before = max((self.jobs[i].not_before for i in retry),
-                        default=now)
-        self._log({"t": "release", "retry": retry, "failed": failed,
-                   "error": error, "reason": reason,
-                   "not_before": not_before})
+        self._log({"t": "release",
+                   "retry": [[i, self.jobs[i].not_before] for i in retry],
+                   "failed": failed, "error": error, "reason": reason})
         if reason == "lease":
             self.stats.reclaims += len(jobs)
         self.stats.retries += len(retry)
@@ -573,21 +588,37 @@ class JobStore:
             return self._intent
 
     def record_intent(self, worker: str, job_ids: Sequence[int], *,
-                      first_ext: int) -> int:
+                      horizon) -> int:
         """embedded -> inserted, fenced: raises :class:`IntentBusy` while
         another intent is open (live or expired — an expired one must be
         explicitly resolved via ack/release first, because resolving it
-        needs the *engine's* id horizon, which the store cannot see)."""
+        needs the *engine's* id horizon, which the store cannot see).
+
+        ``horizon`` is the engine's ``next_external_id`` — pass the sink
+        (anything with a ``next_external_id`` property) or a callable, NOT a
+        pre-read integer: the value is sampled *inside* the store lock,
+        after the fence check, so no other batch can complete an
+        intent->insert->ack cycle between the read and the fence. A stale
+        pre-read horizon would let reconciliation mistake the other batch's
+        ids for this one's and ack a batch that never landed. (A plain int
+        is still accepted for single-threaded unit tests.)"""
         with self._lock:
             if self._intent is not None:
                 raise IntentBusy(self._intent.intent_id,
                                  self._intent.lease_until <= self.clock())
             jobs = self._owned(worker, job_ids, (EMBEDDED,))
+            if hasattr(horizon, "next_external_id"):
+                first_ext = int(horizon.next_external_id)
+            elif callable(horizon):
+                first_ext = int(horizon())
+            else:
+                first_ext = int(horizon)
             iid = self._next_intent
             self._next_intent += 1
             lease_until = self.clock() + self.lease_s
             for j in jobs:
                 self._transition(j, INSERTED)
+                j.lease_until = lease_until
             self._intent = Intent(intent_id=iid, worker=worker,
                                   job_ids=[j.job_id for j in jobs],
                                   first_ext=int(first_ext),
@@ -694,12 +725,26 @@ class EngineSink:
 class RuntimeSink:
     """Serving-runtime target: batches ride the admission queue as insert
     ops, so pipeline ingest coalesces with launcher ingests into shared WAL
-    group commits (the runtime acks only after the run's barrier). A
-    non-ok response raises — the worker's retry/reconcile path takes over."""
+    group commits (the runtime acks only after the run's barrier).
 
-    def __init__(self, runtime, *, timeout_s: float = 30.0):
+    ``insert`` never abandons an op that could still execute: the op is
+    submitted with ``timeout_s`` as its admission deadline and the ticket is
+    awaited to a *terminal* status (executed, expired-before-dispatch,
+    rejected, or crashed). Giving up on a still-queued op would break
+    exactly-once — the worker would reconcile against an unmoved horizon,
+    release the intent and retry, and then the original op would land too,
+    inserting the batch twice. Terminal non-ok statuses split two ways:
+    ``timeout``/``rejected``/``error`` mean the op provably never mutated
+    the engine (a plain raise — the worker's reconcile path reverts and
+    retries), while ``crashed`` (or a ticket the runtime never resolved
+    within the grace window) raises :class:`SinkIndeterminate` — the op's
+    durability is unknowable here, so the intent must stay open."""
+
+    def __init__(self, runtime, *, timeout_s: float = 30.0,
+                 grace_s: float = 30.0):
         self.runtime = runtime
         self.timeout_s = float(timeout_s)
+        self.grace_s = float(grace_s)
 
     @property
     def next_external_id(self) -> int:
@@ -712,8 +757,22 @@ class RuntimeSink:
     def insert(self, points, keywords, attrs, tenant) -> list[int]:
         ticket = self.runtime.submit({"op": "insert", "points": points,
                                       "keywords": keywords, "attrs": attrs,
-                                      "tenant": tenant})
-        resp = ticket.result(timeout=self.timeout_s)
+                                      "tenant": tenant},
+                                     deadline_s=self.timeout_s)
+        # The admission deadline bounds the queued wait (the runtime expires
+        # an undispatched op with status "timeout"), so a terminal status
+        # normally arrives within timeout_s plus one dispatch. The grace
+        # backstop only trips on a wedged runtime — and then the op's fate
+        # is genuinely unknowable, which is exactly what SinkIndeterminate
+        # tells the worker.
+        try:
+            resp = ticket.result(timeout=self.timeout_s + self.grace_s)
+        except TimeoutError:
+            raise SinkIndeterminate(
+                f"insert ticket unresolved after "
+                f"{self.timeout_s + self.grace_s:.1f}s") from None
+        if resp.status == "crashed":
+            raise SinkIndeterminate(f"runtime crashed mid-run: {resp.error}")
         if resp.status != "ok":
             raise RuntimeError(f"runtime insert {resp.status}: {resp.error}")
         return [int(i) for i in resp.payload["ids"]]
@@ -755,6 +814,7 @@ class WorkerStats:
     docs_inserted: int = 0
     embed_failures: int = 0
     transient_faults: int = 0
+    sink_indeterminate: int = 0
     intent_busy: int = 0
     lease_lost: int = 0
     reconciled_applied: int = 0
@@ -792,10 +852,30 @@ class IngestWorker:
         a dead fence-holder's lease can expire)."""
         self.stats.steps += 1
         if self._staged is None and not self._claim_and_embed():
-            return False
+            return self._reconcile_expired_intent()
         if self._staged is None:
             return True                 # progressed without staging a batch
         return self._insert_staged()
+
+    def _reconcile_expired_intent(self) -> bool:
+        """With nothing claimable and nothing staged, an *expired* open
+        intent may still need resolving — a dead fence-holder's, or this
+        worker's own after a :class:`SinkIndeterminate` on the final batch.
+        Without this the store could never drain: the intent's jobs are
+        neither terminal nor claimable."""
+        it = self.store.open_intent()
+        if it is None or it.lease_until > self.clock():
+            return False
+        try:
+            outcome = reconcile_intent(self.store, self.sink, it,
+                                       error="intent lease expired")
+        except InvalidTransition:
+            return True                 # another worker resolved it first
+        if outcome == "applied":
+            self.stats.reconciled_applied += 1
+        else:
+            self.stats.reconciled_reverted += 1
+        return True
 
     def _claim_and_embed(self) -> bool:
         jobs = self.store.claim(self.name, limit=self.batch_docs)
@@ -863,9 +943,11 @@ class IngestWorker:
             else:
                 self.stats.reconciled_reverted += 1
         try:
+            # The horizon is sampled by the store inside its lock, after the
+            # fence check — atomic with the intent, so another batch's full
+            # intent->insert->ack cycle cannot slip between read and fence.
             intent = store.record_intent(
-                self.name, [j.job_id for j in jobs],
-                first_ext=self.sink.next_external_id)
+                self.name, [j.job_id for j in jobs], horizon=self.sink)
         except IntentBusy:              # lost the fence race; stay staged
             self.stats.intent_busy += 1
             return False
@@ -884,6 +966,16 @@ class IngestWorker:
             self.faults.check("ack")
         except InjectedCrash:
             raise                       # dead worker: leave the intent open
+        except SinkIndeterminate:
+            # The sink lost track of the batch (runtime crashed mid-run, or
+            # its ticket never went terminal). Reconciling now against the
+            # current horizon could release a batch that still lands —
+            # duplicating it — so behave like a dead worker: leave the
+            # intent open and let lease expiry (or pipeline recovery)
+            # reconcile once the op can no longer be in flight.
+            self.stats.sink_indeterminate += 1
+            self._staged = None
+            return True
         except Exception as e:
             # Transient failure somewhere around the insert: decide from
             # the horizon whether it actually landed, exactly like a

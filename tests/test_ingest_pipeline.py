@@ -33,8 +33,8 @@ import pytest
 from repro.data.ingest import (
     CLAIMED, DONE, EMBEDDED, FAILED, INSERTED, PENDING,
     EngineSink, IngestPipeline, IngestWorker, IntentBusy, InvalidTransition,
-    JobStore, LeaseLost, ProjectionEmbedder, corpus_from_documents,
-    flickr_like_documents,
+    JobStore, LeaseLost, ProjectionEmbedder, RuntimeSink, SinkIndeterminate,
+    corpus_from_documents, flickr_like_documents,
 )
 from repro.data.synthetic import random_queries
 from repro.serve.engine import NKSEngine
@@ -216,7 +216,7 @@ def test_jobstore_lifecycle_happy_path(tmp_path):
     assert store.counts()[EMBEDDED] == 3
 
     intent = store.record_intent("w0", [j.job_id for j in jobs],
-                                 first_ext=100)
+                                 horizon=100)
     assert store.counts()[INSERTED] == 3
     store.ack_intent(intent, [100, 101, 102])
     assert store.counts() == {PENDING: 2, CLAIMED: 0, EMBEDDED: 0,
@@ -238,17 +238,17 @@ def test_jobstore_illegal_edges(tmp_path):
     with pytest.raises(LeaseLost):
         store.mark_embedded("w1", jids)
     with pytest.raises(LeaseLost):
-        store.record_intent("w0", jids, first_ext=0)   # still claimed
+        store.record_intent("w0", jids, horizon=0)     # still claimed
     store.mark_embedded("w0", jids)
     with pytest.raises(LeaseLost):
         store.mark_embedded("w0", jids)                # already embedded
 
     # the intent fence admits one batch at a time
-    i0 = store.record_intent("w0", jids, first_ext=7)
+    i0 = store.record_intent("w0", jids, horizon=7)
     more = store.claim("w1", limit=2)
     store.mark_embedded("w1", [j.job_id for j in more])
     with pytest.raises(IntentBusy):
-        store.record_intent("w1", [j.job_id for j in more], first_ext=9)
+        store.record_intent("w1", [j.job_id for j in more], horizon=9)
     with pytest.raises(InvalidTransition):
         store.ack_intent(i0 + 5, [7, 8])               # not the open intent
     with pytest.raises(InvalidTransition):
@@ -272,15 +272,17 @@ def test_journal_replay_roundtrip(tmp_path):
     store.mark_embedded("w0", [j.job_id for j in jobs[:3]])
     store.release("w0", [jobs[3].job_id], error="transient")
     intent = store.record_intent("w0", [j.job_id for j in jobs[:3]],
-                                 first_ext=50)
+                                 horizon=50)
     store.ack_intent(intent, [50, 51, 52])
     jobs2 = store.claim("w1", limit=1)       # claims job 4 (pending, ready)
-    snap = {j.job_id: (j.state, j.attempts, j.worker, j.not_before, j.ext_id)
+    snap = {j.job_id: (j.state, j.attempts, j.worker, j.not_before,
+                       j.lease_until, j.ext_id)
             for j in store.jobs.values()}
     counts, stats = store.counts(), dataclasses_dict(store.stats)
 
     re = _store(path, clk, max_attempts=4)
-    assert {j.job_id: (j.state, j.attempts, j.worker, j.not_before, j.ext_id)
+    assert {j.job_id: (j.state, j.attempts, j.worker, j.not_before,
+                       j.lease_until, j.ext_id)
             for j in re.jobs.values()} == snap
     assert re.counts() == counts
     assert dataclasses_dict(re.stats) == stats
@@ -322,6 +324,99 @@ def test_journal_torn_tail_truncated(tmp_path):
     assert os.path.getsize(path) == size
     assert re2.counts()[CLAIMED] == 2
     re2.close()
+
+
+def test_release_replay_preserves_per_job_backoff(tmp_path):
+    """One release record covering jobs with different attempt counts must
+    replay each job's own backoff instant, not a shared maximum — the
+    reopened store's retry schedule is identical to the one that wrote the
+    journal."""
+    clk = FakeClock()
+    path = tmp_path / "j.jsonl"
+    store = _store(path, clk, backoff_s=1.0, max_attempts=10)
+    docs, _ = _docs(2, seed=21)
+    store.add(docs)
+    store.claim("w0", limit=1)                 # job 0, attempt 1
+    store.release("w0", [0], error="flaky")
+    clk.advance(100.0)
+    jobs = store.claim("w0", limit=2)          # job 0 attempt 2, job 1 attempt 1
+    assert [j.attempts for j in jobs] == [2, 1]
+    store.release("w0", [0, 1], error="flaky")  # one record, two backoffs
+    nb = {j.job_id: j.not_before for j in store.jobs.values()}
+    assert nb[0] == pytest.approx(clk() + 2.0)  # 1.0 * 2^(2-1)
+    assert nb[1] == pytest.approx(clk() + 1.0)  # 1.0 * 2^(1-1)
+
+    re = _store(path, clk, backoff_s=1.0, max_attempts=10)
+    assert {j.job_id: j.not_before for j in re.jobs.values()} == nb
+    store.close()
+    re.close()
+
+
+def test_record_intent_samples_horizon_under_the_fence(tmp_path):
+    """The insert horizon is read inside the store lock, after the fence
+    check — a concurrent batch can no longer complete a full
+    intent->insert->ack cycle between a caller's pre-read and its fence
+    (the stale-first_ext race), and a busy fence never samples at all."""
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk)
+    docs, _ = _docs(4, seed=23)
+    store.add(docs)
+    jobs = store.claim("w0", limit=2)
+    jids = [j.job_id for j in jobs]
+    store.mark_embedded("w0", jids)
+    seen = []
+
+    def horizon():
+        assert store._lock._is_owned()         # atomic with the fence
+        assert store._intent is None           # sampled after the busy check
+        seen.append(1)
+        return 42
+
+    i0 = store.record_intent("w0", jids, horizon=horizon)
+    assert store.open_intent().first_ext == 42 and seen == [1]
+
+    more = store.claim("w1", limit=2)
+    store.mark_embedded("w1", [j.job_id for j in more])
+
+    def poisoned():
+        raise AssertionError("horizon sampled despite a busy fence")
+
+    with pytest.raises(IntentBusy):
+        store.record_intent("w1", [j.job_id for j in more], horizon=poisoned)
+    store.ack_intent(i0, [42, 43])
+
+    # the sink protocol (an object with next_external_id) is accepted too
+    class Sink:
+        next_external_id = 7
+
+    i1 = store.record_intent("w1", [j.job_id for j in more], horizon=Sink())
+    assert store.open_intent().first_ext == 7
+    store.ack_intent(i1, [7, 8])
+    store.close()
+
+
+def test_record_intent_refreshes_job_leases(tmp_path):
+    """record_intent renews the jobs' leases alongside the intent's, so
+    next_ready_at() reports the intent window, not the stale embed-stage
+    lease — and the refresh survives journal replay."""
+    clk = FakeClock()
+    path = tmp_path / "j.jsonl"
+    store = _store(path, clk, lease_s=10.0)
+    docs, _ = _docs(2, seed=22)
+    store.add(docs)
+    jobs = store.claim("w0", limit=2)
+    store.mark_embedded("w0", [j.job_id for j in jobs])
+    clk.advance(6.0)                           # embed lease has 4s left
+    store.record_intent("w0", [j.job_id for j in jobs], horizon=0)
+    want = clk() + 10.0
+    assert all(store.jobs[j.job_id].lease_until == want for j in jobs)
+    assert store.next_ready_at() == want       # not the stale embed lease
+
+    re = _store(path, clk, lease_s=10.0)       # replay mirrors the refresh
+    assert all(re.jobs[j.job_id].lease_until == want for j in jobs)
+    assert re.next_ready_at() == want
+    store.close()
+    re.close()
 
 
 def test_lease_expiry_reclaim_and_lease_lost(tmp_path):
@@ -586,6 +681,166 @@ def test_runtime_sink_coalesces_with_admission_queue(tmp_path):
     cases = _cases(ref_ds, tenanted=False)
     _assert_equivalent(_canon_answers(eng, cases, ext2doc),
                        _canon_answers(ref, cases, ref_table))
+    eng.close()
+    store.close()
+
+
+class _StubRuntime:
+    """Runtime double: the first submit swallows its op (an unresolved
+    ticket — the op is stuck inside the runtime); later submits execute
+    immediately against the real engine. ``land_lost`` applies the stuck op
+    after the fact — the late-landing execution the sink/worker pair must
+    survive without duplicating the batch."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.lost = None
+        self.deadlines = []
+
+    def _apply(self, req):
+        with self.engine.ingest_group():
+            ids = self.engine.insert(req["points"], req["keywords"],
+                                     attrs=req.get("attrs"),
+                                     tenant=req.get("tenant"))
+        return [int(i) for i in ids]
+
+    def submit(self, request, deadline_s=None):
+        from repro.serve.runtime import RuntimeResponse, Ticket
+        self.deadlines.append(deadline_s)
+        t = Ticket(request, None)
+        if self.lost is None:
+            self.lost = request                # black hole: never resolves
+            return t
+        t._resolve(RuntimeResponse(op="insert", status="ok",
+                                   payload={"ids": self._apply(request)}))
+        return t
+
+    def land_lost(self):
+        self._apply(self.lost)
+
+
+def test_runtime_sink_terminal_status_contract():
+    """insert() submits with an admission deadline and waits the ticket to a
+    terminal status, then classifies it: ok returns ids;
+    timeout/rejected/error raise plainly (the op provably never mutated the
+    engine — safe to reconcile immediately); crashed, or a ticket that never
+    resolves, raise SinkIndeterminate (fate unknown — the intent must stay
+    open). Giving up on a still-queued op is no longer possible, which is
+    what made the duplicate-insert race reachable."""
+    from repro.serve.runtime import RuntimeResponse, Ticket
+
+    class OneShot:
+        engine = None
+
+        def __init__(self, resp):
+            self.resp = resp
+            self.deadline = "unset"
+
+        def submit(self, request, deadline_s=None):
+            self.deadline = deadline_s
+            t = Ticket(request, None)
+            if self.resp is not None:
+                t._resolve(self.resp)
+            return t
+
+    pts = np.zeros((1, D_OUT), np.float32)
+    rt = OneShot(RuntimeResponse(op="insert", status="ok",
+                                 payload={"ids": [5]}))
+    assert RuntimeSink(rt, timeout_s=0.4).insert(pts, [[0]], None, None) == [5]
+    assert rt.deadline == pytest.approx(0.4)   # admission deadline attached
+
+    for status in ("timeout", "rejected", "error"):
+        rt = OneShot(RuntimeResponse(op="insert", status=status, error="x"))
+        with pytest.raises(RuntimeError, match=status) as ei:
+            RuntimeSink(rt, timeout_s=0.4).insert(pts, [[0]], None, None)
+        assert type(ei.value) is RuntimeError  # NOT indeterminate
+
+    rt = OneShot(RuntimeResponse(op="insert", status="crashed", error="boom"))
+    with pytest.raises(SinkIndeterminate):
+        RuntimeSink(rt, timeout_s=0.4).insert(pts, [[0]], None, None)
+
+    rt = OneShot(None)                         # ticket never resolves
+    with pytest.raises(SinkIndeterminate):
+        RuntimeSink(rt, timeout_s=0.01, grace_s=0.02).insert(
+            pts, [[0]], None, None)
+
+
+def test_lost_insert_op_cannot_duplicate_batch(tmp_path):
+    """The duplicate-insert race, end to end: the runtime holds an insert op
+    past the sink's patience, the op lands *late*, and the batch must still
+    end up in the corpus exactly once. The sink raises SinkIndeterminate,
+    the worker leaves the intent open (no early release, so no retry racing
+    the in-flight op), and the expired-lease reconciliation acks the batch
+    from the moved horizon instead of re-inserting it."""
+    docs, _ = _docs(14, seed=27)
+    emb = _embedder()
+    seed_ds, seed_ids, _, _ = _setting(docs, 6, emb)
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk, lease_s=10.0)
+    store.add(docs[6:])
+    eng = _engine(seed_ds)
+    rt = _StubRuntime(eng)
+    sink = RuntimeSink(rt, timeout_s=0.01, grace_s=0.02)
+    w = IngestWorker("w0", store, sink, emb, batch_docs=4, clock=clk)
+
+    assert w.step()                            # batch 1: op swallowed
+    assert w.stats.sink_indeterminate == 1
+    assert rt.deadlines[0] == pytest.approx(0.01)
+    assert store.open_intent() is not None     # intent stays open; jobs are
+    assert store.counts()[INSERTED] == 4       # NOT released for a retry
+
+    rt.land_lost()                             # the stuck op executes late
+    assert not w.step()                        # batch 2 staged; fence live
+    assert w.stats.intent_busy == 1
+    clk.advance(10.1)                          # intent lease expires
+    _drive(w, store, clk)
+    assert w.stats.reconciled_applied == 1     # batch 1 acked, not re-run
+    assert store.counts()[DONE] == 8 and store.counts()[FAILED] == 0
+
+    ext2doc = {i: d for i, d in enumerate(seed_ids)}
+    ext2doc.update(store.ext_map())
+    _assert_corpus_matches(eng, ext2doc, {d["doc_id"]: d for d in docs},
+                           emb, [d["doc_id"] for d in docs])
+    eng.close()
+    store.close()
+
+
+@pytest.mark.parametrize("lands", [True, False])
+def test_indeterminate_final_batch_reconciles_without_new_work(tmp_path,
+                                                               lands):
+    """A SinkIndeterminate on the *last* batch leaves the intent open with
+    nothing left to claim; the worker's idle path must still reconcile it
+    after lease expiry (applied if the stuck op landed late, reverted and
+    retried if it never did) or the store would never drain."""
+    docs, _ = _docs(10, seed=29)
+    emb = _embedder()
+    seed_ds, seed_ids, _, _ = _setting(docs, 6, emb)
+    clk = FakeClock()
+    store = _store(tmp_path / "j.jsonl", clk, lease_s=10.0)
+    store.add(docs[6:])
+    eng = _engine(seed_ds)
+    rt = _StubRuntime(eng)
+    w = IngestWorker("w0", store,
+                     RuntimeSink(rt, timeout_s=0.01, grace_s=0.02),
+                     emb, batch_docs=4, clock=clk)
+
+    assert w.step()                            # the only batch: op swallowed
+    assert w.stats.sink_indeterminate == 1
+    assert not w.step()                        # nothing claimable, fence live
+    if lands:
+        rt.land_lost()
+    clk.advance(10.1)                          # intent lease expires
+    _drive(w, store, clk)
+    assert store.counts()[DONE] == 4 and store.counts()[FAILED] == 0
+    if lands:
+        assert w.stats.reconciled_applied == 1
+    else:
+        assert w.stats.reconciled_reverted == 1 and store.stats.retries == 4
+
+    ext2doc = {i: d for i, d in enumerate(seed_ids)}
+    ext2doc.update(store.ext_map())
+    _assert_corpus_matches(eng, ext2doc, {d["doc_id"]: d for d in docs},
+                           emb, [d["doc_id"] for d in docs])
     eng.close()
     store.close()
 
